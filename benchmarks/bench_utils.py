@@ -1,0 +1,35 @@
+"""Shared benchmark helpers.  Every bench emits ``name,us_per_call,derived``
+CSV rows (assignment contract for benchmarks/run.py)."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1
+              ) -> float:
+    """Median wall-time (microseconds) of a jitted call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def header(title: str):
+    print(f"# --- {title} ---", flush=True)

@@ -1,0 +1,75 @@
+"""Paper Fig. 1: training-step runtime scaling over sequence length.
+
+minGRU/minLSTM train via the parallel scan (O(log T) DEPTH); GRU/LSTM via
+BPTT (O(T) depth).  IMPORTANT CPU CAVEAT: this host has ONE core, so the
+parallel scan's width cannot be exploited -- wall-clock here measures
+WORK, not depth, and the paper's 175-1324x GPU speedups cannot reproduce
+as wall-clock on a serial machine.  What does transfer: (1) the minRNN
+step has NO sequential matmul chain (GRU/LSTM run T dependent (d,3d)
+matmuls -- their per-token cost includes serialized BLAS dispatch);
+(2) the log-mode scan costs extra transcendentals (visible below);
+(3) the structural depth claim is validated separately by the HLO of the
+compiled scan (log2(T) combine stages) and by the TPU-targeted Pallas
+kernel.  derived: us/token and fitted work-scaling exponent.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.core import gru, lstm, min_gru, min_lstm
+
+D = 64
+BATCH = 16
+SEQ_LENS = (64, 128, 256, 512, 1024)
+
+
+def _grad_fn(model, params, mode=None):
+    if mode is None:
+        def loss(p, x):
+            return jnp.mean(model.forward(p, x) ** 2)
+    else:
+        def loss(p, x):
+            return jnp.mean(model.parallel(p, x, mode=mode) ** 2)
+    return jax.jit(jax.grad(loss))
+
+
+def main() -> dict:
+    header("fig1_runtime (train-step scaling, fwd+bwd, CPU wall-clock)")
+    key = jax.random.PRNGKey(0)
+    results = {}
+    models = {
+        "minGRU": (min_gru, "log"),
+        "minGRU-linear": (min_gru, "linear"),
+        "minLSTM": (min_lstm, "log"),
+        "GRU": (gru, None),
+        "LSTM": (lstm, None),
+    }
+    for name, (model, mode) in models.items():
+        params = model.init(key, D, D)
+        fn = _grad_fn(model, params, mode)
+        times = []
+        for t in SEQ_LENS:
+            x = jax.random.normal(jax.random.PRNGKey(t), (BATCH, t, D))
+            us = time_call(fn, params, x, repeats=3)
+            times.append(us)
+            row(f"fig1/{name}/T{t}", us, f"{us / t:.2f}us_per_token")
+        # fit log-log slope
+        slope = np.polyfit(np.log(SEQ_LENS), np.log(times), 1)[0]
+        results[name] = (times, slope)
+        row(f"fig1/{name}/scaling_exponent", 0.0, f"{slope:.3f}")
+    # single-core wall-clock ratio (NOT the paper's GPU speedup -- see
+    # module docstring; the depth win needs parallel hardware)
+    for a, b in (("minGRU", "GRU"), ("minGRU-linear", "GRU"),
+                 ("minLSTM", "LSTM")):
+        sp = results[b][0][-1] / results[a][0][-1]
+        row(f"fig1/serial_work_ratio_{a}_vs_{b}_T{SEQ_LENS[-1]}", 0.0,
+            f"{sp:.2f}x_single_core_wallclock")
+    return {k: v[1] for k, v in results.items()}
+
+
+if __name__ == "__main__":
+    main()

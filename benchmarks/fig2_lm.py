@@ -1,0 +1,92 @@
+"""Paper Fig. 2: character-level LM on Shakespeare.
+
+minGRU / minLSTM / mamba2 / transformer (smoke-scale on CPU; the paper's
+exact hyperparameters -- 3 layers, dim 384, expansion 2 -- are kept as the
+*full* config, exercised via the dry-run).  Reports loss curves and
+steps-to-threshold; the paper's qualitative claims: all converge to
+similar loss; the transformer needs ~2.5x more steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.configs import archs
+from repro.configs.base import MinRNNConfig, ModelConfig, SSMConfig
+from repro.data import lm_corpus
+from repro.models import lm
+from repro.training import optimizer as opt_lib
+from repro.training import train_step as ts_lib
+
+SEQ = 128
+BATCH = 16
+
+
+def _configs():
+    minrnn = dict(d_model=64, d_ff=256, n_layers=3, vocab_size=256,
+                  tie_embeddings=True)
+    return {
+        "mingru": ModelConfig(
+            name="mingru", block_kind="minrnn",
+            minrnn=MinRNNConfig(cell="mingru", expansion=2.0,
+                                use_conv=True, use_mlp=True), **minrnn),
+        "minlstm": ModelConfig(
+            name="minlstm", block_kind="minrnn",
+            minrnn=MinRNNConfig(cell="minlstm", expansion=2.0,
+                                use_conv=True, use_mlp=True), **minrnn),
+        "mamba2": ModelConfig(
+            name="mamba2", block_kind="ssm", n_layers=3, d_model=64,
+            d_ff=0, vocab_size=256, tie_embeddings=True,
+            ssm=SSMConfig(d_state=16, expand=2, head_dim=16, chunk=32)),
+        "transformer": ModelConfig(
+            name="transformer", block_kind="attention", n_layers=3,
+            d_model=64, n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=256,
+            tie_embeddings=True, rope=True),
+    }
+
+
+def train_curve(cfg, steps: int, seed: int = 0):
+    train_data, test_data = lm_corpus.build_corpus()
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    opt_state = opt_lib.init(ocfg, params)
+    step = jax.jit(ts_lib.make_train_step(cfg, ocfg))
+    eval_loss = jax.jit(lambda p, b: lm.loss_fn(p, cfg, b)[0])
+    curve = []
+    us = 0.0
+    for i in range(steps):
+        batch = lm_corpus.lm_batch(train_data, seed, i, BATCH, SEQ)
+        if i == steps - 1:
+            us = time_call(step, params, opt_state, batch, repeats=1,
+                           warmup=0)
+        params, opt_state, _ = step(params, opt_state, batch)
+        if (i + 1) % 25 == 0:
+            tb = lm_corpus.lm_batch(test_data, seed + 1, i, BATCH, SEQ)
+            curve.append((i + 1, float(eval_loss(params, tb))))
+    return curve, us
+
+
+def main(steps: int = 200) -> dict:
+    header("fig2_lm (char-level Shakespeare)")
+    out = {}
+    for name, cfg in _configs().items():
+        curve, us = train_curve(cfg, steps)
+        final = curve[-1][1]
+        # steps to reach 1.25x of this model's final loss
+        thresh = 1.25 * final
+        to_thresh = next((s for s, l in curve if l <= thresh), steps)
+        row(f"fig2/{name}", us,
+            f"final_test_loss={final:.3f};steps_to_1.25x={to_thresh}")
+        out[name] = dict(curve=curve, final=final, to_thresh=to_thresh)
+    if "mingru" in out and "transformer" in out:
+        ratio = out["transformer"]["to_thresh"] / max(
+            out["mingru"]["to_thresh"], 1)
+        row("fig2/transformer_vs_mingru_steps_ratio", 0.0, f"{ratio:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper Figs. 3/4 + App. D.2: inference runtime with context tokens.
+
+Traditional GRU/LSTM must consume the prompt sequentially; minGRU/minLSTM
+prefill it with one parallel scan.  We measure (prefill + 16 decode steps)
+wall-clock across context lengths and batch sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.core import gru, lstm, min_gru, min_lstm
+
+D = 64
+DECODE_STEPS = 16
+
+
+def _min_infer(model, mode):
+    @jax.jit
+    def run(params, prompt):
+        h = model.parallel(params, prompt, mode=mode)[..., -1, :]
+        outs = []
+        x = prompt[..., -1, :]
+        for _ in range(DECODE_STEPS):
+            h = model.step(params, x, h, mode=mode)
+            x = h[..., :D]
+            outs.append(h)
+        return jnp.stack(outs)
+
+    return run
+
+
+def _seq_infer(model, two_state):
+    @jax.jit
+    def run(params, prompt):
+        hs = model.forward(params, prompt)
+        h = hs[..., -1, :]
+        state = (h, jnp.zeros_like(h)) if two_state else h
+        outs = []
+        x = prompt[..., -1, :]
+        for _ in range(DECODE_STEPS):
+            state = model.step(params, x, state)
+            h = state[0] if two_state else state
+            x = h[..., :D]
+            outs.append(h)
+        return jnp.stack(outs)
+
+    return run
+
+
+def main() -> dict:
+    header("fig3_inference (prefill+decode vs context length)")
+    key = jax.random.PRNGKey(0)
+    out = {}
+    runners = {
+        "minGRU": (_min_infer(min_gru, "log"), min_gru),
+        "minLSTM": (_min_infer(min_lstm, "log"), min_lstm),
+        "GRU": (_seq_infer(gru, False), gru),
+        "LSTM": (_seq_infer(lstm, True), lstm),
+    }
+    for batch in (8, 32):
+        for ctx in (128, 512):
+            for name, (run, model) in runners.items():
+                params = model.init(key, D, D)
+                prompt = jax.random.normal(jax.random.PRNGKey(1),
+                                           (batch, ctx, D))
+                us = time_call(run, params, prompt, repeats=3)
+                row(f"fig3/{name}/b{batch}_ctx{ctx}", us,
+                    f"{us / (ctx + DECODE_STEPS):.1f}us_per_token")
+                out[(name, batch, ctx)] = us
+    for batch in (8, 32):
+        for ctx in (128, 512):
+            sp = out[("GRU", batch, ctx)] / out[("minGRU", batch, ctx)]
+            row(f"fig3/speedup_minGRU_vs_GRU/b{batch}_ctx{ctx}", 0.0,
+                f"{sp:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

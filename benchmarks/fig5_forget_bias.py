@@ -1,0 +1,81 @@
+"""Paper Fig. 5: forget-gate bias initialization improves minLSTM training.
+
+Trains minLSTM on selective copy with forget-gate bias init 0 / 2 / 4 and
+reports the loss after a fixed budget -- higher bias -> earlier retention
+-> faster convergence, per the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row
+from repro.core import min_lstm, nn
+from repro.data import synthetic
+
+
+def _recall_batch(seed, step, batch, seq, vocab):
+    """Retention probe: output the FIRST token of the sequence at the end
+    (pure long-range memory -- exactly what the forget gate controls)."""
+    rng = np.random.default_rng(np.random.PCG64(seed * 7 + step))
+    tokens = rng.integers(1, vocab, size=(batch, seq)).astype(np.int32)
+    labels = np.full((batch, seq), -1, np.int32)
+    labels[:, -1] = tokens[:, 0]
+    return tokens, labels
+
+
+def run(forget_bias: float, steps: int, seed: int = 0):
+    d, dh, vocab, seq = 32, 64, 16, 10
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "embed": nn.normal_init(k1, (vocab, d), 0.02),
+        "cell": min_lstm.init(k2, d, dh, forget_bias=forget_bias),
+        "head": nn.dense_init(k3, dh, vocab),
+    }
+
+    def loss_fn(p, tokens, labels):
+        x = p["embed"][tokens]
+        h = min_lstm.parallel(p["cell"], x, mode="log")
+        logits = nn.dense_apply(p["head"], h).astype(jnp.float32)
+        mask = labels >= 0
+        logp = jax.nn.log_softmax(logits)
+        gold = jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                                   axis=-1)[..., 0]
+        return -jnp.sum(gold * mask) / jnp.maximum(mask.sum(), 1)
+
+    from repro.training import optimizer as opt_lib
+    ocfg = opt_lib.AdamWConfig(lr=1e-2, warmup_steps=10, total_steps=steps,
+                               weight_decay=0.0)
+    opt_state = opt_lib.init(ocfg, params)
+
+    @jax.jit
+    def step(p, o, tokens, labels):
+        l, g = jax.value_and_grad(loss_fn)(p, tokens, labels)
+        p, o, _ = opt_lib.apply(ocfg, o, p, g)
+        return p, o, l
+
+    losses = []
+    for i in range(steps):
+        tokens, labels = _recall_batch(seed, i, 64, seq, 16)
+        params, opt_state, l = step(params, opt_state,
+                                    jnp.asarray(tokens),
+                                    jnp.asarray(labels))
+        losses.append(float(l))
+    return float(np.mean(losses[-10:]))
+
+
+def main(steps: int = 400) -> dict:
+    header("fig5_forget_bias (minLSTM retention init)")
+    out = {}
+    for bias in (0.0, 2.0, 4.0):
+        final = run(bias, steps)
+        row(f"fig5/forget_bias_{bias:g}", 0.0, f"loss_after_budget={final:.4f}")
+        out[bias] = final
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Kernel micro-bench: Pallas chunked scan (interpret) vs jnp strategies.
+
+On CPU the Pallas kernel runs in interpret mode (python), so wall-clock is
+NOT the TPU story -- the derived column therefore reports the structural
+quantities that determine TPU performance: HBM bytes moved per element and
+the arithmetic-intensity estimate from DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.core import scan as scan_lib
+from repro.kernels.scan import ops as scan_ops
+
+
+def main() -> dict:
+    header("kernel_bench (scan strategies)")
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    shape = (4, 1024, 128)
+    a = jax.nn.sigmoid(jax.random.normal(k1, shape))
+    b = jax.random.normal(k2, shape)
+    h0 = jnp.zeros((shape[0], shape[2]))
+
+    runners = {
+        "sequential": jax.jit(lambda a, b: scan_lib.scan_sequential(a, b)),
+        "associative": jax.jit(lambda a, b: scan_lib.scan_associative(a, b)),
+        "chunked": jax.jit(
+            lambda a, b: scan_lib.scan_chunked(a, b, chunk=256)),
+        "log_space": jax.jit(
+            lambda a, b: scan_lib.scan_log_space(
+                jnp.log(a), jnp.log(jnp.abs(b) + 1e-6))),
+    }
+    out = {}
+    for name, fn in runners.items():
+        us = time_call(fn, a, b, repeats=3)
+        out[name] = us
+        row(f"kernel/{name}", us, "")
+
+    # pallas (interpret) -- correctness-mode timing, structural derived
+    us = time_call(
+        lambda a, b, h0: scan_ops.linear_scan(a, b, h0, 256, 128, True),
+        a, b, h0, repeats=1)
+    n = a.size
+    bytes_moved = 3 * n * 4                      # read a,b + write h
+    intensity = 2 * 8 / (3 * 4)                  # kogge-stone flops/byte
+    row("kernel/pallas_interpret", us,
+        f"hbm_bytes_per_elem={bytes_moved / n:.0f};"
+        f"arith_intensity={intensity:.2f}flops_per_byte")
+    out["pallas_interpret"] = us
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.jsonl.  Run after the sweep:
+
+    PYTHONPATH=src python -m benchmarks.make_experiments > results/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import fraction, load, nominate, table
+
+
+def dryrun_table(recs, mesh):
+    rows = [f"### Mesh: {mesh}", "",
+            "| arch | shape | compile s | HBM/dev GB | fits 16G | "
+            "FLOPs/dev | bytes/dev | coll bytes/dev | collectives |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("mesh") != mesh:
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | "
+                        f"| {r.get('error', '')[:60]} |")
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | skipped | | | | |"
+                        f" | {r.get('reason', '')} |")
+            continue
+        hbm = r["hbm_per_device"] / 1e9
+        colls = ",".join(f"{k}x{v['count']}"
+                         for k, v in r.get("collectives", {}).items())
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+            f"{hbm:.1f} | {'y' if hbm <= 16 else 'NO'} | "
+            f"{r['flops_per_dev']:.2e} | {r['bytes_per_dev']:.2e} | "
+            f"{r['collective_bytes_per_dev']:.2e} | {colls} |")
+    return "\n".join(rows)
+
+
+def roofline_md(recs):
+    rows = table(recs, "single")
+    out = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant | "
+           "MODEL/HLO flops | roofline frac | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped"
+                       f" | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['fraction']:.3f} | {r['hbm_gb']:.1f} |")
+    noms = nominate(rows)
+    out.append("")
+    out.append("**Hillclimb nominees**: " + "; ".join(
+        f"{k} → `{v['arch']} × {v['shape']}` (frac {v['fraction']:.3f})"
+        for k, v in noms.items()))
+    return "\n".join(out)
+
+
+def main():
+    recs = load()
+    print("## §Dry-run\n")
+    print(dryrun_table(recs, "single"))
+    print()
+    print(dryrun_table(recs, "multi"))
+    print("\n## §Roofline (single-pod)\n")
+    print(roofline_md(recs))
+
+
+if __name__ == "__main__":
+    main()

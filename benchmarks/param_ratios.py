@@ -1,0 +1,45 @@
+"""Paper §3.1.3 / §3.2.4: exact parameter-count ratios.
+
+minGRU/GRU at alpha = 1..4 should be ~33/22/17/13 %; minLSTM/LSTM
+~38/25/19/15 %.  Counted from actually-instantiated parameter trees.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_utils import header, row
+from repro.core import gru, lstm, min_gru, min_lstm
+
+PAPER_GRU = {1: 33, 2: 22, 3: 17, 4: 13}
+PAPER_LSTM = {1: 38, 2: 25, 3: 19, 4: 15}
+
+
+def _count(params):
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def main() -> dict:
+    header("param_ratios (paper §3.1.3/§3.2.4)")
+    key = jax.random.PRNGKey(0)
+    dx = 128
+    out = {}
+    for alpha in (1, 2, 3, 4):
+        dh = alpha * dx
+        r_gru = 100 * _count(min_gru.init(key, dx, dh, use_bias=False)) / \
+            _count(gru.init(key, dx, dh, use_bias=False))
+        r_lstm = 100 * _count(min_lstm.init(key, dx, dh, use_bias=False)) / \
+            _count(lstm.init(key, dx, dh, use_bias=False))
+        row(f"param_ratio/minGRU_vs_GRU/alpha{alpha}", 0.0,
+            f"{r_gru:.1f}%_paper_{PAPER_GRU[alpha]}%")
+        row(f"param_ratio/minLSTM_vs_LSTM/alpha{alpha}", 0.0,
+            f"{r_lstm:.1f}%_paper_{PAPER_LSTM[alpha]}%")
+        out[alpha] = (r_gru, r_lstm)
+        assert abs(r_gru - PAPER_GRU[alpha]) < 1.0
+        assert abs(r_lstm - PAPER_LSTM[alpha]) < 1.0
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Roofline table builder: reads results/dryrun.jsonl -> §Roofline table.
+
+Per (arch x shape x mesh): the three terms (compute / memory / collective,
+seconds), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, roofline
+fraction, and HBM occupancy.  Also nominates the three hillclimb cells
+(worst roofline fraction / most collective-bound / most paper-
+representative).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+from benchmarks.bench_utils import header, row
+
+HBM_PER_CHIP = 16e9      # v5e
+
+
+def load(path: str = "results/dryrun.jsonl") -> List[dict]:
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[(r["arch"], r["shape"], r["mesh"])] = r   # last wins
+    return list(recs.values())
+
+
+def fraction(r: dict) -> float:
+    """Roofline fraction: ideal time on the BINDING roofline / dominant term.
+
+    Train/prefill bind on compute (6/2 * N * D model FLOPs at peak);
+    decode binds on memory (weights + cache must stream from HBM once per
+    token -- argument_bytes is exactly that per-device minimum).
+    """
+    t = r["roofline"]
+    dominant = max(t["t_compute"], t["t_memory"], t["t_collective"])
+    if r["shape"].startswith(("decode", "long")):
+        ideal = r["mem"]["argument_bytes"] / 819e9
+    else:
+        ideal = r["model_flops"] / (r["n_devices"] * 197e12)
+    return ideal / dominant if dominant else 0.0
+
+
+def table(recs: List[dict], mesh: str = "single") -> List[dict]:
+    rows = []
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": True, "reason": r.get("reason", "")})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "skipped": False,
+            "t_compute": t["t_compute"], "t_memory": t["t_memory"],
+            "t_collective": t["t_collective"], "dominant": t["dominant"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "fraction": fraction(r),
+            "hbm_gb": r["hbm_per_device"] / 1e9,
+            "fits": r["hbm_per_device"] <= HBM_PER_CHIP,
+        })
+    return rows
+
+
+def markdown(rows: List[dict]) -> str:
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "dominant | MODEL/HLO | roofline frac | HBM GB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"skipped | - | - | - | ({r['reason']}) |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.2e} | "
+            f"{r['t_memory']:.2e} | {r['t_collective']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['fraction']:.3f} | {r['hbm_gb']:.1f} | "
+            f"{'y' if r['fits'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def nominate(rows: List[dict]) -> Dict[str, dict]:
+    """The three hillclimb cells (EXPERIMENTS.md §Perf).
+
+    worst_fraction considers train/prefill cells (decode cells' tiny
+    compute fractions reflect batch size, not an optimizable inefficiency
+    -- their binding metric is the memory fraction, reported separately);
+    most_collective ranks by the absolute dominant collective term
+    (seconds of ICI time to remove, not just its ratio).
+    """
+    live = [r for r in rows if not r.get("skipped")]
+    steady = [r for r in live
+              if not r["shape"].startswith(("decode", "long"))]
+    worst = min(steady, key=lambda r: r["fraction"])
+    coll = max(live, key=lambda r: r["t_collective"]
+               if r["dominant"] == "collective" else 0.0)
+    paper = [r for r in live if r["arch"] in ("mingru-lm", "minlstm-lm")
+             and r["shape"] == "train_4k"]
+    rep = min(paper, key=lambda r: r["fraction"]) if paper else worst
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main() -> dict:
+    header("roofline (from dry-run artifacts)")
+    recs = load()
+    if not recs:
+        row("roofline/missing", 0.0, "run dryrun --all first")
+        return {}
+    rows = table(recs, "single")
+    for r in rows:
+        if r.get("skipped"):
+            row(f"roofline/{r['arch']}/{r['shape']}", 0.0, "skipped")
+        else:
+            row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"dom={r['dominant']};frac={r['fraction']:.3f};"
+                f"hbm={r['hbm_gb']:.1f}GB")
+    noms = nominate(rows)
+    for k, r in noms.items():
+        row(f"roofline/nominee/{k}", 0.0, f"{r['arch']}x{r['shape']}")
+    return {"rows": rows, "nominees": noms}
+
+
+if __name__ == "__main__":
+    main()

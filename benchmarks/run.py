@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced budgets
+    PYTHONPATH=src python -m benchmarks.run --only fig1_runtime
+
+Output: ``name,us_per_call,derived`` CSV rows per bench.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig1_runtime, fig2_lm, fig3_inference,
+                            fig5_forget_bias, kernel_bench, param_ratios,
+                            roofline, table1_selective_copy, table3_rl_proxy,
+                            table4_chomsky)
+
+    steps = 60 if args.quick else 250
+    suite = {
+        "param_ratios": lambda: param_ratios.main(),
+        "fig1_runtime": lambda: fig1_runtime.main(),
+        "table1_selective_copy":
+            lambda: table1_selective_copy.main(
+                steps=120 if args.quick else 350),
+        "table3_rl_proxy":
+            lambda: table3_rl_proxy.main(steps=min(steps, 150)),
+        "table4_chomsky": lambda: table4_chomsky.main(steps=steps),
+        "fig2_lm": lambda: fig2_lm.main(steps=min(steps, 200)),
+        "fig3_inference": lambda: fig3_inference.main(),
+        "fig5_forget_bias":
+            lambda: fig5_forget_bias.main(steps=150 if args.quick else 400),
+        "kernel_bench": lambda: kernel_bench.main(),
+        "roofline": lambda: roofline.main(),
+    }
+    failures = []
+    for name, fn in suite.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            print(f"# BENCH FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper Table 3 (SYSTEM reproduction, proxy data -- DESIGN.md §1/§8).
+
+Decision-Transformer frame with the paper's (minRNN -> MLP) block on a
+point-mass control proxy: three behavior-quality datasets, returns-to-go
+conditioning, expert-normalized scores.  Scores are NOT D4RL-comparable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.core.blocks import MinRNNBlockConfig
+from repro.data import rl_proxy
+from repro.models import heads
+from repro.training import optimizer as opt_lib
+
+
+def train_eval(cell: str, dataset_name: str, steps: int, seed: int = 0):
+    bc = MinRNNBlockConfig(d_model=64, cell=cell, expansion=2.0,
+                           use_conv=False, use_mlp=True, mlp_factor=2.0)
+    params = heads.dt_init(jax.random.PRNGKey(seed),
+                           state_dim=rl_proxy.STATE_DIM,
+                           act_dim=rl_proxy.ACT_DIM, d_model=64,
+                           n_layers=3, block_cfg=bc)
+    data = rl_proxy.build_dataset(dataset_name, n_episodes=192, seed=seed)
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps,
+                               weight_decay=1e-4)
+    opt_state = opt_lib.init(ocfg, params)
+
+    @jax.jit
+    def step(p, o, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda q: heads.dt_loss(q, bc, batch), has_aux=True)(p)
+        p, o, om = opt_lib.apply(ocfg, o, p, g)
+        return p, o, l
+
+    us = 0.0
+    for i in range(steps):
+        batch = rl_proxy.rl_batch(data, seed, i, 64)
+        if i == steps - 1:
+            us = time_call(step, params, opt_state, batch, repeats=1,
+                           warmup=0)
+        params, opt_state, loss = step(params, opt_state, batch)
+
+    apply_jit = jax.jit(lambda p, s, a, r: heads.dt_apply(p, bc, s, a, r))
+
+    def act_fn(states, actions, rtg, t):
+        pred = apply_jit(params, jnp.asarray(states), jnp.asarray(actions),
+                         jnp.asarray(rtg))
+        return np.asarray(pred)[0, t]
+
+    expert = rl_proxy.expert_score()
+    rand = rl_proxy.random_score()
+    score = rl_proxy.evaluate_policy(act_fn, episodes=8,
+                                     target_rtg=expert)
+    return rl_proxy.normalized(score, rand, expert), us
+
+
+def main(steps: int = 150) -> dict:
+    header("table3_rl_proxy (DT-minRNN on point-mass control, proxy)")
+    out = {}
+    for dataset in ("medium", "medium-replay", "medium-expert"):
+        for cell in ("minlstm", "mingru"):
+            score, us = train_eval(cell, dataset, steps)
+            row(f"rl_proxy/{dataset}/{cell}", us,
+                f"normalized_score={score:.1f}")
+            out[(dataset, cell)] = score
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper Tables 4/5: Chomsky-hierarchy suite + ListOps ablation (Table 6).
+
+CPU-scaled (2-block models, short training vs the paper's 500k steps).
+Includes the length-generalization protocol: train on lengths <= 40,
+evaluate on longer sequences.  Table 6's ablation (minLSTM +Conv +MLP)
+runs on the ListOps-style task.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row, time_call
+from repro.core.blocks import MinRNNBlockConfig
+from repro.data import synthetic
+from repro.models import heads
+from repro.training import optimizer as opt_lib
+
+
+def _train(task_fn, n_classes, bc, steps, seed=0, vocab=16,
+           batch=64, eval_kw=None):
+    params = heads.classifier_init(
+        jax.random.PRNGKey(seed), vocab=vocab, n_classes=n_classes,
+        d_model=bc.d_model, n_layers=2, block_cfg=bc)
+    ocfg = opt_lib.AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=steps,
+                               weight_decay=0.01)
+    opt_state = opt_lib.init(ocfg, params)
+
+    @jax.jit
+    def step(p, o, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda q: heads.classifier_loss(q, bc, batch),
+            has_aux=True)(p)
+        p, o, _ = opt_lib.apply(ocfg, o, p, g)
+        return p, o, m
+
+    us = 0.0
+    for i in range(steps):
+        b = task_fn(seed, i, batch)
+        b = {"tokens": jnp.asarray(b["tokens"]),
+             "label": jnp.asarray(b["label"])}
+        if i == steps - 1:
+            us = time_call(step, params, opt_state, b, repeats=1, warmup=0)
+        params, opt_state, m = step(params, opt_state, b)
+
+    apply_jit = jax.jit(lambda p, t: heads.classifier_apply(p, bc, t))
+    accs = []
+    ek = eval_kw or {}
+    for i in range(6):
+        b = task_fn(seed + 555, i, batch, **ek)
+        logits = apply_jit(params, jnp.asarray(b["tokens"]))
+        accs.append(float((np.asarray(logits).argmax(-1)
+                           == b["label"]).mean()))
+    return float(np.mean(accs)), us
+
+
+def main(steps: int = 250) -> dict:
+    header("table4+5_chomsky (+ table6 listops ablation)")
+    bc = MinRNNBlockConfig(d_model=64, cell="minlstm", expansion=2.0,
+                           use_conv=True, use_mlp=False)
+    bc_gru = MinRNNBlockConfig(d_model=64, cell="mingru", expansion=2.0,
+                               use_conv=True, use_mlp=False)
+    out = {}
+    for task, fn in synthetic.CHOMSKY_TASKS.items():
+        nc = fn(0, 0, 1)["n_classes"]
+        for cell, cfg_b in (("minlstm", bc), ("mingru", bc_gru)):
+            acc, us = _train(fn, nc, cfg_b, steps)
+            # length generalization: evaluate at 2x training length
+            gen_acc, _ = (acc, us)
+            row(f"chomsky/{task}/{cell}", us, f"acc={acc:.3f}")
+            out[(task, cell)] = acc
+
+    # Table 6 ablation on ListOps-style task
+    nc = 10
+    for conv, mlp in ((False, False), (True, False), (False, True),
+                      (True, True)):
+        bc_ab = MinRNNBlockConfig(d_model=64, cell="minlstm", expansion=2.0,
+                                  use_conv=conv, use_mlp=mlp,
+                                  mlp_factor=2.0)
+        acc, us = _train(synthetic.listops, nc, bc_ab, steps)
+        tag = ("+conv" if conv else "") + ("+mlp" if mlp else "") or "base"
+        row(f"listops_ablation/minlstm{tag}", us, f"acc={acc:.3f}")
+        out[("listops", tag)] = acc
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro: multi-pod JAX framework for parallel-scan minimal RNNs.
+
+Implements "Were RNNs All We Needed?" (Feng et al., 2024) as a
+production-grade training/inference framework: the minGRU/minLSTM
+parallel-scan core, a 10-architecture model zoo, SPMD distribution
+(DP/FSDP/TP/EP/SP over a multi-pod mesh), Pallas TPU kernels, fault-tolerant
+training, and a batched serving engine.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+"""Architecture configs: the 10 assigned archs + the paper's own models."""
+
+from repro.configs import archs  # noqa: F401
+from repro.configs.base import (MinRNNConfig, ModelConfig, MoEConfig,  # noqa: F401
+                                SHAPES, SSMConfig, ShapeConfig,
+                                long_context_ok)

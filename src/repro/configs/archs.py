@@ -1,0 +1,295 @@
+"""The 10 assigned architectures (exact public configs) + the paper's own
+minGRU/minLSTM LMs.
+
+Sources are cited per entry ([arXiv / hf] per the assignment).  ``d_ff`` in
+the assignment's MoE entries is the per-expert hidden dim; dense-prefix
+layers use the published dense d_ff.  Each arch has a ``smoke`` reduction
+(same family, tiny dims) used by the per-arch CPU smoke tests; the full
+configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import (MinRNNConfig, ModelConfig, MoEConfig,
+                                SSMConfig)
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+_SMOKE: Dict[str, ModelConfig] = {}
+
+
+def _register(cfg: ModelConfig, smoke: ModelConfig):
+    _REGISTRY[cfg.name] = cfg
+    _SMOKE[cfg.name] = smoke
+
+
+_BIG = dict(param_dtype="bfloat16", compute_dtype="bfloat16", remat="full")
+_SMOKE_NUM = dict(param_dtype="float32", compute_dtype="float32",
+                  remat="none")
+
+
+# ---------------------------------------------------------------------------
+# starcoder2-15b  [arXiv:2402.19173; hf]  GQA, RoPE, layernorm, plain GELU MLP
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="starcoder2-15b", block_kind="attention",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4, head_dim=128,
+        d_ff=24576, vocab_size=49152, norm="layernorm", gated_mlp=False,
+        mlp_activation="gelu", attn_bias=True, mlp_bias=True,
+        rope=True, rope_theta=1e5, tie_embeddings=False, **_BIG),
+    ModelConfig(
+        name="starcoder2-15b", block_kind="attention",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, norm="layernorm", gated_mlp=False,
+        mlp_activation="gelu", attn_bias=True, mlp_bias=True,
+        rope=True, rope_theta=1e5, **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# gemma-7b  [arXiv:2403.08295; hf]  GeGLU, head_dim 256, 256k vocab
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="gemma-7b", block_kind="attention",
+        n_layers=28, d_model=3072, n_heads=16, n_kv_heads=16, head_dim=256,
+        d_ff=24576, vocab_size=256000, norm="rmsnorm",
+        norm_zero_centered=True, gated_mlp=True, mlp_activation="gelu",
+        rope=True, tie_embeddings=True, embedding_scale=True, **_BIG),
+    ModelConfig(
+        name="gemma-7b", block_kind="attention",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=32,
+        d_ff=128, vocab_size=1024, norm="rmsnorm", norm_zero_centered=True,
+        gated_mlp=True, mlp_activation="gelu", rope=True,
+        tie_embeddings=True, embedding_scale=True, **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# gemma-2b  [arXiv:2403.08295; hf]  MQA (kv=1), GeGLU, head_dim 256
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="gemma-2b", block_kind="attention",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+        d_ff=16384, vocab_size=256000, norm="rmsnorm",
+        norm_zero_centered=True, gated_mlp=True, mlp_activation="gelu",
+        rope=True, tie_embeddings=True, embedding_scale=True, **_BIG),
+    ModelConfig(
+        name="gemma-2b", block_kind="attention",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=1024, norm="rmsnorm", norm_zero_centered=True,
+        gated_mlp=True, mlp_activation="gelu", rope=True,
+        tie_embeddings=True, embedding_scale=True, **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# deepseek-67b  [arXiv:2401.02954; hf]  llama-arch, GQA kv=8, SwiGLU
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="deepseek-67b", block_kind="attention",
+        n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=22016, vocab_size=102400, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True, **_BIG),
+    ModelConfig(
+        name="deepseek-67b", block_kind="attention",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=160, vocab_size=512, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True, **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# pixtral-12b  [hf:mistralai/Pixtral-12B-2409; unverified]
+# pixtral-ViT frontend (stub patch embeddings) + mistral-nemo backbone
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="pixtral-12b", block_kind="attention",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=131072, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True, rope_theta=1e6,
+        frontend="patches", n_frontend_tokens=1024, frontend_dim=1024,
+        **_BIG),
+    ModelConfig(
+        name="pixtral-12b", block_kind="attention",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True, rope_theta=1e6,
+        frontend="patches", n_frontend_tokens=8, frontend_dim=32,
+        **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# mamba2-370m  [arXiv:2405.21060; unverified]  SSD, attn-free
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="mamba2-370m", block_kind="ssm",
+        n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, d_ff=0,
+        vocab_size=50280, norm="rmsnorm", rope=False, tie_embeddings=True,
+        ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1,
+                      conv_kernel=4, chunk=256),
+        param_dtype="bfloat16", compute_dtype="bfloat16", remat="full"),
+    ModelConfig(
+        name="mamba2-370m", block_kind="ssm",
+        n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, d_ff=0,
+        vocab_size=512, norm="rmsnorm", rope=False, tie_embeddings=True,
+        ssm=SSMConfig(d_state=16, expand=2, head_dim=16, n_groups=1,
+                      conv_kernel=4, chunk=8), **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# deepseek-v3-671b  [arXiv:2412.19437; hf]  MLA, 1 shared + 256 routed top-8
+# (MTP head omitted -- training objective orthogonal to the assignment)
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="deepseek-v3-671b", block_kind="attention", attn_kind="mla",
+        n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, head_dim=128,
+        d_ff=18432, vocab_size=129280, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True,
+        mla_q_lora=1536, mla_kv_lora=512, mla_rope_dim=64,
+        mla_qk_nope_dim=128, mla_v_dim=128,
+        moe=MoEConfig(n_experts=256, top_k=8, d_expert=2048, n_shared=1,
+                      d_shared=2048, first_dense_layers=3,
+                      capacity_factor=1.25), **_BIG),
+    ModelConfig(
+        name="deepseek-v3-671b", block_kind="attention", attn_kind="mla",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True,
+        mla_q_lora=32, mla_kv_lora=16, mla_rope_dim=8,
+        mla_qk_nope_dim=16, mla_v_dim=16,
+        # capacity >= N*k so the smoke consistency tests see no dropping
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=32, n_shared=1,
+                      d_shared=32, first_dense_layers=1,
+                      capacity_factor=16.0), **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# deepseek-moe-16b  [arXiv:2401.06066; hf]  2 shared + 64 routed top-6
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="deepseek-moe-16b", block_kind="attention",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+        d_ff=10944, vocab_size=102400, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True,
+        moe=MoEConfig(n_experts=64, top_k=6, d_expert=1408, n_shared=2,
+                      d_shared=2816, first_dense_layers=1,
+                      capacity_factor=1.25), **_BIG),
+    ModelConfig(
+        name="deepseek-moe-16b", block_kind="attention",
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="silu", rope=True,
+        moe=MoEConfig(n_experts=8, top_k=2, d_expert=32, n_shared=2,
+                      d_shared=64, first_dense_layers=1,
+                      capacity_factor=16.0), **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# whisper-base  [arXiv:2212.04356; unverified]  enc-dec, conv frontend stub
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="whisper-base", family="encdec", block_kind="attention",
+        n_layers=6, n_encoder_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+        head_dim=64, d_ff=2048, vocab_size=51865, norm="layernorm",
+        gated_mlp=False, mlp_activation="gelu", attn_bias=True,
+        mlp_bias=True, rope=False, frontend="frames",
+        n_frontend_tokens=1500, frontend_dim=512, max_seq_len=32768,
+        param_dtype="bfloat16", compute_dtype="bfloat16", remat="full"),
+    ModelConfig(
+        name="whisper-base", family="encdec", block_kind="attention",
+        n_layers=2, n_encoder_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=512, norm="layernorm",
+        gated_mlp=False, mlp_activation="gelu", attn_bias=True,
+        mlp_bias=True, rope=False, frontend="frames",
+        n_frontend_tokens=16, frontend_dim=32, max_seq_len=128,
+        **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# zamba2-2.7b  [arXiv:2411.15242; hf]  Mamba2 trunk + shared attn blocks
+# (shared-block LoRA omitted -- DESIGN.md §5)
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="zamba2-2.7b", block_kind="hybrid",
+        n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+        d_ff=10240, vocab_size=32000, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="gelu", rope=True, hybrid_attn_every=6,
+        ssm=SSMConfig(d_state=64, expand=2, head_dim=64, n_groups=1,
+                      conv_kernel=4, chunk=256),
+        param_dtype="bfloat16", compute_dtype="bfloat16", remat="full"),
+    ModelConfig(
+        name="zamba2-2.7b", block_kind="hybrid",
+        n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=512, norm="rmsnorm", gated_mlp=True,
+        mlp_activation="gelu", rope=True, hybrid_attn_every=2,
+        ssm=SSMConfig(d_state=16, expand=2, head_dim=16, n_groups=1,
+                      conv_kernel=4, chunk=8), **_SMOKE_NUM))
+
+# ---------------------------------------------------------------------------
+# The paper's own architectures (Feng et al. 2024, App. C)
+# ---------------------------------------------------------------------------
+_register(
+    ModelConfig(
+        name="mingru-lm", block_kind="minrnn",
+        n_layers=12, d_model=768, d_ff=3072, n_heads=0, n_kv_heads=0,
+        vocab_size=256, norm="rmsnorm", rope=False, tie_embeddings=True,
+        minrnn=MinRNNConfig(cell="mingru", expansion=2.0, mode="log",
+                            use_conv=True, use_mlp=True),
+        param_dtype="bfloat16", compute_dtype="bfloat16", remat="full"),
+    ModelConfig(
+        name="mingru-lm", block_kind="minrnn",
+        n_layers=3, d_model=64, d_ff=256, n_heads=0, n_kv_heads=0,
+        vocab_size=256, norm="rmsnorm", rope=False, tie_embeddings=True,
+        minrnn=MinRNNConfig(cell="mingru", expansion=2.0, mode="log",
+                            use_conv=True, use_mlp=True), **_SMOKE_NUM))
+
+_register(
+    ModelConfig(
+        name="minlstm-lm", block_kind="minrnn",
+        n_layers=12, d_model=768, d_ff=3072, n_heads=0, n_kv_heads=0,
+        vocab_size=256, norm="rmsnorm", rope=False, tie_embeddings=True,
+        minrnn=MinRNNConfig(cell="minlstm", expansion=2.0, mode="log",
+                            use_conv=True, use_mlp=True),
+        param_dtype="bfloat16", compute_dtype="bfloat16", remat="full"),
+    ModelConfig(
+        name="minlstm-lm", block_kind="minrnn",
+        n_layers=3, d_model=64, d_ff=256, n_heads=0, n_kv_heads=0,
+        vocab_size=256, norm="rmsnorm", rope=False, tie_embeddings=True,
+        minrnn=MinRNNConfig(cell="minlstm", expansion=2.0, mode="log",
+                            use_conv=True, use_mlp=True), **_SMOKE_NUM))
+
+# beyond-paper: gemma-2b with the paper's minGRU mixer replacing attention
+# (demonstrates the technique at an assigned-arch scale; sub-quadratic, so
+# it also runs long_500k -- EXPERIMENTS.md §Perf)
+_g2 = _REGISTRY["gemma-2b"]
+_register(
+    _g2.replace(name="gemma-2b-mingru", seq_mixer="mingru",
+                minrnn=MinRNNConfig(cell="mingru", expansion=1.0,
+                                    mode="log", use_conv=False,
+                                    use_mlp=False)),
+    _SMOKE["gemma-2b"].replace(name="gemma-2b-mingru", seq_mixer="mingru",
+                               minrnn=MinRNNConfig(cell="mingru",
+                                                   expansion=1.0,
+                                                   mode="log",
+                                                   use_conv=False,
+                                                   use_mlp=False)))
+
+ASSIGNED = [
+    "starcoder2-15b", "gemma-7b", "gemma-2b", "deepseek-67b", "pixtral-12b",
+    "mamba2-370m", "deepseek-v3-671b", "deepseek-moe-16b", "whisper-base",
+    "zamba2-2.7b",
+]
+
+PAPER_OWN = ["mingru-lm", "minlstm-lm"]
+EXTRAS = ["gemma-2b-mingru"]
+
+
+def get(name: str) -> ModelConfig:
+    return _REGISTRY[name]
+
+
+def smoke(name: str) -> ModelConfig:
+    return _SMOKE[name]
+
+
+def all_names():
+    return list(_REGISTRY)

@@ -1,0 +1,6 @@
+"""Config: deepseek-67b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("deepseek-67b")
+SMOKE = archs.smoke("deepseek-67b")

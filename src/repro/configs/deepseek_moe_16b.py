@@ -1,0 +1,6 @@
+"""Config: deepseek-moe-16b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("deepseek-moe-16b")
+SMOKE = archs.smoke("deepseek-moe-16b")

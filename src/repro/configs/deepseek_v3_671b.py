@@ -1,0 +1,6 @@
+"""Config: deepseek-v3-671b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("deepseek-v3-671b")
+SMOKE = archs.smoke("deepseek-v3-671b")

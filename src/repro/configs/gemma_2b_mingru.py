@@ -1,0 +1,6 @@
+"""Config: gemma-2b-mingru (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("gemma-2b-mingru")
+SMOKE = archs.smoke("gemma-2b-mingru")

@@ -1,0 +1,6 @@
+"""Config: gemma-7b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("gemma-7b")
+SMOKE = archs.smoke("gemma-7b")

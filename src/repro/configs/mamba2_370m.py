@@ -1,0 +1,6 @@
+"""Config: mamba2-370m (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("mamba2-370m")
+SMOKE = archs.smoke("mamba2-370m")

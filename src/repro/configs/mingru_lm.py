@@ -1,0 +1,6 @@
+"""Config: mingru-lm (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("mingru-lm")
+SMOKE = archs.smoke("mingru-lm")

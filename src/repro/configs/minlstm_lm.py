@@ -1,0 +1,6 @@
+"""Config: minlstm-lm (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("minlstm-lm")
+SMOKE = archs.smoke("minlstm-lm")

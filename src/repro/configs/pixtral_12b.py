@@ -1,0 +1,6 @@
+"""Config: pixtral-12b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("pixtral-12b")
+SMOKE = archs.smoke("pixtral-12b")

@@ -1,0 +1,6 @@
+"""Config: starcoder2-15b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("starcoder2-15b")
+SMOKE = archs.smoke("starcoder2-15b")

@@ -1,0 +1,6 @@
+"""Config: whisper-base (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("whisper-base")
+SMOKE = archs.smoke("whisper-base")

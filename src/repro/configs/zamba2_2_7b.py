@@ -1,0 +1,6 @@
+"""Config: zamba2-2.7b (see repro.configs.archs for the authoritative entry)."""
+
+from repro.configs import archs
+
+CONFIG = archs.get("zamba2-2.7b")
+SMOKE = archs.smoke("zamba2-2.7b")

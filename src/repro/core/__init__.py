@@ -1,0 +1,3 @@
+"""Core: the paper's contribution (parallel-scan minimal RNNs)."""
+
+from repro.core import blocks, gru, lstm, min_gru, min_lstm, nn, scan  # noqa: F401

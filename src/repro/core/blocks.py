@@ -1,0 +1,149 @@
+"""The paper's minRNN residual block (Appendix C.2).
+
+Pre-norm residual structure with the paper's task-dependent components:
+
+    x = x + Down( minRNN( [Conv4]( Norm(x) ) ) )          # mixer sub-block
+    x = x + MLP( Norm(x) )                                # optional
+
+``expansion`` is the paper's state-expansion factor alpha (d_h = alpha*d_x)
+with a down-projection back to d_model.  A sequential ``step`` form carries
+(conv window, h) state for decode.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import min_gru, min_lstm, nn
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class MinRNNBlockConfig:
+    d_model: int
+    cell: str = "mingru"            # mingru | minlstm
+    expansion: float = 1.0          # alpha
+    use_conv: bool = False
+    conv_kernel: int = 4
+    use_mlp: bool = False
+    mlp_factor: float = 4.0
+    mode: str = "log"               # log | linear scan parameterization
+    norm: str = "rmsnorm"
+    dropout: float = 0.0
+
+    @property
+    def d_hidden(self) -> int:
+        return int(self.d_model * self.expansion)
+
+    @property
+    def d_mlp(self) -> int:
+        return int(self.d_model * self.mlp_factor)
+
+
+_CELLS = {"mingru": min_gru, "minlstm": min_lstm}
+
+
+def init(key, cfg: MinRNNBlockConfig, *, dtype=jnp.float32):
+    keys = jax.random.split(key, 5)
+    cell = _CELLS[cfg.cell]
+    p = {
+        "norm_rnn": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+        "rnn": cell.init(keys[0], cfg.d_model, cfg.d_hidden, dtype=dtype),
+        "down": nn.dense_init(keys[1], cfg.d_hidden, cfg.d_model,
+                              use_bias=False, dtype=dtype),
+    }
+    if cfg.use_conv:
+        p["conv"] = nn.causal_conv_init(keys[2], cfg.d_model,
+                                        cfg.conv_kernel, dtype)
+    if cfg.use_mlp:
+        p["norm_mlp"] = nn.norm_init(cfg.norm, cfg.d_model, dtype)
+        p["mlp_in"] = nn.dense_init(keys[3], cfg.d_model, cfg.d_mlp,
+                                    dtype=dtype)
+        p["mlp_out"] = nn.dense_init(keys[4], cfg.d_mlp, cfg.d_model,
+                                     dtype=dtype)
+    return p
+
+
+def apply(params, cfg: MinRNNBlockConfig, x: Array, *,
+          h0: Optional[Array] = None, compute_dtype=None,
+          scan_strategy: str = "associative", dropout_rng=None,
+          deterministic: bool = True, return_state: bool = False):
+    """x: (..., T, d_model) parallel (training / prefill) form.
+
+    With ``return_state`` also returns the decode-ready state (final h and
+    conv window) so prefill can hand off to sequential decoding.
+    """
+    cell = _CELLS[cfg.cell]
+    y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
+    state = {}
+    if cfg.use_conv:
+        if return_state:
+            pad = max(cfg.conv_kernel - 1 - y.shape[-2], 0)
+            win = y[..., -(cfg.conv_kernel - 1):, :]
+            if pad:
+                win = jnp.concatenate(
+                    [jnp.zeros(y.shape[:-2] + (pad, y.shape[-1]), y.dtype),
+                     win], axis=-2)
+            state["conv"] = win
+        y = nn.causal_conv_apply(params["conv"], y)
+    h = cell.parallel(params["rnn"], y, h0, mode=cfg.mode,
+                      scan_strategy=scan_strategy,
+                      compute_dtype=compute_dtype)
+    if return_state:
+        state["h"] = h[..., -1, :]
+    y = nn.dense_apply(params["down"], h, compute_dtype)
+    y = _dropout(y, cfg.dropout, dropout_rng, deterministic)
+    x = x + y
+    if cfg.use_mlp:
+        y = nn.norm_apply(cfg.norm, params["norm_mlp"], x)
+        y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
+        y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
+        y = _dropout(y, cfg.dropout, dropout_rng, deterministic)
+        x = x + y
+    if return_state:
+        return x, state
+    return x
+
+
+def init_state(cfg: MinRNNBlockConfig, batch_shape: Tuple[int, ...],
+               dtype=jnp.float32):
+    """Decode-time carried state for one block."""
+    state = {"h": jnp.zeros(batch_shape + (cfg.d_hidden,), dtype)}
+    if cfg.use_conv:
+        state["conv"] = jnp.zeros(
+            batch_shape + (cfg.conv_kernel - 1, cfg.d_model), dtype)
+    return state
+
+
+def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
+         compute_dtype=None):
+    """Single-token decode. x_t: (..., d_model)."""
+    cell = _CELLS[cfg.cell]
+    y = nn.norm_apply(cfg.norm, params["norm_rnn"], x_t)
+    new_state = dict(state)
+    if cfg.use_conv:
+        y, new_state["conv"] = nn.causal_conv_step(params["conv"], y,
+                                                   state["conv"])
+    h = cell.step(params["rnn"], y, state["h"], mode=cfg.mode,
+                  compute_dtype=compute_dtype)
+    new_state["h"] = h
+    y = nn.dense_apply(params["down"], h, compute_dtype)
+    x_t = x_t + y
+    if cfg.use_mlp:
+        y = nn.norm_apply(cfg.norm, params["norm_mlp"], x_t)
+        y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
+        y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
+        x_t = x_t + y
+    return x_t, new_state
+
+
+def _dropout(x, rate, rng, deterministic):
+    if deterministic or rate == 0.0 or rng is None:
+        return x
+    keep = jax.random.bernoulli(rng, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)

@@ -1,0 +1,66 @@
+"""Traditional GRU (Cho et al., 2014) -- the paper's sequential baseline.
+
+    z_t = sigma(Linear([x_t, h_{t-1}]))
+    r_t = sigma(Linear([x_t, h_{t-1}]))
+    h~_t = tanh(Linear([x_t, r_t * h_{t-1}]))
+    h_t = (1 - z_t) * h_{t-1} + z_t * h~_t
+
+Sequential-only (BPTT): used for the Fig. 1 runtime comparison and for the
+param-count ratio checks.  Fused 3-gate weight layout.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import nn
+
+Array = jax.Array
+
+
+def init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32,
+         use_bias: bool = True):
+    kx, kh = jax.random.split(key)
+    p = {
+        "wx": nn.dense_init(kx, d_in, 3 * d_hidden, use_bias=use_bias,
+                            dtype=dtype),
+        "wh": nn.dense_init(kh, d_hidden, 3 * d_hidden, use_bias=False,
+                            dtype=dtype),
+    }
+    return p
+
+
+def n_params(d_in: int, d_hidden: int, use_bias: bool = False) -> int:
+    return 3 * d_hidden * (d_in + d_hidden) + (3 * d_hidden if use_bias else 0)
+
+
+def step(params, x_t: Array, h_prev: Array, compute_dtype=None) -> Array:
+    dh = h_prev.shape[-1]
+    gx = nn.dense_apply(params["wx"], x_t, compute_dtype)
+    gh = h_prev @ params["wh"]["kernel"].astype(h_prev.dtype)
+    zx, rx, hx = jnp.split(gx, 3, axis=-1)
+    zh, rh, hh = jnp.split(gh, 3, axis=-1)
+    z = jax.nn.sigmoid(zx + zh)
+    r = jax.nn.sigmoid(rx + rh)
+    h_tilde = jnp.tanh(hx + r * hh)
+    return (1.0 - z) * h_prev + z * h_tilde
+
+
+def forward(params, x: Array, h0: Optional[Array] = None,
+            compute_dtype=None) -> Array:
+    """x: (..., T, d_in) -> (..., T, d_hidden), sequential lax.scan (BPTT)."""
+    dh = params["wh"]["kernel"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:-2] + (dh,), x.dtype)
+    xs = jnp.moveaxis(x, -2, 0)
+
+    def body(h, x_t):
+        h = step(params, x_t, h, compute_dtype)
+        return h, h
+
+    _, hs = lax.scan(body, h0, xs)
+    return jnp.moveaxis(hs, 0, -2)

@@ -1,0 +1,66 @@
+"""Traditional LSTM (Hochreiter & Schmidhuber, 1997) -- sequential baseline.
+
+    f_t = sigma(Linear([x_t, h_{t-1}]))     i_t = sigma(Linear([x_t, h_{t-1}]))
+    o_t = sigma(Linear([x_t, h_{t-1}]))     c~_t = tanh(Linear([x_t, h_{t-1}]))
+    c_t = f_t * c_{t-1} + i_t * c~_t        h_t = o_t * tanh(c_t)
+
+Fused 4-gate weight layout; O(4*dh*(dx+dh)) parameters as in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import nn
+
+Array = jax.Array
+
+
+def init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32,
+         use_bias: bool = True):
+    kx, kh = jax.random.split(key)
+    return {
+        "wx": nn.dense_init(kx, d_in, 4 * d_hidden, use_bias=use_bias,
+                            dtype=dtype),
+        "wh": nn.dense_init(kh, d_hidden, 4 * d_hidden, use_bias=False,
+                            dtype=dtype),
+    }
+
+
+def n_params(d_in: int, d_hidden: int, use_bias: bool = False) -> int:
+    return 4 * d_hidden * (d_in + d_hidden) + (4 * d_hidden if use_bias else 0)
+
+
+def step(params, x_t: Array, state: Tuple[Array, Array],
+         compute_dtype=None) -> Tuple[Array, Array]:
+    h_prev, c_prev = state
+    gx = nn.dense_apply(params["wx"], x_t, compute_dtype)
+    gh = h_prev @ params["wh"]["kernel"].astype(h_prev.dtype)
+    fx, ix, ox, cx = jnp.split(gx, 4, axis=-1)
+    fh, ih, oh, ch = jnp.split(gh, 4, axis=-1)
+    f = jax.nn.sigmoid(fx + fh)
+    i = jax.nn.sigmoid(ix + ih)
+    o = jax.nn.sigmoid(ox + oh)
+    c_tilde = jnp.tanh(cx + ch)
+    c = f * c_prev + i * c_tilde
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def forward(params, x: Array, state0=None, compute_dtype=None) -> Array:
+    dh = params["wh"]["kernel"].shape[0]
+    if state0 is None:
+        z = jnp.zeros(x.shape[:-2] + (dh,), x.dtype)
+        state0 = (z, z)
+    xs = jnp.moveaxis(x, -2, 0)
+
+    def body(state, x_t):
+        h, c = step(params, x_t, state, compute_dtype)
+        return (h, c), h
+
+    _, hs = lax.scan(body, state0, xs)
+    return jnp.moveaxis(hs, 0, -2)

@@ -1,0 +1,88 @@
+"""minGRU (the paper's Section 3.1).
+
+    z_t  = sigma(Linear_dh(x_t))
+    h~_t = Linear_dh(x_t)            (vanilla)  |  g(Linear_dh(x_t)) (log mode)
+    h_t  = (1 - z_t) * h_{t-1} + z_t * h~_t
+
+Two numerical modes, both from the paper:
+  * ``linear``  -- Appendix A: scan directly on (a, b) = (1-z, z*h~)
+  * ``log``     -- Appendix B: Heinsen log-space scan; requires h~ > 0 via g()
+
+Each mode has a parallel (training / prefill) and a sequential step
+(decode) form; parallel == rolled-out sequential is tested exhaustively.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn
+from repro.core import scan as scan_lib
+
+Array = jax.Array
+
+
+def init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32,
+         use_bias: bool = True):
+    kz, kh = jax.random.split(key)
+    return {
+        "wz": nn.dense_init(kz, d_in, d_hidden, use_bias=use_bias, dtype=dtype),
+        "wh": nn.dense_init(kh, d_in, d_hidden, use_bias=use_bias, dtype=dtype),
+    }
+
+
+def n_params(d_in: int, d_hidden: int, use_bias: bool = False) -> int:
+    return 2 * d_in * d_hidden + (2 * d_hidden if use_bias else 0)
+
+
+# ---------------------------------------------------------------------------
+# Parallel (training / prefill) modes
+# ---------------------------------------------------------------------------
+
+def parallel(params, x: Array, h0: Optional[Array] = None, *,
+             mode: str = "log", scan_strategy: str = "associative",
+             compute_dtype=None) -> Array:
+    """x: (..., T, d_in) -> h: (..., T, d_hidden)."""
+    k = nn.dense_apply(params["wz"], x, compute_dtype)   # gate pre-activation
+    v = nn.dense_apply(params["wh"], x, compute_dtype)   # candidate pre-act
+
+    if mode == "log":
+        # Appendix B Algorithm 6, scanned in fp32 for stability.
+        log_z = nn.log_sigmoid(k.astype(jnp.float32))
+        log_coeffs = nn.log_sigmoid(-k.astype(jnp.float32))   # log(1-z)
+        log_h_tilde = nn.log_g(v.astype(jnp.float32))
+        log_h0 = None if h0 is None else jnp.log(h0.astype(jnp.float32))
+        h = scan_lib.scan_log_space(log_coeffs, log_z + log_h_tilde, log_h0)
+        return h.astype(x.dtype if compute_dtype is None else compute_dtype)
+    elif mode == "linear":
+        z = jax.nn.sigmoid(k)
+        a = 1.0 - z
+        b = z * v
+        return scan_lib.scan_linear(a, b, h0, strategy=scan_strategy)
+    raise ValueError(f"unknown minGRU mode {mode!r}")
+
+
+def gates(params, x: Array, *, mode: str = "log", compute_dtype=None):
+    """Return the (a, b) recurrence inputs -- used by the Pallas fused path
+    and by the sequence-parallel layer which must scan externally."""
+    k = nn.dense_apply(params["wz"], x, compute_dtype)
+    v = nn.dense_apply(params["wh"], x, compute_dtype)
+    z = jax.nn.sigmoid(k)
+    h_tilde = nn.g(v) if mode == "log" else v
+    return 1.0 - z, z * h_tilde
+
+
+# ---------------------------------------------------------------------------
+# Sequential step (decode)
+# ---------------------------------------------------------------------------
+
+def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
+         compute_dtype=None) -> Array:
+    """x_t: (..., d_in), h_prev: (..., d_hidden) -> h_t."""
+    z = jax.nn.sigmoid(nn.dense_apply(params["wz"], x_t, compute_dtype))
+    v = nn.dense_apply(params["wh"], x_t, compute_dtype)
+    h_tilde = nn.g(v) if mode == "log" else v
+    return (1.0 - z) * h_prev + z * h_tilde

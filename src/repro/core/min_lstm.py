@@ -1,0 +1,103 @@
+"""minLSTM (the paper's Section 3.2).
+
+    f_t  = sigma(Linear_dh(x_t))
+    i_t  = sigma(Linear_dh(x_t))
+    h~_t = Linear_dh(x_t)           (vanilla) | g(Linear_dh(x_t)) (log mode)
+    f'_t, i'_t = f/(f+i), i/(f+i)   (length-independence normalization)
+    h_t  = f'_t * h_{t-1} + i'_t * h~_t
+
+``normalize=False`` gives the unnormalized variant (time-dependent scale,
+discussed in Section 3.2.3 footnote 2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn
+from repro.core import scan as scan_lib
+
+Array = jax.Array
+
+
+def init(key, d_in: int, d_hidden: int, *, dtype=jnp.float32,
+         use_bias: bool = True, forget_bias: float = 0.0):
+    """forget_bias > 0 reproduces the paper's Fig. 5 retention init."""
+    kf, ki, kh = jax.random.split(key, 3)
+    p = {
+        "wf": nn.dense_init(kf, d_in, d_hidden, use_bias=use_bias, dtype=dtype,
+                            bias_init=forget_bias),
+        "wi": nn.dense_init(ki, d_in, d_hidden, use_bias=use_bias, dtype=dtype),
+        "wh": nn.dense_init(kh, d_in, d_hidden, use_bias=use_bias, dtype=dtype),
+    }
+    return p
+
+
+def n_params(d_in: int, d_hidden: int, use_bias: bool = False) -> int:
+    return 3 * d_in * d_hidden + (3 * d_hidden if use_bias else 0)
+
+
+def _normalized_log_gates(kf: Array, ki: Array):
+    """Appendix B Algorithm 8: log f', log i' from gate pre-activations."""
+    diff = jax.nn.softplus(-kf) - jax.nn.softplus(-ki)
+    log_f = -jax.nn.softplus(diff)
+    log_i = -jax.nn.softplus(-diff)
+    return log_f, log_i
+
+
+def parallel(params, x: Array, h0: Optional[Array] = None, *,
+             mode: str = "log", normalize: bool = True,
+             scan_strategy: str = "associative", compute_dtype=None) -> Array:
+    kf = nn.dense_apply(params["wf"], x, compute_dtype)
+    ki = nn.dense_apply(params["wi"], x, compute_dtype)
+    v = nn.dense_apply(params["wh"], x, compute_dtype)
+
+    if mode == "log":
+        kf32, ki32 = kf.astype(jnp.float32), ki.astype(jnp.float32)
+        if normalize:
+            log_f, log_i = _normalized_log_gates(kf32, ki32)
+        else:
+            log_f = nn.log_sigmoid(kf32)
+            log_i = nn.log_sigmoid(ki32)
+        log_h_tilde = nn.log_g(v.astype(jnp.float32))
+        log_h0 = None if h0 is None else jnp.log(h0.astype(jnp.float32))
+        h = scan_lib.scan_log_space(log_f, log_i + log_h_tilde, log_h0)
+        return h.astype(x.dtype if compute_dtype is None else compute_dtype)
+    elif mode == "linear":
+        f = jax.nn.sigmoid(kf)
+        i = jax.nn.sigmoid(ki)
+        if normalize:
+            denom = f + i
+            f, i = f / denom, i / denom
+        return scan_lib.scan_linear(f, i * v, h0, strategy=scan_strategy)
+    raise ValueError(f"unknown minLSTM mode {mode!r}")
+
+
+def gates(params, x: Array, *, mode: str = "log", normalize: bool = True,
+          compute_dtype=None):
+    """(a, b) recurrence inputs for external scans (Pallas / seq-parallel)."""
+    kf = nn.dense_apply(params["wf"], x, compute_dtype)
+    ki = nn.dense_apply(params["wi"], x, compute_dtype)
+    v = nn.dense_apply(params["wh"], x, compute_dtype)
+    f = jax.nn.sigmoid(kf)
+    i = jax.nn.sigmoid(ki)
+    if normalize:
+        denom = f + i
+        f, i = f / denom, i / denom
+    h_tilde = nn.g(v) if mode == "log" else v
+    return f, i * h_tilde
+
+
+def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
+         normalize: bool = True, compute_dtype=None) -> Array:
+    f = jax.nn.sigmoid(nn.dense_apply(params["wf"], x_t, compute_dtype))
+    i = jax.nn.sigmoid(nn.dense_apply(params["wi"], x_t, compute_dtype))
+    v = nn.dense_apply(params["wh"], x_t, compute_dtype)
+    h_tilde = nn.g(v) if mode == "log" else v
+    if normalize:
+        denom = f + i
+        f, i = f / denom, i / denom
+    return f * h_prev + i * h_tilde

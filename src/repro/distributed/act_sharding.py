@@ -1,0 +1,46 @@
+"""Activation sharding constraints (MaxText-style logical annotations).
+
+XLA's sharding propagation goes wrong at two recurring places: reshapes
+that split a sharded fused dim into (heads, head_dim) when heads < tp, and
+gathers along a sharded vocab dim.  ``constrain`` pins activations to valid
+shardings (skipping any dim the mesh doesn't divide) so propagation never
+invents a multi-GB collective.  No-op outside a mesh context -- single
+-device tests and CPU training paths are unaffected.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import context as mesh_ctx
+from repro.distributed.sharding import logical_mapping
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """logical: one of "dp" | "tp" | "sp" | None per dim of x."""
+    mesh = mesh_ctx.current_mesh()
+    if mesh is None:
+        return x
+    mapping = logical_mapping(mesh, mesh_ctx.pure_dp())
+    axes = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            axes.append(None)
+            continue
+        phys = mapping[name]
+        if not phys:
+            axes.append(None)
+            continue
+        size = 1
+        for a in phys:
+            size *= mesh.shape[a]
+        if dim % size != 0:
+            axes.append(None)
+        else:
+            axes.append(phys if len(phys) > 1 else phys[0])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*axes)))

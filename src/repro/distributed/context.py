@@ -1,0 +1,43 @@
+"""Mesh context: lets deep layers (MoE EP, sequence-parallel scan) find the
+active mesh without threading it through every apply() signature."""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+_ACTIVE_MESH: Optional[Mesh] = None
+_PURE_DP: bool = False
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], pure_dp: bool = False):
+    global _ACTIVE_MESH, _PURE_DP
+    prev, prev_dp = _ACTIVE_MESH, _PURE_DP
+    _ACTIVE_MESH, _PURE_DP = mesh, pure_dp
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH, _PURE_DP = prev, prev_dp
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def pure_dp() -> bool:
+    return _PURE_DP
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Optional[Mesh], name: str) -> int:
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]

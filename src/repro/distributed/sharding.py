@@ -1,0 +1,223 @@
+"""Sharding rules: parameter-path regexes -> logical axes -> mesh axes.
+
+Parallelism recipe (DESIGN.md §4):
+
+  * ``dp``     batch axis           -> ("pod", "data")
+  * ``fsdp``   weight input dims    -> ("data",)   ZeRO-3 within a pod
+  * ``tp``     heads / ffn / vocab  -> ("model",)  Megatron tensor parallel
+  * ``expert`` MoE expert dim       -> ("model",)  expert parallelism
+  * ``sp``     long-context seq dim -> ("data",)   sequence parallel
+
+Multi-pod keeps params replicated across ``pod`` (FSDP gathers stay on ICI;
+only gradient all-reduce crosses DCN), which is the standard 1000+-node
+topology-aware layout.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical -> physical mapping
+# ---------------------------------------------------------------------------
+
+def logical_mapping(mesh: Mesh, pure_dp: bool = False
+                    ) -> Dict[str, Tuple[str, ...]]:
+    """pure_dp: small-model layout -- every mesh axis is data parallelism,
+    weights replicated (the right production answer when the model fits on
+    one chip; EXPERIMENTS.md §Perf, mingru-lm hillclimb)."""
+    has_pod = "pod" in mesh.axis_names
+    if pure_dp:
+        axes = ("pod", "data", "model") if has_pod else ("data", "model")
+        return {"dp": axes, "fsdp": (), "tp": (), "expert": (), "sp": ()}
+    return {
+        "dp": ("pod", "data") if has_pod else ("data",),
+        "fsdp": ("data",),
+        "tp": ("model",),
+        "expert": ("model",),
+        "sp": ("data",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (first match wins; dims given WITHOUT the stacked-layer
+# leading axis -- it is auto-prepended for scanned-layer params)
+# ---------------------------------------------------------------------------
+
+PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # embeddings: vocab-parallel (Megatron). The contracting d_model dim is
+    # deliberately NOT fsdp-sharded: sharding it makes XLA all-reduce the
+    # (B,S,V)-sized partial logits over `data` (~60 GB/step/device measured
+    # on whisper train_4k); vocab-sharded tables keep the loss collective
+    # down to a (B,S) logsumexp psum over `model`.
+    (r"embed/table$", ("tp", None)),
+    (r"unembed/kernel$", (None, "tp")),
+    (r"(patch_proj|frame_proj)/kernel$", (None, "tp")),
+    (r"(enc_pos|dec_pos)/table$", (None, None)),
+    # MoE experts (E, d_in, d_out)
+    (r"(gate_w|up_w)/kernel$", ("expert", "fsdp", None)),
+    (r"down_w/kernel$", ("expert", None, "fsdp")),
+    (r"router/kernel$", (None, None)),
+    # MLA
+    (r"wq_a/kernel$", ("fsdp", None)),
+    (r"wq_b/kernel$", (None, "tp")),
+    (r"wkv_a/kernel$", ("fsdp", None)),
+    (r"w[kv]_b/kernel$", (None, "tp")),
+    # attention / minRNN cell / generic projections
+    (r"(wq|wk|wv)/kernel$", ("fsdp", "tp")),
+    (r"wo/kernel$", ("tp", "fsdp")),
+    (r"rnn/w[zhfi]/kernel$", ("fsdp", "tp")),
+    (r"rnn/w[zhfi]/bias$", ("tp",)),
+    # MLP family (paper block's mlp_in/out included)
+    (r"(gate|up|mlp_in|in_proj)/kernel$", ("fsdp", "tp")),
+    (r"(down|mlp_out|out_proj)/kernel$", ("tp", "fsdp")),
+    (r"(gate|up|mlp_in|in_proj)/bias$", ("tp",)),
+    # depthwise conv (K, D)
+    (r"conv/kernel$", (None, "tp")),
+    (r"conv/bias$", ("tp",)),
+    # SSD per-head params
+    (r"(a_log|dt_bias|d_skip)$", ("tp",)),
+    # everything else (norms, small biases): replicated
+    (r".*", None),
+]
+
+_STACKED_MARKERS = ("/blocks/", "/dense_blocks/", "encoder/", "decoder/")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axes_size(mesh: Mesh, phys: Tuple[str, ...]) -> int:
+    n = 1
+    for a in phys:
+        n *= mesh.shape[a]
+    return n
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   mapping: Dict[str, Tuple[str, ...]]) -> P:
+    """First matching rule wins; any dim not divisible by its mapped mesh
+    axes falls back to replicated (jit in_shardings require exact tiling)."""
+    ndim = len(shape)
+    for pattern, logical in PARAM_RULES:
+        if re.search(pattern, path):
+            if logical is None:
+                return P()
+            axes: List[Any] = [None] * ndim
+            offset = ndim - len(logical)      # leading stacked-layer dims
+            if offset < 0:                    # rule longer than array: skip
+                continue
+            for i, name in enumerate(logical):
+                if name is None:
+                    continue
+                phys = mapping[name]
+                if not phys:                  # axis disabled (pure_dp)
+                    continue
+                if shape[offset + i] % _axes_size(mesh, phys) != 0:
+                    continue                  # non-divisible -> replicate
+                axes[offset + i] = phys if len(phys) > 1 else phys[0]
+            return P(*axes)
+    return P()
+
+
+def params_pspecs(params_shapes, mesh: Mesh, pure_dp: bool = False):
+    """params (arrays or ShapeDtypeStructs) -> matching tree of PartitionSpec."""
+    mapping = logical_mapping(mesh, pure_dp)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [spec_for_param(_path_str(path), leaf.shape, mesh, mapping)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def params_shardings(params_shapes, mesh: Mesh, pure_dp: bool = False):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        params_pspecs(params_shapes, mesh, pure_dp))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, batch: Dict[str, Any], pure_dp: bool = False):
+    """Training / prefill batch: leading batch dim over dp."""
+    dp = logical_mapping(mesh, pure_dp)["dp"]
+
+    def spec(leaf):
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_pspecs(cfg, mesh: Mesh, cache, batch_size: int):
+    """Decode caches.
+
+    Attention kv caches shard their LENGTH dim over ``model`` (uniform
+    across GQA/MQA/MLA head counts -- softmax over a sharded length is a
+    cheap all-reduce of (max, sum)); batch over dp.  Long-context bs=1
+    cells additionally shard length over ``data`` (sequence parallel).
+    """
+    mapping = logical_mapping(mesh)
+    dp = mapping["dp"]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_sharded = batch_size % dp_size == 0 and batch_size >= dp_size
+    bdim = dp if batch_sharded else None
+    # length dim: model always; + data when batch is unsharded (long ctx)
+    sdim = "model" if batch_sharded else ("data", "model")
+
+    def _div(leaf, dim, axes):
+        if axes is None:
+            return None
+        ax = (axes,) if isinstance(axes, str) else axes
+        return axes if leaf.shape[dim] % _axes_size(mesh, ax) == 0 else None
+
+    def spec(key, leaf):
+        nd = leaf.ndim
+        if key == "pos":
+            return P(_div(leaf, 0, bdim))
+        if key in ("k", "v", "cross_k", "cross_v"):
+            # (L, B, S, KV, hd)
+            return P(None, _div(leaf, 1, bdim), _div(leaf, 2, sdim),
+                     None, None)
+        if key in ("ckv", "krope"):
+            # (L, B, S, latent)
+            return P(None, _div(leaf, 1, bdim), _div(leaf, 2, sdim), None)
+        if key == "ssm":
+            # (L, B, H, P, N)
+            return P(None, _div(leaf, 1, bdim), _div(leaf, 2, "model"),
+                     None, None)
+        if key == "conv":
+            # (L, B, K-1, D)
+            return P(None, _div(leaf, 1, bdim), None, _div(leaf, 3, "model"))
+        if key == "h":
+            # (L, B, dh)
+            return P(None, _div(leaf, 1, bdim), _div(leaf, 2, "model"))
+        return P(*([None] * nd))
+
+    return {k: jax.tree.map(lambda l, kk=k: spec(kk, l), v)
+            for k, v in cache.items()}
+
+
+def token_pspec(mesh: Mesh, batch_size: int):
+    dp = logical_mapping(mesh)["dp"]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    return P(dp) if batch_size % dp_size == 0 and batch_size >= dp_size \
+        else P(None)

@@ -1,0 +1,53 @@
+"""Jitted wrapper for the fused minGRU kernel.
+
+Forward/prefill-serving hot path.  For training we use the (differentiable)
+``repro.kernels.scan.ops.linear_scan`` with XLA matmuls for the projections:
+the fused kernel's weight gradients would need a second (transposed) matmul
+pass that XLA already schedules optimally, so fusing buys nothing on the
+backward -- see EXPERIMENTS.md §Perf for the measured forward win.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_mingru import kernel as _kernel
+
+DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+
+
+def fused_mingru(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
+                 wh: jax.Array, bh: Optional[jax.Array],
+                 h0: Optional[jax.Array] = None, *, mode: str = "log",
+                 block_t: int = 256, block_dh: int = 128,
+                 interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """minGRU layer forward (projections + recurrence) in one Pallas call."""
+    bsz, t, dx = x.shape
+    dh = wz.shape[1]
+    if bz is None:
+        bz = jnp.zeros((dh,), jnp.float32)
+    if bh is None:
+        bh = jnp.zeros((dh,), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, dh), x.dtype)
+
+    # pad T to the time tile and Dh to the feature tile
+    bt = min(block_t, max(8, 1 << (t - 1).bit_length()))
+    pt = (-t) % bt
+    if pt:
+        x = jnp.pad(x, ((0, 0), (0, pt), (0, 0)))
+    pd = (-dh) % block_dh
+    if pd:
+        wz = jnp.pad(wz, ((0, 0), (0, pd)))
+        wh = jnp.pad(wh, ((0, 0), (0, pd)))
+        bz = jnp.pad(bz, (0, pd))
+        bh = jnp.pad(bh, (0, pd))
+        h0 = jnp.pad(h0, ((0, 0), (0, pd)))
+
+    out = _kernel.fused_mingru_kernel(x, wz, bz, wh, bh, h0, block_t=bt,
+                                      block_dh=block_dh, mode=mode,
+                                      interpret=interpret)
+    return out[:, :t, :dh]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the fused minGRU gate-projection + scan kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _g(x):
+    return jnp.where(x >= 0, x + 0.5, jax.nn.sigmoid(x))
+
+
+def fused_mingru_ref(x: jax.Array, wz: jax.Array, bz: jax.Array,
+                     wh: jax.Array, bh: jax.Array,
+                     h0: Optional[jax.Array] = None,
+                     mode: str = "log") -> jax.Array:
+    """minGRU layer forward: projections + recurrence, unfused reference.
+
+    x: (B, T, Dx); wz, wh: (Dx, Dh); bz, bh: (Dh,); h0: (B, Dh).
+    """
+    k = x @ wz + bz
+    v = x @ wh + bh
+    z = jax.nn.sigmoid(k)
+    h_tilde = _g(v) if mode == "log" else v
+    a = 1.0 - z
+    b = z * h_tilde
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:-2] + (wz.shape[1],), b.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(a, -2, 0), jnp.moveaxis(b, -2, 0)))
+    return jnp.moveaxis(hs, 0, -2)

@@ -1,0 +1,101 @@
+"""Jitted public wrapper for the chunked-scan kernel, with custom VJP.
+
+The backward pass of h_t = a_t h_{t-1} + b_t is itself a (reversed) linear
+scan:
+
+    g_t  = dL/dh_t + a_{t+1} g_{t+1}        (reverse-scan with coeff a_{t+1})
+    dL/db_t = g_t
+    dL/da_t = g_t * h_{t-1}
+    dL/dh0  = a_1 * g_1  ... = g_0' (the reverse carry past t=1)
+
+so the same kernel serves both directions -- the training hot path never
+leaves Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.scan import kernel as _kernel
+
+DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, multiple, axis, value):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, size
+    pad = multiple - rem
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+def _run(a, b, h0, block_t, block_d, interpret):
+    """Pad to tile multiples, run kernel, slice back."""
+    t, d = a.shape[-2], a.shape[-1]
+    bt = min(block_t, max(8, 1 << (t - 1).bit_length()))
+    a_p, _ = _pad_to(a, bt, -2, 1.0)       # identity coefficient
+    b_p, _ = _pad_to(b, bt, -2, 0.0)
+    a_p, _ = _pad_to(a_p, block_d, -1, 1.0)
+    b_p, _ = _pad_to(b_p, block_d, -1, 0.0)
+    h0_p, _ = _pad_to(h0, block_d, -1, 0.0)
+    out = _kernel.linear_scan_kernel(a_p, b_p, h0_p, block_t=bt,
+                                     block_d=block_d, interpret=interpret)
+    return out[..., :t, :d]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                block_t: int = 256, block_d: int = 128,
+                interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """Differentiable h_t = a_t h_{t-1} + b_t, Pallas-accelerated.
+
+    a, b: (B, T, D); h0: (B, D).  Arbitrary T/D (padded to tiles).
+    """
+    return _run(a, b, h0, block_t, block_d, interpret)
+
+
+def _fwd(a, b, h0, block_t, block_d, interpret):
+    h = _run(a, b, h0, block_t, block_d, interpret)
+    return h, (a, h, h0)
+
+
+def _bwd(block_t, block_d, interpret, res, dh):
+    a, h, h0 = res
+    # reverse scan: g_t = dh_t + a_{t+1} g_{t+1}
+    a_next = jnp.concatenate(
+        [a[..., 1:, :], jnp.zeros_like(a[..., :1, :])], axis=-2)
+    g = _run(jnp.flip(a_next, axis=-2), jnp.flip(dh, axis=-2),
+             jnp.zeros_like(h0), block_t, block_d, interpret)
+    g = jnp.flip(g, axis=-2)
+    h_prev = jnp.concatenate([h0[..., None, :], h[..., :-1, :]], axis=-2)
+    da = g * h_prev
+    db = g
+    dh0 = a[..., 0, :] * g[..., 0, :]
+    return da, db, dh0
+
+
+linear_scan.defvjp(_fwd, _bwd)
+
+
+def linear_scan_auto(a: jax.Array, b: jax.Array,
+                     h0: Optional[jax.Array] = None, **kw) -> jax.Array:
+    """Convenience: default h0 = 0, flattens extra leading dims."""
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[:-2] + a.shape[-1:], b.dtype)
+    lead = a.shape[:-2]
+    if len(lead) != 1:
+        n = 1
+        for s in lead:
+            n *= s
+        out = linear_scan(a.reshape((n,) + a.shape[-2:]),
+                          b.reshape((n,) + b.shape[-2:]),
+                          h0.reshape((n,) + h0.shape[-1:]), **kw)
+        return out.reshape(lead + out.shape[-2:])
+    return linear_scan(a, b, h0, **kw)

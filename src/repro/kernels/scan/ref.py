@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the chunked linear-scan Pallas kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array,
+                    h0: Optional[jax.Array] = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t over axis -2.  Sequential ground truth.
+
+    a, b: (B, T, D);  h0: (B, D) or None (zeros).
+    """
+    if h0 is None:
+        h0 = jnp.zeros(a.shape[:-2] + a.shape[-1:], b.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = jnp.moveaxis(a, -2, 0)
+    b_t = jnp.moveaxis(b, -2, 0)
+    _, hs = lax.scan(step, h0.astype(b.dtype), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, -2)

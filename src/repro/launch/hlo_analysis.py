@@ -1,0 +1,83 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+collective_bytes is not in cost_analysis(): we parse the optimized HLO
+(compiled.as_text()) and sum the RESULT-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  The HLO is
+the per-device partitioned module, so these are per-device bytes moved --
+divided by the per-link bandwidth they give the collective roofline term
+(methodology note in EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e constants (assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, bytes} from the optimized HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition("=")
+        head = rhs.lstrip()
+        for kind in _COLLECTIVES:
+            # match the op use, e.g. "f32[...] all-reduce(" / "all-reduce-start("
+            if head.startswith(("(", "f", "b", "s", "u", "p", "c", "t")) and \
+                    re.search(rf"\b{kind}(-start)?\(", head):
+                # result type is between '=' and the op name
+                seg = head.split(kind)[0]
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _shape_bytes(seg)
+                break
+    return stats
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   collective_bytes_per_dev: float) -> Dict[str, float]:
+    """The three per-device roofline times (seconds)."""
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_collective = collective_bytes_per_dev / LINK_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)], key=lambda kv: kv[1])[0]
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_collective, "dominant": dominant}
+
+
+def model_flops(n_params_active: int, tokens: int, kind: str) -> float:
+    """6*N*D for training, 2*N*D for inference (fwd only)."""
+    mult = 6 if kind == "train" else 2
+    return float(mult) * n_params_active * tokens

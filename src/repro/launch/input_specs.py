@@ -1,0 +1,79 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape) cell.
+
+Nothing here allocates: params come from jax.eval_shape(init), inputs are
+ShapeDtypeStructs, caches are eval_shape'd init_cache.  The dry-run lowers
+against these (assignment: MULTI-POD DRY-RUN step 2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+
+S = jax.ShapeDtypeStruct
+
+
+def params_specs(cfg: ModelConfig):
+    model = encdec if cfg.family == "encdec" else lm
+    return jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": S((b, s), jnp.int32), "labels": S((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = S((b, cfg.n_frontend_tokens, cfg.frontend_dim),
+                            cfg.cdtype)
+    elif cfg.frontend == "patches":
+        batch["patch_embeds"] = S((b, cfg.n_frontend_tokens,
+                                   cfg.frontend_dim), cfg.cdtype)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": S((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = S((b, cfg.n_frontend_tokens, cfg.frontend_dim),
+                            cfg.cdtype)
+    elif cfg.frontend == "patches":
+        batch["patch_embeds"] = S((b, cfg.n_frontend_tokens,
+                                   cfg.frontend_dim), cfg.cdtype)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    model = encdec if cfg.family == "encdec" else lm
+    return jax.eval_shape(
+        functools.partial(model.init_cache, cfg, b, s))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {"token": S((b,), jnp.int32), "cache": cache_specs(cfg, shape)}
+
+
+def n_params(cfg: ModelConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts from the eval-shape tree."""
+    tree = params_specs(cfg)
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        names = [str(getattr(p, "key", p)) for p in path]
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        total += size
+        if cfg.moe and any(n in ("gate_w", "up_w", "down_w") for n in names):
+            active += size * cfg.moe.top_k // cfg.moe.n_experts
+        else:
+            active += size
+    return total, active

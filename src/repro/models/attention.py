@@ -1,0 +1,376 @@
+"""Attention mixers: GQA (blocked / flash-style) and MLA (deepseek-v3).
+
+Blocked attention keeps activation memory O(T * chunk) instead of O(T^2):
+the query axis is tiled (python loop -> unrolled HLO; layers are scanned so
+this stays compact) and each query tile runs an online-softmax scan over
+only the kv tiles it can see -- strictly-causal tiles are never computed,
+so HLO FLOPs track the true T^2/2 cost (roofline honesty, DESIGN §4).
+
+MLA follows deepseek-v3: low-rank q/kv compression, decoupled rope head,
+and the *absorbed* decode path that attends directly in the compressed
+latent space (cache = kv_lora + rope_dim per token, not heads * head_dim).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import nn
+from repro.distributed.act_sharding import constrain
+from repro.models.rope import apply_rope
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# GQA parameters
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, *, dtype=jnp.float32):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    bias = cfg.attn_bias
+    return {
+        "wq": nn.dense_init(ks[0], d, h * hd, use_bias=bias, dtype=dtype),
+        "wk": nn.dense_init(ks[1], d, kv * hd, use_bias=bias, dtype=dtype),
+        "wv": nn.dense_init(ks[2], d, kv * hd, use_bias=bias, dtype=dtype),
+        "wo": nn.dense_init(ks[3], h * hd, d, use_bias=bias, dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocked multi-head attention core
+# ---------------------------------------------------------------------------
+
+def _attend_tiles(q: Array, k: Array, v: Array, mask_bias: Optional[Array],
+                  scale: float) -> Tuple[Array, Array, Array]:
+    """One (q-tile, kv-tile) step of online softmax.
+
+    q: (B, Tq, K, G, D); k, v: (B, Tk, K, D).  Returns (m, l, o) updates.
+    """
+    s = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
+    if mask_bias is not None:
+        s = s + mask_bias                      # (Tq, Tk) broadcast
+    m = jnp.max(s, axis=-1)                    # (B, K, G, Tq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgts,bskd->bkgtd", p.astype(v.dtype), v)
+    return m, l, o
+
+
+def blocked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      q_offset: int = 0) -> Array:
+    """q: (B, Tq, H, D); k, v: (B, Tk, KV, D) -> (B, Tq, H, D).
+
+    ``q_offset`` positions q relative to k (prefill continuation / decode).
+    """
+    bsz, tq, h, d = q.shape
+    tk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    q = q.reshape(bsz, tq, kv, g, d)
+
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    # pad kv to a tile multiple; padded keys are masked via k_ids < tk
+    pad_k = (-tk) % kv_chunk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = -(-tq // q_chunk)
+    neg = jnp.float32(-1e30)
+
+    out_tiles = []
+    for qi in range(nq):
+        q0 = qi * q_chunk
+        q_tile = lax.slice_in_dim(q, q0, min(q0 + q_chunk, tq), axis=1)
+        tq_t = q_tile.shape[1]
+        q_pos_end = q_offset + q0 + tq_t        # exclusive
+        # kv tiles this q tile can see
+        nk_vis = -(-min(tk, q_pos_end) // kv_chunk) if causal \
+            else -(-tk // kv_chunk)
+        nk_vis = max(nk_vis, 1)
+
+        def kv_step(carry, ki):
+            m_run, l_run, o_run = carry
+            k_tile = lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            v_tile = lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            k_ids = ki * kv_chunk + jnp.arange(kv_chunk)
+            valid = (k_ids < tk)[None, :]
+            if causal:
+                q_ids = q_offset + q0 + jnp.arange(tq_t)
+                valid = valid & (q_ids[:, None] >= k_ids[None, :])
+            bias = jnp.where(valid, 0.0, neg).astype(jnp.float32)
+            m_new, l_new, o_new = _attend_tiles(q_tile, k_tile, v_tile,
+                                                bias, scale)
+            m_tot = jnp.maximum(m_run, m_new)
+            c_run = jnp.exp(m_run - m_tot)
+            c_new = jnp.exp(m_new - m_tot)
+            l_tot = l_run * c_run + l_new * c_new
+            o_tot = (o_run * c_run[..., None].astype(o_run.dtype)
+                     + o_new * c_new[..., None].astype(o_new.dtype))
+            return (m_tot, l_tot, o_tot), None
+
+        m0 = jnp.full((bsz, kv, g, tq_t), -1e30, jnp.float32)
+        l0 = jnp.zeros((bsz, kv, g, tq_t), jnp.float32)
+        o0 = jnp.zeros((bsz, kv, g, tq_t, d), v.dtype)
+        # remat the kv-tile body: backward recomputes the (Tq, Tk) score
+        # tile instead of saving it -- the flash-attention memory trade,
+        # O(T * tile) activations instead of O(T^2)
+        (m_f, l_f, o_f), _ = lax.scan(jax.checkpoint(kv_step), (m0, l0, o0),
+                                      jnp.arange(nk_vis))
+        o_f = o_f / jnp.maximum(l_f, 1e-20)[..., None].astype(o_f.dtype)
+        out_tiles.append(o_f)                  # (B, KV, G, Tq_t, D)
+
+    out = jnp.concatenate(out_tiles, axis=3)   # (B, KV, G, Tq, D)
+    return jnp.moveaxis(out, 3, 1).reshape(bsz, tq, h, d)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     length: Array) -> Array:
+    """Single-token attention. q: (B, H, D); caches: (B, S, KV, D)."""
+    bsz, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(bsz, kv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, :] < length[:, None, None, None],
+                  s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return o.reshape(bsz, h, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA apply (parallel / decode)
+# ---------------------------------------------------------------------------
+
+def gqa_apply(params, cfg, x: Array, *, positions: Array, causal: bool,
+              kv: Optional[Tuple[Array, Array]] = None,
+              q_offset: int = 0) -> Array:
+    """Full-sequence attention. kv != None -> cross attention over kv."""
+    bsz, t, _ = x.shape
+    h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    cd = cfg.cdtype
+    q = constrain(nn.dense_apply(params["wq"], x, cd
+                                  ).reshape(bsz, t, h, hd),
+                  "dp", None, "tp", None)
+    if kv is None:
+        k = constrain(nn.dense_apply(params["wk"], x, cd
+                                     ).reshape(bsz, t, n_kv, hd),
+                      "dp", None, "tp", None)
+        v = constrain(nn.dense_apply(params["wv"], x, cd
+                                     ).reshape(bsz, t, n_kv, hd),
+                      "dp", None, "tp", None)
+        if cfg.rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv
+    o = blocked_attention(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk, q_offset=q_offset)
+    return nn.dense_apply(params["wo"], o.reshape(bsz, t, h * hd), cd)
+
+
+def gqa_project_kv(params, cfg, x: Array, positions: Optional[Array] = None):
+    """Project k, v for caching (self) or cross-attention (encoder out)."""
+    bsz, t, _ = x.shape
+    n_kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    cd = cfg.cdtype
+    k = constrain(nn.dense_apply(params["wk"], x, cd
+                                 ).reshape(bsz, t, n_kv, hd),
+                  "dp", None, "tp", None)
+    v = constrain(nn.dense_apply(params["wv"], x, cd
+                                 ).reshape(bsz, t, n_kv, hd),
+                  "dp", None, "tp", None)
+    if cfg.rope and positions is not None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_prefill(params, cfg, x: Array, *, positions: Array):
+    """Causal self-attention over the prompt; returns (out, k, v) so the
+    caches can be seeded for decode."""
+    bsz, t, _ = x.shape
+    h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    cd = cfg.cdtype
+    q = constrain(nn.dense_apply(params["wq"], x, cd
+                                  ).reshape(bsz, t, h, hd),
+                  "dp", None, "tp", None)
+    k = constrain(nn.dense_apply(params["wk"], x, cd
+                                 ).reshape(bsz, t, n_kv, hd),
+                  "dp", None, "tp", None)
+    v = constrain(nn.dense_apply(params["wv"], x, cd
+                                 ).reshape(bsz, t, n_kv, hd),
+                  "dp", None, "tp", None)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = blocked_attention(q, k, v, causal=True, q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk)
+    out = nn.dense_apply(params["wo"], o.reshape(bsz, t, h * hd), cd)
+    return out, k, v
+
+
+def mla_prefill(params, cfg, x: Array, *, positions: Array):
+    """MLA prefill; returns (out, c_kv, k_rope) latent caches."""
+    bsz, t, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.mla_qk_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    cd = cfg.cdtype
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions)
+    k_nope = nn.dense_apply(params["wk_b"], c_kv, cd).reshape(bsz, t, h, nope)
+    v = nn.dense_apply(params["wv_b"], c_kv, cd).reshape(bsz, t, h, vd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (bsz, t, h, rope_d))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = blocked_attention(q, k,
+                          jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                      (0, nope + rope_d - vd))),
+                          causal=True, q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk)[..., :vd]
+    out = nn.dense_apply(params["wo"], o.reshape(bsz, t, h * vd), cd)
+    return out, c_kv, k_rope
+
+
+def gqa_decode_step(params, cfg, x_t: Array, k_cache: Array, v_cache: Array,
+                    pos: Array):
+    """x_t: (B, d_model); caches (B, S, KV, D); pos: (B,) current index.
+
+    Returns (out_t, k_cache, v_cache) with the new token inserted.
+    """
+    bsz = x_t.shape[0]
+    h, n_kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    cd = cfg.cdtype
+    q = constrain(nn.dense_apply(params["wq"], x_t, cd
+                                  ).reshape(bsz, h, hd), "dp", "tp", None)
+    k = constrain(nn.dense_apply(params["wk"], x_t, cd
+                                 ).reshape(bsz, n_kv, hd), "dp", "tp", None)
+    v = constrain(nn.dense_apply(params["wv"], x_t, cd
+                                 ).reshape(bsz, n_kv, hd), "dp", "tp", None)
+    if cfg.rope:
+        q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k_cache = _cache_insert(k_cache, k, pos)
+    v_cache = _cache_insert(v_cache, v, pos)
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    out = nn.dense_apply(params["wo"], o.reshape(bsz, h * hd), cd)
+    return out, k_cache, v_cache
+
+
+def _cache_insert(cache: Array, new: Array, pos: Array) -> Array:
+    """cache: (B, S, ...); new: (B, ...); pos: (B,) -- scatter at [b, pos[b]]."""
+    onehot = jax.nn.one_hot(pos, cache.shape[1], dtype=cache.dtype)
+    expand = (...,) + (None,) * (cache.ndim - 2)
+    return cache * (1.0 - onehot[expand]).astype(cache.dtype) + \
+        onehot[expand] * new[:, None]
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, *, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.mla_q_lora, cfg.mla_kv_lora
+    nope, rope_d, vd = cfg.mla_qk_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": nn.dense_init(ks[0], d, qr, use_bias=False, dtype=dtype),
+        "q_norm": nn.rmsnorm_init(qr, dtype),
+        "wq_b": nn.dense_init(ks[1], qr, h * (nope + rope_d), use_bias=False,
+                              dtype=dtype),
+        "wkv_a": nn.dense_init(ks[2], d, kvr + rope_d, use_bias=False,
+                               dtype=dtype),
+        "kv_norm": nn.rmsnorm_init(kvr, dtype),
+        "wk_b": nn.dense_init(ks[3], kvr, h * nope, use_bias=False,
+                              dtype=dtype),
+        "wv_b": nn.dense_init(ks[4], kvr, h * vd, use_bias=False, dtype=dtype),
+        "wo": nn.dense_init(ks[5], h * vd, d, use_bias=False, dtype=dtype),
+    }
+
+
+def _mla_qkv(params, cfg, x, positions):
+    bsz, t, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.mla_qk_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvr = cfg.mla_kv_lora
+    cd = cfg.cdtype
+    q = constrain(
+        nn.dense_apply(params["wq_b"],
+                       nn.rmsnorm_apply(params["q_norm"],
+                                        nn.dense_apply(params["wq_a"], x, cd)),
+                       cd).reshape(bsz, t, h, nope + rope_d),
+        "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = nn.dense_apply(params["wkv_a"], x, cd)
+    c_kv = nn.rmsnorm_apply(params["kv_norm"], kv[..., :kvr])
+    k_rope = apply_rope(kv[..., kvr:], positions, cfg.rope_theta)  # (B,T,rd)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(params, cfg, x: Array, *, positions: Array,
+              causal: bool = True) -> Array:
+    """Training / prefill MLA: expand the latent and run blocked attention."""
+    bsz, t, _ = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.mla_qk_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    cd = cfg.cdtype
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions)
+    k_nope = nn.dense_apply(params["wk_b"], c_kv, cd).reshape(bsz, t, h, nope)
+    v = nn.dense_apply(params["wv_b"], c_kv, cd).reshape(bsz, t, h, vd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (bsz, t, h, rope_d))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # pad v to qk head dim so the blocked kernel sees one head size
+    o = blocked_attention(q, k,
+                          jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                      (0, nope + rope_d - vd))),
+                          causal=causal, q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk)[..., :vd]
+    return nn.dense_apply(params["wo"], o.reshape(bsz, t, h * vd), cd)
+
+
+def mla_decode_step(params, cfg, x_t: Array, ckv_cache: Array,
+                    krope_cache: Array, pos: Array):
+    """Absorbed-latent decode: attend in the compressed kv space.
+
+    ckv_cache: (B, S, kv_lora); krope_cache: (B, S, rope_dim).
+    """
+    bsz = x_t.shape[0]
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.mla_qk_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvr = cfg.mla_kv_lora
+    cd = cfg.cdtype
+    x = x_t[:, None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, pos[:, None])
+    ckv_cache = _cache_insert(ckv_cache, c_kv[:, 0], pos)
+    krope_cache = _cache_insert(krope_cache, k_rope[:, 0], pos)
+
+    # absorb k_up into q: q_lat (B, H, kvr)
+    wk_b = params["wk_b"]["kernel"].astype(cd).reshape(kvr, h, nope)
+    q_lat = jnp.einsum("bhn,khn->bhk", q_nope[:, 0], wk_b)
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s = (jnp.einsum("bhk,bsk->bhs", q_lat, ckv_cache)
+         + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0], krope_cache)
+         ).astype(jnp.float32) * scale
+    s = jnp.where(jnp.arange(ckv_cache.shape[1])[None, None, :]
+                  < (pos + 1)[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(cd)
+    o_lat = jnp.einsum("bhs,bsk->bhk", p, ckv_cache)
+    wv_b = params["wv_b"]["kernel"].astype(cd).reshape(kvr, h, vd)
+    o = jnp.einsum("bhk,khv->bhv", o_lat, wv_b)
+    out = nn.dense_apply(params["wo"], o.reshape(bsz, h * vd), cd)
+    return out, ckv_cache, krope_cache

@@ -1,0 +1,115 @@
+"""Task heads over the minRNN trunk: sequence classification (selective
+copy / Chomsky / LRA benches) and Decision-Transformer-style offline RL
+(paper Table 3: minRNN -> MLP replacing self-attention in the DT frame).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import blocks as minrnn_blocks
+from repro.core import nn
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Sequence classifier: embed -> [blocks] -> last-position head
+# ---------------------------------------------------------------------------
+
+def classifier_init(key, *, vocab: int, n_classes: int, d_model: int,
+                    n_layers: int, block_cfg: minrnn_blocks.MinRNNBlockConfig,
+                    dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], n_layers)
+    return {
+        "embed": {"table": nn.normal_init(ks[1], (vocab, d_model), 0.02,
+                                          dtype)},
+        "blocks": jax.vmap(
+            lambda k: minrnn_blocks.init(k, block_cfg, dtype=dtype)
+        )(layer_keys),
+        "final_norm": nn.norm_init(block_cfg.norm, d_model, dtype),
+        "head": nn.dense_init(ks[2], d_model, n_classes, dtype=dtype),
+    }
+
+
+def classifier_apply(params, block_cfg, tokens: Array, *,
+                     lengths=None) -> Array:
+    """tokens: (B, T) -> logits (B, n_classes).  Pools at `lengths`-1 (the
+    last real position) or at T-1."""
+    x = params["embed"]["table"][tokens]
+
+    def body(carry, p_l):
+        return minrnn_blocks.apply(p_l, block_cfg, carry), None
+
+    x, _ = lax.scan(body, x, params["blocks"])
+    x = nn.norm_apply(block_cfg.norm, params["final_norm"], x)
+    if lengths is None:
+        pooled = x[:, -1]
+    else:
+        idx = jnp.maximum(lengths - 1, 0)
+        pooled = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    return nn.dense_apply(params["head"], pooled)
+
+
+def classifier_loss(params, block_cfg, batch) -> Tuple[Array, Dict]:
+    logits = classifier_apply(params, block_cfg, batch["tokens"],
+                              lengths=batch.get("lengths"))
+    labels = batch["label"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    acc = jnp.mean((logits.argmax(-1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), {"loss": jnp.mean(nll), "acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Decision-Transformer-style trajectory model (paper App. C.2: minRNN->MLP)
+# interleaves (rtg_t, s_t, a_t) tokens; predicts a_t from the s_t position.
+# ---------------------------------------------------------------------------
+
+def dt_init(key, *, state_dim: int, act_dim: int, d_model: int,
+            n_layers: int, block_cfg: minrnn_blocks.MinRNNBlockConfig,
+            dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    layer_keys = jax.random.split(ks[0], n_layers)
+    return {
+        "embed_s": nn.dense_init(ks[1], state_dim, d_model, dtype=dtype),
+        "embed_a": nn.dense_init(ks[2], act_dim, d_model, dtype=dtype),
+        "embed_r": nn.dense_init(ks[3], 1, d_model, dtype=dtype),
+        "blocks": jax.vmap(
+            lambda k: minrnn_blocks.init(k, block_cfg, dtype=dtype)
+        )(layer_keys),
+        "final_norm": nn.norm_init(block_cfg.norm, d_model, dtype),
+        "head": nn.dense_init(ks[4], d_model, act_dim, dtype=dtype),
+    }
+
+
+def dt_apply(params, block_cfg, states: Array, actions: Array,
+             rtg: Array) -> Array:
+    """states (B,H,S), actions (B,H,A), rtg (B,H,1) -> predicted actions
+    (B,H,A) from each state position (causal: a_t sees (R<=t, s<=t, a<t))."""
+    b, h, _ = states.shape
+    es = nn.dense_apply(params["embed_s"], states)
+    ea = nn.dense_apply(params["embed_a"], actions)
+    er = nn.dense_apply(params["embed_r"], rtg)
+    # interleave (r_t, s_t, a_t): (B, 3H, D)
+    x = jnp.stack([er, es, ea], axis=2).reshape(b, 3 * h, es.shape[-1])
+
+    def body(carry, p_l):
+        return minrnn_blocks.apply(p_l, block_cfg, carry), None
+
+    x, _ = lax.scan(body, x, params["blocks"])
+    x = nn.norm_apply(block_cfg.norm, params["final_norm"], x)
+    s_positions = x[:, 1::3]                   # outputs at the s_t tokens
+    return jnp.tanh(nn.dense_apply(params["head"], s_positions))
+
+
+def dt_loss(params, block_cfg, batch) -> Tuple[Array, Dict]:
+    pred = dt_apply(params, block_cfg, batch["states"], batch["actions"],
+                    batch["rtg"])
+    mse = jnp.mean((pred - batch["actions"]) ** 2)
+    return mse, {"loss": mse}

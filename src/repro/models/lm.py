@@ -1,0 +1,727 @@
+"""Decoder-only LM assembly for the whole architecture zoo.
+
+One model builder covers: dense GQA transformers (starcoder2, gemma,
+deepseek-67b, pixtral backbone), MLA+MoE (deepseek-v3), fine-grained MoE
+(deepseek-moe), SSD (mamba2), hybrid SSD+shared-attention (zamba2), and the
+paper's own minGRU/minLSTM LMs.  ``cfg.seq_mixer`` swaps any attention
+mixer for the paper's minRNN (DESIGN.md §5).
+
+Layers run under ``lax.scan`` over stacked parameters (cfg.scan_layers) so
+HLO size -- and dry-run compile time -- is O(1) in depth.  Every block kind
+provides a parallel form (train / prefill, returning per-layer caches) and
+a step form (decode, carrying caches).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import blocks as minrnn_blocks
+from repro.core import min_gru, min_lstm, nn
+from repro.distributed.act_sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssd as ssd_lib
+from repro.models.mlp import mlp_apply, mlp_init
+
+Array = jax.Array
+
+_MIN_CELLS = {"mingru": min_gru, "minlstm": min_lstm}
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = cfg.pdtype
+    k_embed, k_layers, k_out, k_front = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": {"table": nn.normal_init(
+            k_embed, (cfg.padded_vocab, cfg.d_model), 0.02, dtype)},
+        "final_norm": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = nn.dense_init(k_out, cfg.d_model,
+                                          cfg.padded_vocab,
+                                          use_bias=False, dtype=dtype)
+    if cfg.frontend == "patches":
+        params["patch_proj"] = nn.dense_init(
+            k_front, cfg.frontend_dim, cfg.d_model, use_bias=False,
+            dtype=dtype)
+    params["layers"] = _init_trunk(k_layers, cfg, dtype)
+    return params
+
+
+def _stack_init(init_one, keys):
+    return jax.vmap(init_one)(keys)
+
+
+def _init_trunk(key, cfg, dtype):
+    if cfg.block_kind == "hybrid":
+        return _init_hybrid(key, cfg, dtype)
+    if cfg.block_kind == "minrnn":
+        bc = _minrnn_block_cfg(cfg)
+        keys = jax.random.split(key, cfg.n_layers)
+        return {"blocks": _stack_init(
+            lambda k: minrnn_blocks.init(k, bc, dtype=dtype), keys)}
+    if cfg.block_kind == "ssm":
+        keys = jax.random.split(key, cfg.n_layers)
+        return {"blocks": _stack_init(
+            lambda k: _ssm_layer_init(k, cfg, dtype), keys)}
+    # attention trunk, possibly with a leading dense segment before MoE
+    n_dense_first = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_main = cfg.n_layers - n_dense_first
+    out = {}
+    if n_dense_first:
+        keys = jax.random.split(jax.random.fold_in(key, 1), n_dense_first)
+        out["dense_blocks"] = _stack_init(
+            lambda k: _attn_layer_init(k, cfg, dtype, force_dense=True), keys)
+    keys = jax.random.split(jax.random.fold_in(key, 2), n_main)
+    out["blocks"] = _stack_init(
+        lambda k: _attn_layer_init(k, cfg, dtype), keys)
+    return out
+
+
+def _minrnn_block_cfg(cfg):
+    mr = cfg.minrnn
+    return minrnn_blocks.MinRNNBlockConfig(
+        d_model=cfg.d_model, cell=mr.cell, expansion=mr.expansion,
+        use_conv=mr.use_conv, conv_kernel=mr.conv_kernel,
+        use_mlp=mr.use_mlp, mlp_factor=cfg.d_ff / cfg.d_model,
+        mode=mr.mode, norm=cfg.norm)
+
+
+def _mixer_init(key, cfg, dtype):
+    """The sequence mixer of an attention-style block."""
+    if cfg.seq_mixer in _MIN_CELLS:
+        cell = _MIN_CELLS[cfg.seq_mixer]
+        exp = cfg.minrnn.expansion if cfg.minrnn else 1.0
+        dh = int(cfg.d_model * exp)
+        k1, k2 = jax.random.split(key)
+        return {"rnn": cell.init(k1, cfg.d_model, dh, dtype=dtype),
+                "down": nn.dense_init(k2, dh, cfg.d_model, use_bias=False,
+                                      dtype=dtype)}
+    if cfg.attn_kind == "mla":
+        return attn.mla_init(key, cfg, dtype=dtype)
+    return attn.gqa_init(key, cfg, dtype=dtype)
+
+
+def _attn_layer_init(key, cfg, dtype, force_dense: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {
+        "norm1": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mixer": _mixer_init(ks[0], cfg, dtype),
+        "norm2": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.moe and not force_dense:
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype=dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                            gated=cfg.gated_mlp, bias=cfg.mlp_bias,
+                            dtype=dtype)
+    return p
+
+
+def _ssm_layer_init(key, cfg, dtype):
+    return {
+        "norm": nn.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mixer": ssd_lib.ssd_init(key, cfg, dtype=dtype),
+    }
+
+
+def _init_hybrid(key, cfg, dtype):
+    """zamba2: n_layers SSD blocks + ONE shared attention block applied
+    every ``hybrid_attn_every`` layers (params shared, activations not)."""
+    k1, k2 = jax.random.split(key)
+    keys = jax.random.split(k1, cfg.n_layers)
+    return {
+        "blocks": _stack_init(lambda k: _ssm_layer_init(k, cfg, dtype), keys),
+        "shared_attn": _attn_layer_init(k2, cfg, dtype, force_dense=True),
+    }
+
+
+# ===========================================================================
+# Block bodies (parallel form)
+# ===========================================================================
+
+def _remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _mixer_apply(p, cfg, x, positions):
+    if cfg.seq_mixer in _MIN_CELLS:
+        cell = _MIN_CELLS[cfg.seq_mixer]
+        mode = cfg.minrnn.mode if cfg.minrnn else "log"
+        h = cell.parallel(p["rnn"], x, mode=mode, compute_dtype=cfg.cdtype)
+        return nn.dense_apply(p["down"], h, cfg.cdtype)
+    if cfg.attn_kind == "mla":
+        return attn.mla_apply(p, cfg, x, positions=positions, causal=True)
+    return attn.gqa_apply(p, cfg, x, positions=positions, causal=True)
+
+
+def _attn_block_apply(p, cfg, x, positions, *, has_moe):
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    y = nn.norm_apply(cfg.norm, p["norm1"], x, **nk)
+    x = x + _mixer_apply(p["mixer"], cfg, y, positions)
+    y = nn.norm_apply(cfg.norm, p["norm2"], x, **nk)
+    if has_moe:
+        out, aux = moe_lib.moe_apply(p["moe"], cfg, y,
+                                     activation=cfg.mlp_activation)
+        return x + out, aux
+    out = mlp_apply(p["mlp"], y, activation=cfg.mlp_activation,
+                    compute_dtype=cfg.cdtype)
+    return x + out, jnp.zeros((), jnp.float32)
+
+
+def _ssm_block_apply(p, cfg, x):
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    y = nn.norm_apply(cfg.norm, p["norm"], x, **nk)
+    return x + ssd_lib.ssd_block_apply(p["mixer"], cfg, y)
+
+
+# ===========================================================================
+# Trunk (parallel): scan over stacked layer params
+# ===========================================================================
+
+def _trunk_apply(params, cfg, x, positions) -> Tuple[Array, Array]:
+    """Returns (x, aux_loss_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.block_kind == "minrnn":
+        bc = _minrnn_block_cfg(cfg)
+
+        def body(carry, p_l):
+            h = minrnn_blocks.apply(p_l, bc, carry, compute_dtype=cfg.cdtype)
+            return h, None
+
+        x, _ = _scan_layers(cfg, body, x, params["layers"]["blocks"])
+        return x, aux_total
+
+    if cfg.block_kind == "ssm":
+        def body(carry, p_l):
+            return _ssm_block_apply(p_l, cfg, carry), None
+
+        x, _ = _scan_layers(cfg, body, x, params["layers"]["blocks"])
+        return x, aux_total
+
+    if cfg.block_kind == "hybrid":
+        return _hybrid_apply(params, cfg, x, positions), aux_total
+
+    # attention trunk
+    layers = params["layers"]
+    if "dense_blocks" in layers:
+        def body_d(carry, p_l):
+            h, _ = _attn_block_apply(p_l, cfg, carry, positions,
+                                     has_moe=False)
+            return h, None
+
+        x, _ = _scan_layers(cfg, body_d, x, layers["dense_blocks"])
+
+    has_moe = cfg.moe is not None
+
+    def body(carry, p_l):
+        h, aux = _attn_block_apply(p_l, cfg, carry, positions,
+                                   has_moe=has_moe)
+        return h, aux
+
+    x, auxs = _scan_layers(cfg, body, x, layers["blocks"])
+    if auxs is not None:
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, aux_total
+
+
+def _iterate(cfg, body, x, scanned):
+    """lax.scan over stacked leaves, or an unrolled python loop when
+    cfg.scan_layers=False (the dry-run uses unrolled so cost_analysis
+    counts every layer -- XLA tallies a while-loop body only once)."""
+    if cfg.scan_layers:
+        return lax.scan(body, x, scanned)
+    n = jax.tree.leaves(scanned)[0].shape[0]
+    ys = []
+    for i in range(n):
+        sl = jax.tree.map(lambda a: a[i], scanned)
+        x, y = body(x, sl)
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def _scan_layers(cfg, body, x, stacked):
+    return _iterate(cfg, _remat(cfg, body), x, stacked)
+
+
+def _hybrid_apply(params, cfg, x, positions):
+    """zamba2 trunk: scan over groups of (every k SSD layers + shared attn)."""
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    blocks = params["layers"]["blocks"]
+    shared = params["layers"]["shared_attn"]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), blocks)
+
+    def group_body(carry, p_group):
+        def inner(c, p_l):
+            return _ssm_block_apply(p_l, cfg, c), None
+
+        h, _ = _iterate(cfg, inner, carry, p_group)
+        h, _ = _attn_block_apply(shared, cfg, h, positions, has_moe=False)
+        return h, None
+
+    x, _ = _iterate(cfg, _remat(cfg, group_body), x, grouped)
+    return x
+
+
+# ===========================================================================
+# Embedding / logits / forward / loss
+# ===========================================================================
+
+def _embed(params, cfg, tokens, patch_embeds=None):
+    x = params["embed"]["table"].astype(cfg.cdtype)[tokens]
+    x = constrain(x, "dp", None, None)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+    if cfg.frontend == "patches" and patch_embeds is not None:
+        pe = nn.dense_apply(params["patch_proj"], patch_embeds, cfg.cdtype)
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"].astype(cfg.cdtype)
+        logits = x @ table.T
+    else:
+        logits = nn.dense_apply(params["unembed"], x, cfg.cdtype)
+    if cfg.logits_softcap:
+        logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+    if cfg.padded_vocab != cfg.vocab_size:   # mask the pad columns
+        col = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward(params, cfg, tokens: Array, *, patch_embeds: Optional[Array] = None
+            ) -> Tuple[Array, Array]:
+    """tokens: (B, S) -> (logits (B, S*, V), aux_loss).  S* includes any
+    frontend prefix tokens."""
+    x = _embed(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = _trunk_apply(params, cfg, x, positions)
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    x = nn.norm_apply(cfg.norm, params["final_norm"], x, **nk)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+    """batch: tokens (B, S), labels (B, S) with -1 = ignore, optional
+    patch_embeds."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    logits, aux = forward(params, cfg, tokens,
+                          patch_embeds=batch.get("patch_embeds"))
+    if logits.shape[1] != labels.shape[1]:      # frontend prefix: drop it
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    logits = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+    mask = (labels >= 0).astype(jnp.float32)
+    safe_labels = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # gold logit via one-hot contraction: shards cleanly over a
+    # vocab-parallel logits tensor (take_along_axis would all-gather it)
+    col = jnp.arange(logits.shape[-1])
+    gold = jnp.sum(jnp.where(col == safe_labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    metrics = {"nll": loss, "ntokens": jnp.sum(mask)}
+    if cfg.z_loss:
+        zl = cfg.z_loss * jnp.sum((logz ** 2) * mask) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    if cfg.moe:
+        loss = loss + cfg.moe.router_aux_weight * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ===========================================================================
+# Decode: cache init / prefill / step
+# ===========================================================================
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
+    """Stacked per-layer caches + shared position counter."""
+    dt = cfg.cdtype
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    L = cfg.n_layers
+
+    if cfg.block_kind == "minrnn":
+        bc = _minrnn_block_cfg(cfg)
+        cache["h"] = jnp.zeros((L, batch, bc.d_hidden), dt)
+        if bc.use_conv:
+            cache["conv"] = jnp.zeros(
+                (L, batch, bc.conv_kernel - 1, cfg.d_model), dt)
+        return cache
+
+    if cfg.block_kind == "ssm":
+        s = cfg.ssm
+        cache["conv"] = jnp.zeros(
+            (L, batch, s.conv_kernel - 1,
+             s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state), dt)
+        cache["ssm"] = jnp.zeros(
+            (L, batch, s.n_heads(cfg.d_model), s.head_dim, s.d_state),
+            jnp.float32)
+        return cache
+
+    if cfg.block_kind == "hybrid":
+        s = cfg.ssm
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        cache["conv"] = jnp.zeros(
+            (L, batch, s.conv_kernel - 1,
+             s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state), dt)
+        cache["ssm"] = jnp.zeros(
+            (L, batch, s.n_heads(cfg.d_model), s.head_dim, s.d_state),
+            jnp.float32)
+        cache["k"] = jnp.zeros(
+            (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt)
+        cache["v"] = jnp.zeros_like(cache["k"])
+        return cache
+
+    # attention trunk
+    if cfg.seq_mixer in _MIN_CELLS:
+        exp = cfg.minrnn.expansion if cfg.minrnn else 1.0
+        cache["h"] = jnp.zeros((L, batch, int(cfg.d_model * exp)), dt)
+    elif cfg.attn_kind == "mla":
+        cache["ckv"] = jnp.zeros((L, batch, max_len, cfg.mla_kv_lora), dt)
+        cache["krope"] = jnp.zeros((L, batch, max_len, cfg.mla_rope_dim), dt)
+    else:
+        cache["k"] = jnp.zeros(
+            (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), dt)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+def decode_step(params, cfg, token: Array, cache: Dict[str, Any]
+                ) -> Tuple[Array, Dict[str, Any]]:
+    """token: (B,) -> (logits (B, V), new cache).  One step for every arch."""
+    pos = cache["pos"]
+    x = params["embed"]["table"].astype(cfg.cdtype)[token]
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+
+    new_cache = dict(cache)
+
+    if cfg.block_kind == "minrnn":
+        bc = _minrnn_block_cfg(cfg)
+
+        def body(carry, scanned):
+            p_l, cache_l = scanned
+            state = {"h": cache_l["h"]}
+            if bc.use_conv:
+                state["conv"] = cache_l["conv"]
+            y, state = minrnn_blocks.step(p_l, bc, carry, state,
+                                          compute_dtype=cfg.cdtype)
+            out_c = {"h": state["h"]}
+            if bc.use_conv:
+                out_c["conv"] = state["conv"]
+            return y, out_c
+
+        scanned = {"h": cache["h"]}
+        if bc.use_conv:
+            scanned["conv"] = cache["conv"]
+        x, outs = _iterate(cfg, body, x,
+                           (params["layers"]["blocks"], scanned))
+        new_cache.update(outs)
+
+    elif cfg.block_kind == "ssm":
+        def body(carry, scanned):
+            p_l, cache_l = scanned
+            y = nn.norm_apply(cfg.norm, p_l["norm"], carry)
+            out, state = ssd_lib.ssd_block_step(
+                p_l["mixer"], cfg, y,
+                {"conv": cache_l["conv"], "ssm": cache_l["ssm"]})
+            return carry + out, state
+
+        scanned = {"conv": cache["conv"], "ssm": cache["ssm"]}
+        x, outs = _iterate(cfg, body, x,
+                           (params["layers"]["blocks"], scanned))
+        new_cache.update(outs)
+
+    elif cfg.block_kind == "hybrid":
+        x, outs = _hybrid_decode(params, cfg, x, cache)
+        new_cache.update(outs)
+
+    else:
+        x, outs = _attn_decode(params, cfg, x, cache)
+        new_cache.update(outs)
+
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    x = nn.norm_apply(cfg.norm, params["final_norm"], x, **nk)
+    logits = _logits(params, cfg, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def _attn_mixer_step(p, cfg, y, cache_l, pos):
+    """Single-token mixer with cache. Returns (out, new mixer cache dict)."""
+    if cfg.seq_mixer in _MIN_CELLS:
+        cell = _MIN_CELLS[cfg.seq_mixer]
+        mode = cfg.minrnn.mode if cfg.minrnn else "log"
+        h = cell.step(p["rnn"], y, cache_l["h"], mode=mode,
+                      compute_dtype=cfg.cdtype)
+        return nn.dense_apply(p["down"], h, cfg.cdtype), {"h": h}
+    if cfg.attn_kind == "mla":
+        out, ckv, krope = attn.mla_decode_step(p, cfg, y, cache_l["ckv"],
+                                               cache_l["krope"], pos)
+        return out, {"ckv": ckv, "krope": krope}
+    out, k, v = attn.gqa_decode_step(p, cfg, y, cache_l["k"], cache_l["v"],
+                                     pos)
+    return out, {"k": k, "v": v}
+
+
+def _attn_block_step(p, cfg, x, cache_l, pos, *, has_moe):
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    y = nn.norm_apply(cfg.norm, p["norm1"], x, **nk)
+    out, mix_cache = _attn_mixer_step(p["mixer"], cfg, y, cache_l, pos)
+    x = x + out
+    y = nn.norm_apply(cfg.norm, p["norm2"], x, **nk)
+    if has_moe:
+        out, _ = moe_lib.moe_apply(p["moe"], cfg, y[:, None, :],
+                                   activation=cfg.mlp_activation)
+        out = out[:, 0]
+    else:
+        out = mlp_apply(p["mlp"], y, activation=cfg.mlp_activation,
+                        compute_dtype=cfg.cdtype)
+    return x + out, mix_cache
+
+
+def _attn_decode(params, cfg, x, cache):
+    pos = cache["pos"]
+    layers = params["layers"]
+    mixer_keys = [k for k in ("h", "ckv", "krope", "k", "v") if k in cache]
+
+    n_dense = 0
+    if "dense_blocks" in layers:
+        n_dense = jax.tree.leaves(layers["dense_blocks"])[0].shape[0]
+
+        def body_d(carry, scanned):
+            p_l, cache_l = scanned
+            y, mc = _attn_block_step(p_l, cfg, carry, cache_l, pos,
+                                     has_moe=False)
+            return y, mc
+
+        sub = {k: cache[k][:n_dense] for k in mixer_keys}
+        x, outs_d = _iterate(cfg, body_d, x, (layers["dense_blocks"], sub))
+    has_moe = cfg.moe is not None
+
+    def body(carry, scanned):
+        p_l, cache_l = scanned
+        y, mc = _attn_block_step(p_l, cfg, carry, cache_l, pos,
+                                 has_moe=has_moe)
+        return y, mc
+
+    sub = {k: cache[k][n_dense:] for k in mixer_keys}
+    x, outs = _iterate(cfg, body, x, (layers["blocks"], sub))
+    if n_dense:
+        outs = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                            outs_d, outs)
+    return x, outs
+
+
+def _hybrid_decode(params, cfg, x, cache):
+    pos = cache["pos"]
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    blocks = params["layers"]["blocks"]
+    shared = params["layers"]["shared_attn"]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), blocks)
+    g_conv = cache["conv"].reshape((n_groups, every) + cache["conv"].shape[1:])
+    g_ssm = cache["ssm"].reshape((n_groups, every) + cache["ssm"].shape[1:])
+
+    def group_body(carry, scanned):
+        p_group, conv_g, ssm_g, k_g, v_g = scanned
+
+        def inner(c, s):
+            p_l, conv_l, ssm_l = s
+            y = nn.norm_apply(cfg.norm, p_l["norm"], c)
+            out, state = ssd_lib.ssd_block_step(
+                p_l["mixer"], cfg, y, {"conv": conv_l, "ssm": ssm_l})
+            return c + out, (state["conv"], state["ssm"])
+
+        h, (conv_new, ssm_new) = _iterate(cfg, inner, carry,
+                                          (p_group, conv_g, ssm_g))
+        h, mc = _attn_block_step(shared, cfg, h, {"k": k_g, "v": v_g}, pos,
+                                 has_moe=False)
+        return h, (conv_new, ssm_new, mc["k"], mc["v"])
+
+    x, (conv_new, ssm_new, k_new, v_new) = _iterate(
+        cfg, group_body, x,
+        (grouped, g_conv, g_ssm, cache["k"], cache["v"]))
+    return x, {
+        "conv": conv_new.reshape(cache["conv"].shape),
+        "ssm": ssm_new.reshape(cache["ssm"].shape),
+        "k": k_new, "v": v_new,
+    }
+
+
+# ===========================================================================
+# Prefill: parallel pass over the prompt that seeds the decode caches
+# ===========================================================================
+
+def _attn_block_prefill(p, cfg, x, positions, *, has_moe):
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    y = nn.norm_apply(cfg.norm, p["norm1"], x, **nk)
+    if cfg.seq_mixer in _MIN_CELLS:
+        cell = _MIN_CELLS[cfg.seq_mixer]
+        mode = cfg.minrnn.mode if cfg.minrnn else "log"
+        h = cell.parallel(p["mixer"]["rnn"], y, mode=mode,
+                          compute_dtype=cfg.cdtype)
+        out = nn.dense_apply(p["mixer"]["down"], h, cfg.cdtype)
+        mix_cache = {"h": h[:, -1]}
+    elif cfg.attn_kind == "mla":
+        out, ckv, krope = attn.mla_prefill(p["mixer"], cfg, y,
+                                           positions=positions)
+        mix_cache = {"ckv": ckv, "krope": krope}
+    else:
+        out, k, v = attn.gqa_prefill(p["mixer"], cfg, y, positions=positions)
+        mix_cache = {"k": k, "v": v}
+    x = x + out
+    y = nn.norm_apply(cfg.norm, p["norm2"], x, **nk)
+    if has_moe:
+        out, _ = moe_lib.moe_apply(p["moe"], cfg, y,
+                                   activation=cfg.mlp_activation)
+    else:
+        out = mlp_apply(p["mlp"], y, activation=cfg.mlp_activation,
+                        compute_dtype=cfg.cdtype)
+    return x + out, mix_cache
+
+
+def _seed_kv(full, max_len):
+    """(L, B, T, ...) prompt kv -> (L, B, max_len, ...) zero-padded cache."""
+    t = full.shape[2]
+    pad = [(0, 0)] * full.ndim
+    pad[2] = (0, max_len - t)
+    return jnp.pad(full, pad)
+
+
+def prefill(params, cfg, tokens: Array, max_len: int, *,
+            patch_embeds: Optional[Array] = None
+            ) -> Tuple[Array, Dict[str, Any]]:
+    """Parallel prompt processing.  Returns (last-token logits (B, V), cache
+    ready for decode_step).  This is the paper's headline win: the prompt is
+    one parallel scan, not T sequential cell evaluations."""
+    x = _embed(params, cfg, tokens, patch_embeds)
+    bsz, t = x.shape[0], x.shape[1]
+    positions = jnp.arange(t)[None, :]
+    cache: Dict[str, Any] = {"pos": jnp.full((bsz,), t, jnp.int32)}
+
+    if cfg.block_kind == "minrnn":
+        bc = _minrnn_block_cfg(cfg)
+
+        def body(carry, p_l):
+            h, state = minrnn_blocks.apply(p_l, bc, carry,
+                                           compute_dtype=cfg.cdtype,
+                                           return_state=True)
+            return h, state
+
+        x, states = _scan_layers(cfg, body, x, params["layers"]["blocks"])
+        cache["h"] = states["h"]
+        if bc.use_conv:
+            cache["conv"] = states["conv"]
+
+    elif cfg.block_kind == "ssm":
+        def body(carry, p_l):
+            nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+            y = nn.norm_apply(cfg.norm, p_l["norm"], carry, **nk)
+            out, state = ssd_lib.ssd_block_apply(p_l["mixer"], cfg, y,
+                                                 return_state=True)
+            return carry + out, state
+
+        x, states = _scan_layers(cfg, body, x, params["layers"]["blocks"])
+        cache["conv"] = states["conv"]
+        cache["ssm"] = states["ssm"]
+
+    elif cfg.block_kind == "hybrid":
+        x, cache_h = _hybrid_prefill(params, cfg, x, positions, max_len)
+        cache.update(cache_h)
+
+    else:
+        layers = params["layers"]
+        has_moe = cfg.moe is not None
+        mix_caches = []
+
+        if "dense_blocks" in layers:
+            def body_d(carry, p_l):
+                return _attn_block_prefill(p_l, cfg, carry, positions,
+                                           has_moe=False)
+
+            x, mc_d = _scan_layers(cfg, body_d, x, layers["dense_blocks"])
+            mix_caches.append(mc_d)
+
+        def body(carry, p_l):
+            return _attn_block_prefill(p_l, cfg, carry, positions,
+                                       has_moe=has_moe)
+
+        x, mc = _scan_layers(cfg, body, x, layers["blocks"])
+        mix_caches.append(mc)
+        if len(mix_caches) == 2:
+            mc = jax.tree.map(lambda a, b: jnp.concatenate([a, b]),
+                              mix_caches[0], mix_caches[1])
+        else:
+            mc = mix_caches[0]
+        if "h" in mc:
+            cache["h"] = mc["h"]
+        elif "ckv" in mc:
+            cache["ckv"] = _seed_kv(mc["ckv"], max_len)
+            cache["krope"] = _seed_kv(mc["krope"], max_len)
+        else:
+            cache["k"] = _seed_kv(mc["k"], max_len)
+            cache["v"] = _seed_kv(mc["v"], max_len)
+
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    x_last = nn.norm_apply(cfg.norm, params["final_norm"], x[:, -1], **nk)
+    return _logits(params, cfg, x_last), cache
+
+
+def _hybrid_prefill(params, cfg, x, positions, max_len):
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    blocks = params["layers"]["blocks"]
+    shared = params["layers"]["shared_attn"]
+    grouped = jax.tree.map(
+        lambda a: a.reshape((n_groups, every) + a.shape[1:]), blocks)
+
+    def group_body(carry, p_group):
+        def inner(c, p_l):
+            nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+            y = nn.norm_apply(cfg.norm, p_l["norm"], c, **nk)
+            out, state = ssd_lib.ssd_block_apply(p_l["mixer"], cfg, y,
+                                                 return_state=True)
+            return c + out, state
+
+        h, states = _iterate(cfg, inner, carry, p_group)
+        h, mc = _attn_block_prefill(shared, cfg, h, positions, has_moe=False)
+        return h, (states, mc)
+
+    x, (states, mc) = _iterate(cfg, _remat(cfg, group_body), x, grouped)
+    conv = states["conv"].reshape((-1,) + states["conv"].shape[2:])
+    ssm = states["ssm"].reshape((-1,) + states["ssm"].shape[2:])
+    return x, {"conv": conv, "ssm": ssm,
+               "k": _seed_kv(mc["k"], max_len),
+               "v": _seed_kv(mc["v"], max_len)}

@@ -1,0 +1,42 @@
+"""MLP variants: plain (starcoder2), GeGLU (gemma), SwiGLU (llama family)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn
+
+Array = jax.Array
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool, bias: bool = False,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": nn.dense_init(ks[0], d_model, d_ff, use_bias=bias, dtype=dtype),
+        "down": nn.dense_init(ks[1], d_ff, d_model, use_bias=bias,
+                              dtype=dtype),
+    }
+    if gated:
+        p["gate"] = nn.dense_init(ks[2], d_model, d_ff, use_bias=bias,
+                                  dtype=dtype)
+    return p
+
+
+def mlp_apply(params, x: Array, *, activation: str = "silu",
+              compute_dtype=None) -> Array:
+    act = nn.ACTIVATIONS[activation]
+    up = nn.dense_apply(params["up"], x, compute_dtype)
+    if "gate" in params:
+        gate = nn.dense_apply(params["gate"], x, compute_dtype)
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return nn.dense_apply(params["down"], h, compute_dtype)
+
+
+def mlp_flops(d_model: int, d_ff: int, gated: bool) -> int:
+    """Matmul FLOPs per token (forward)."""
+    n_mats = 3 if gated else 2
+    return 2 * n_mats * d_model * d_ff

@@ -1,0 +1,215 @@
+"""Mixture-of-Experts layer (deepseek-moe-16b / deepseek-v3-671b).
+
+Expert parallelism maps experts onto the ``model`` mesh axis with activations
+replicated across it (Megatron-style TP semantics): inside a shard_map each
+model-rank routes the full local token shard, processes only its E/TP
+experts with capacity-bounded scatter dispatch, and a single psum over
+``model`` combines contributions -- the only collective the layer needs
+(same bytes as one TP all-reduce; see EXPERIMENTS.md §Roofline).
+
+Dispatch is scatter-based (GShard-style one-hot cumsum positions) but
+iterates the top-k assignments one slot at a time so the transient gather
+buffer is (N, d), not (N*k, d) -- at deepseek-v3 scale that is the
+difference between 0.9 GB and 7.5 GB per device per layer.
+
+The no-mesh path runs the identical body with one expert group, so EP
+correctness is testable on a single device.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import nn
+from repro.distributed import context as mesh_ctx
+
+Array = jax.Array
+
+
+def moe_init(key, cfg, *, dtype=jnp.float32):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": nn.dense_init(ks[0], d, m.n_experts, use_bias=False,
+                                dtype=jnp.float32),   # router kept fp32
+        "gate_w": _expert_init(ks[1], m.n_experts, d, m.d_expert, dtype),
+        "up_w": _expert_init(ks[2], m.n_experts, d, m.d_expert, dtype),
+        "down_w": _expert_init(ks[3], m.n_experts, m.d_expert, d, dtype),
+    }
+    if m.n_shared:
+        from repro.models.mlp import mlp_init
+        p["shared"] = mlp_init(ks[4], d, m.d_shared, gated=True, dtype=dtype)
+    return p
+
+
+def _expert_init(key, e, d_in, d_out, dtype):
+    import math
+    std = math.sqrt(1.0 / d_in)
+    return {"kernel": (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (e, d_in, d_out))).astype(dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Expert-group body (runs per model-rank under shard_map, or standalone)
+# ---------------------------------------------------------------------------
+
+def _moe_body(router_w, gate_w, up_w, down_w, x, *, cfg, n_local: int,
+              e_offset, activation: str, psum_axis: Optional[str],
+              dp_axes: Tuple[str, ...], fsdp_axis: Optional[str] = None):
+    """x: (N, d) local tokens; expert weights are this rank's shard."""
+    m = cfg.moe
+    n, d = x.shape
+    k = m.top_k
+    cap = max(1, int(m.capacity_factor * n * k / m.n_experts))
+
+    logits = (x.astype(jnp.float32) @ router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    topk_p, topk_i = lax.top_k(probs, k)                       # (N, k)
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)  # renormalize
+    topk_p = topk_p.astype(x.dtype)
+
+    # --- auxiliary load-balance loss (computed on the full router) ---------
+    # pmean the per-expert statistics over dp FIRST so the EP aux equals
+    # the single-device (global-batch) computation exactly
+    f_e = jnp.mean(jnp.sum(jax.nn.one_hot(topk_i, m.n_experts), axis=1),
+                   axis=0)                                     # (E,)
+    p_e = jnp.mean(probs, axis=0)
+    if psum_axis is not None and dp_axes:
+        f_e = lax.pmean(f_e, dp_axes)
+        p_e = lax.pmean(p_e, dp_axes)
+    aux = m.n_experts * jnp.sum(f_e * p_e) / k
+
+    # --- dispatch: one top-k slot at a time ---------------------------------
+    local_i = topk_i - e_offset                                # (N, k)
+    is_local = (local_i >= 0) & (local_i < n_local)
+    safe_i = jnp.where(is_local, local_i, n_local)             # junk bucket
+    # position of each assignment inside its expert, counted over (slot, token)
+    onehot = jax.nn.one_hot(safe_i, n_local + 1, dtype=jnp.int32)  # (N,k,E+1)
+    flat_oh = onehot.reshape(n * k, n_local + 1)
+    pos = (jnp.cumsum(flat_oh, axis=0) * flat_oh).sum(-1).reshape(n, k) - 1
+    keep = is_local & (pos < cap)
+    dump_e = jnp.where(keep, safe_i, n_local)                  # junk expert
+    dump_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((n_local + 1, cap, d), x.dtype)
+    for slot in range(k):
+        buf = buf.at[dump_e[:, slot], dump_c[:, slot]].add(
+            jnp.where(keep[:, slot, None], x, 0))
+    buf = buf[:n_local]                                        # drop junk
+
+    # --- expert FFN (batched over the local expert group, MXU) -------------
+    # fsdp_axis set => 2D expert parallelism: weights stay sharded over
+    # (expert=model, d=data); each data-rank contracts its d-slice and the
+    # (E_l, cap, f)-sized partials are psum'd -- activation-sized
+    # collectives instead of re-gathering the weights every call (the
+    # gather was 1.4 GB/layer vs 168 MB of activations at deepseek-v3
+    # train, and catastrophic at decode -- EXPERIMENTS.md §Perf).
+    act = nn.ACTIVATIONS[activation]
+    gw = gate_w.astype(x.dtype)
+    uw = up_w.astype(x.dtype)
+    dw = down_w.astype(x.dtype)
+    if fsdp_axis is not None:
+        # all-to-all transpose: (E_l, C_local, d) batch-sharded rows ->
+        # (E_l, C_local*Dd, d/Dd) -- every data-rank sees ALL dispatched
+        # rows but only its d-slice, matching the weight sharding
+        buf2 = lax.all_to_all(buf, fsdp_axis, split_axis=2, concat_axis=1,
+                              tiled=True)
+        gate_h = lax.psum(jnp.einsum("ecd,edf->ecf", buf2, gw), fsdp_axis)
+        up_h = lax.psum(jnp.einsum("ecd,edf->ecf", buf2, uw), fsdp_axis)
+        h = act(gate_h) * up_h
+        out_slice = jnp.einsum("ecf,efd->ecd", h, dw)  # (E_l, C*Dd, d/Dd)
+        out_buf = lax.all_to_all(out_slice, fsdp_axis, split_axis=1,
+                                 concat_axis=2, tiled=True)
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", buf, gw)) * \
+            jnp.einsum("ecd,edf->ecf", buf, uw)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, dw)            # (E_l, cap, d)
+
+    # --- combine ------------------------------------------------------------
+    y = jnp.zeros((n, d), x.dtype)
+    for slot in range(k):
+        rows = out_buf[jnp.where(keep[:, slot], safe_i[:, slot], 0),
+                       dump_c[:, slot]]
+        y = y + jnp.where(keep[:, slot, None],
+                          rows * topk_p[:, slot, None], 0)
+    if psum_axis is not None:
+        y = lax.psum(y, psum_axis)
+    return y, aux
+
+
+def moe_apply(params, cfg, x: Array, *, activation: str = "silu"
+              ) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).  EP over the mesh 'model' axis."""
+    m = cfg.moe
+    bsz, s, d = x.shape
+    mesh = mesh_ctx.current_mesh()
+    ep = mesh_ctx.axis_size(mesh, "model")
+    use_ep = (ep > 1 and m.n_experts % ep == 0
+              and not mesh_ctx.pure_dp())
+
+    router_w = params["router"]["kernel"]
+
+    if not use_ep:
+        y, aux = _moe_body(router_w, params["gate_w"]["kernel"],
+                           params["up_w"]["kernel"],
+                           params["down_w"]["kernel"],
+                           x.reshape(-1, d), cfg=cfg,
+                           n_local=m.n_experts, e_offset=0,
+                           activation=activation, psum_axis=None, dp_axes=())
+        y = y.reshape(bsz, s, d)
+    else:
+        dp = mesh_ctx.dp_axes(mesh)
+        n_local = m.n_experts // ep
+        # 2D EP when the fsdp axis divides d: expert weights stay sharded
+        # (expert -> model, d -> data); never re-gathered.  "auto" enables
+        # it when the dispatched-row all-to-all is cheaper than the weight
+        # gather -- empirically cap*4 < d_expert (decode: cap ~ 1; train at
+        # 1M tokens: cap ~ 1280 where the gather wins; §Perf D)
+        d_size = mesh_ctx.axis_size(mesh, "data")
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        n_tok = max(1, bsz * s // dp_size)    # tokens per rank
+        cap_est = max(1, int(m.capacity_factor * n_tok * m.top_k
+                             / m.n_experts))
+        if m.ep_2d == "on":
+            want_2d = True
+        elif m.ep_2d == "off":
+            want_2d = False
+        else:
+            want_2d = cap_est * 4 < m.d_expert
+        use_2d = (want_2d and d_size > 1 and d % d_size == 0)
+        fsdp_axis = "data" if use_2d else None
+        gw_spec = P("model", "data" if use_2d else None, None)
+        dw_spec = P("model", None, "data" if use_2d else None)
+
+        def body(router_w, gw, uw, dw, x_loc):
+            n_loc = x_loc.shape[0] * x_loc.shape[1]
+            e_off = lax.axis_index("model") * n_local
+            y, aux = _moe_body(router_w, gw, uw, dw,
+                               x_loc.reshape(n_loc, d), cfg=cfg,
+                               n_local=n_local, e_offset=e_off,
+                               activation=activation, psum_axis="model",
+                               dp_axes=dp, fsdp_axis=fsdp_axis)
+            return y.reshape(x_loc.shape), aux
+
+        y, aux = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), gw_spec, gw_spec, dw_spec,
+                      P(dp, None, None)),
+            out_specs=(P(dp, None, None), P()),
+        )(router_w, params["gate_w"]["kernel"], params["up_w"]["kernel"],
+          params["down_w"]["kernel"], x)
+
+    if m.n_shared:
+        from repro.models.mlp import mlp_apply
+        y = y + mlp_apply(params["shared"], x, activation=activation,
+                          compute_dtype=cfg.cdtype)
+    return y, aux

@@ -1,0 +1,308 @@
+"""Mamba2 / SSD (state-space duality) sequence mixer.
+
+The SSD recurrence is the matrix-valued generalization of the paper's
+minGRU recurrence:
+
+    H_t = a_t * H_{t-1} + dt_t * B_t (x) x_t        H: (heads, hd, d_state)
+    y_t = C_t . H_t + D * x_t
+
+with scalar-per-head decay a_t = exp(-softplus-free A * dt_t).  Training
+uses the chunked dual form (Dao & Gu 2024) adapted to the TPU MXU: the
+intra-chunk part is (C B^T ⊙ decay-mask) @ X -- attention-like matmuls --
+and the inter-chunk part is exactly the paper's linear scan over the chunk
+states, reusing ``repro.core.scan`` (DESIGN.md §5: mamba2 is scan-family).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import nn
+from repro.core import scan as scan_lib
+
+Array = jax.Array
+
+
+def ssd_init(key, cfg, *, dtype=jnp.float32):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nh
+    p = {
+        "in_proj": nn.dense_init(ks[0], d, proj_out, use_bias=False,
+                                 dtype=dtype),
+        "conv": nn.causal_conv_init(
+            ks[1], d_in + 2 * s.n_groups * s.d_state, s.conv_kernel, dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[2], (nh,), minval=math.log(1e-3), maxval=math.log(1e-1))))
+        ).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": nn.rmsnorm_init(d_in, dtype),
+        "out_proj": nn.dense_init(ks[3], d_in, d, use_bias=False,
+                                  dtype=dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, zxbcdt: Array):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    gs = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    b = zxbcdt[..., 2 * d_in:2 * d_in + gs]
+    c = zxbcdt[..., 2 * d_in + gs:2 * d_in + 2 * gs]
+    dt = zxbcdt[..., 2 * d_in + 2 * gs:]
+    return z, x, b, c, dt
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                d_skip: Array, chunk: int, return_state: bool = False,
+                form: str = "masked"):
+    """Chunked SSD.
+
+    x:  (B, T, H, P)   heads x head_dim
+    dt: (B, T, H)      softplus-ed step sizes
+    b, c: (B, T, G, N) groups broadcast over heads
+    returns y: (B, T, H, P)
+    """
+    bsz, t, h, p = x.shape
+    g, n = b.shape[-2], b.shape[-1]
+    rep = h // g
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = x.shape[1]
+    nc = tt // chunk
+
+    # log decay per step: log a_t = -exp(a_log) * dt
+    log_a = (-jnp.exp(a_log)[None, None, :] * dt).astype(jnp.float32)
+
+    def ch(v):      # (B, T, ...) -> (B, nc, L, ...)
+        return v.reshape((bsz, nc, chunk) + v.shape[2:])
+
+    xc, dtc, bc, cc = ch(x), ch(dt), ch(b), ch(c)
+    lac = ch(log_a)                                   # (B, nc, L, H)
+    cum = jnp.cumsum(lac, axis=2)                     # within-chunk cumsum
+    total = cum[:, :, -1]                             # (B, nc, H)
+    xdt = xc * dtc[..., None]                         # (B,nc,L,H,P)
+
+    if form == "masked":
+        # ---- intra-chunk, masked dual form (Dao & Gu 2024 as published) --
+        # M[i,j] = exp(cum[i] - cum[j]) for i >= j  (segment decay)
+        # materializes (B,nc,L,L,H) fp32 -- the baseline's memory hot spot
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+        ii = jnp.arange(chunk)
+        causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+        # double-where: exp(seg>0) on the masked triangle overflows and its
+        # inf cotangent x 0 poisons training with NaNs (seen at fig2 step
+        # ~150); clamp inside the mask so the gradient path stays finite
+        m = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        cb = jnp.einsum("bclgn,bcsgn->bclsg", cc, bc)     # (B,nc,L,L,G)
+        cb = jnp.repeat(cb, rep, axis=-1)                 # -> heads
+        y_intra = jnp.einsum("bclsh,bclsh,bcshp->bclhp",
+                             cb, m.astype(cb.dtype), xdt)
+    elif form == "compact":
+        # ---- compact masked form (beyond-paper; EXPERIMENTS.md §Perf) ----
+        # identical math; minimizes traffic over the (B,nc,L,L,H) weight:
+        #   * ONE dtype cast on the small (B,nc,L,H) cum tensor, so every
+        #     (L,L,H)-sized op runs in the compute dtype (bf16 at scale);
+        #   * the causal mask is folded into the (L,L,G) CB^T tensor BEFORE
+        #     the head broadcast (an (L,L,H) select never exists);
+        #   * chain on (L,L,H): sub -> exp -> mul = 3 ops + the dot read,
+        #     vs the baseline's f32 seg/exp/select/mul/convert chain.
+        # (A clamped *factored* variant -- no (L,L,H) tensor at all -- was
+        # tried first and REFUTED: with per-chunk decay > e^30 the
+        # near-diagonal terms, whose true factor is ~1, lose all precision.
+        # See §Perf iteration log.)
+        cdt = x.dtype
+        cum16 = cum.astype(cdt)
+        ii = jnp.arange(chunk)
+        causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+        cb = jnp.einsum("bclgn,bcsgn->bclsg", cc, bc)     # (B,nc,L,L,G)
+        cb = jnp.where(causal, cb, 0.0)                   # mask pre-repeat
+        seg = cum16[:, :, :, None, :] - cum16[:, :, None, :, :]
+        # exp(seg) on the upper triangle can overflow (seg > 0 is masked
+        # out by cb=0 anyway): clamp at 0 -- true decays are always <= 0
+        w = jnp.exp(jnp.minimum(seg, 0)) * (
+            jnp.repeat(cb, rep, axis=-1) if rep > 1 else cb)
+        y_intra = jnp.einsum("bclsh,bcshp->bclhp", w, xdt.astype(cdt))
+    else:
+        raise ValueError(f"unknown SSD dual form {form!r}")
+
+    # ---- chunk states ------------------------------------------------------
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)    # (B,nc,L,H)
+    if form == "compact":
+        # group-space contraction: never materialize the (B,nc,L,H,N)
+        # head-repeated b/c (20x the group tensor at mamba2's g=1, H=32) --
+        # EXPERIMENTS.md §Perf iteration 4
+        v_g = (xdt * decay_to_end[..., None]).reshape(
+            (bsz, nc, chunk, g, rep, p))
+        states = jnp.einsum("bcsgn,bcsgrp->bcgrpn", bc, v_g)
+        states = states.reshape(bsz, nc, h, p, n)
+    else:
+        b_heads = jnp.repeat(bc, rep, axis=-2) if rep > 1 else bc
+        states = jnp.einsum("bcshn,bcshp->bchpn",
+                            b_heads, xdt * decay_to_end[..., None])
+
+    # ---- inter-chunk: the paper's linear scan over chunk states -----------
+    a_chunk = jnp.exp(total)                              # (B, nc, H)
+    flat_states = states.reshape(bsz, nc, h * p * n)
+    a_bc = jnp.repeat(a_chunk, p * n, axis=-1)
+    carried = scan_lib.scan_associative(a_bc, flat_states, axis=-2)
+    carried = carried.reshape(bsz, nc, h, p, n)
+    final_state = carried[:, -1]                          # (B, H, P, N)
+    prev = jnp.concatenate(
+        [jnp.zeros_like(carried[:, :1]), carried[:, :-1]], axis=1)
+
+    # ---- inter-chunk contribution ------------------------------------------
+    if form == "compact":
+        prev_g = prev.reshape(bsz, nc, g, rep, p, n)
+        y_inter = jnp.einsum("bclgn,bcgrpn->bclgrp", cc, prev_g
+                             ).reshape(bsz, nc, chunk, h, p)
+        y_inter = y_inter * jnp.exp(cum)[..., None].astype(y_inter.dtype)
+    else:
+        c_heads = jnp.repeat(cc, rep, axis=-2) if rep > 1 else cc
+        y_inter = jnp.einsum("bclhn,bchpn->bclhp", c_heads, prev) * \
+            jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, tt, h, p)[:, :t]
+    y = y + x[:, :t] * d_skip[None, None, :, None].astype(x.dtype)
+    if return_state:
+        # padding is inert (a=1, update=0), so the last carried chunk state
+        # is exactly the state after position t-1
+        return y, final_state
+    return y
+
+
+def ssd_sequential(x, dt, a_log, b, c, d_skip,
+                   h0: Optional[Array] = None):
+    """Sequential reference (oracle + decode roll-out). Shapes as above."""
+    bsz, t, h, p = x.shape
+    g, n = b.shape[-2], b.shape[-1]
+    rep = h // g
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        y_t, state = ssd_step(x_t, dt_t, a_log, b_t, c_t, d_skip, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def ssd_step(x_t, dt_t, a_log, b_t, c_t, d_skip, state):
+    """One decode step.  x_t: (B,H,P); b_t,c_t: (B,G,N); state: (B,H,P,N)."""
+    h, p = x_t.shape[-2:]
+    g = b_t.shape[-2]
+    rep = h // g
+    a_t = jnp.exp(-jnp.exp(a_log) * dt_t)                 # (B, H)
+    b_heads = jnp.repeat(b_t, rep, axis=-2)               # (B, H, N)
+    c_heads = jnp.repeat(c_t, rep, axis=-2)
+    upd = (dt_t[..., None] * x_t)[..., None] * b_heads[..., None, :]
+    state = a_t[..., None, None] * state + upd.astype(state.dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", state.astype(x_t.dtype), c_heads)
+    return y + x_t * d_skip[None, :, None].astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def ssd_block_apply(params, cfg, u: Array, *, chunk: Optional[int] = None,
+                    return_state: bool = False):
+    """u: (B, T, d_model) -> (B, T, d_model) [, decode state]."""
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    cd = cfg.cdtype
+    zxbcdt = nn.dense_apply(params["in_proj"], u, cd)
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    conv_state = None
+    if return_state:
+        kk = s.conv_kernel - 1
+        pad = max(kk - xbc.shape[-2], 0)
+        win = xbc[..., -kk:, :]
+        if pad:
+            win = jnp.concatenate(
+                [jnp.zeros(xbc.shape[:-2] + (pad, xbc.shape[-1]), xbc.dtype),
+                 win], axis=-2)
+        conv_state = win
+    xbc = jax.nn.silu(nn.causal_conv_apply(params["conv"], xbc))
+    x, b, c = (xbc[..., :d_in],
+               xbc[..., d_in:d_in + s.n_groups * s.d_state],
+               xbc[..., d_in + s.n_groups * s.d_state:])
+    bsz, t, _ = x.shape
+    x = x.reshape(bsz, t, nh, s.head_dim)
+    b = b.reshape(bsz, t, s.n_groups, s.d_state)
+    c = c.reshape(bsz, t, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    out = ssd_chunked(x, dt, params["a_log"], b, c, params["d_skip"],
+                      chunk or s.chunk, return_state=return_state,
+                      form=s.dual_form)
+    if return_state:
+        y, ssm_state = out
+    else:
+        y = out
+    y = y.reshape(bsz, t, d_in)
+    y = nn.rmsnorm_apply(params["out_norm"], y * jax.nn.silu(z))
+    y = nn.dense_apply(params["out_proj"], y, cd)
+    if return_state:
+        return y, {"conv": conv_state, "ssm": ssm_state}
+    return y
+
+
+def ssd_block_init_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1,
+                           d_in + 2 * s.n_groups * s.d_state), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssd_block_step(params, cfg, u_t: Array, state):
+    """u_t: (B, d_model) single-token decode."""
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    cd = cfg.cdtype
+    zxbcdt = nn.dense_apply(params["in_proj"], u_t, cd)
+    z, x, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, b, c], axis=-1)
+    xbc, conv_state = nn.causal_conv_step(params["conv"], xbc, state["conv"])
+    xbc = jax.nn.silu(xbc)
+    x, b, c = (xbc[..., :d_in],
+               xbc[..., d_in:d_in + s.n_groups * s.d_state],
+               xbc[..., d_in + s.n_groups * s.d_state:])
+    bsz = x.shape[0]
+    x = x.reshape(bsz, nh, s.head_dim)
+    b = b.reshape(bsz, s.n_groups, s.d_state)
+    c = c.reshape(bsz, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])
+    y, ssm_state = ssd_step(x, dt, params["a_log"], b, c, params["d_skip"],
+                            state["ssm"])
+    y = y.reshape(bsz, d_in)
+    y = nn.rmsnorm_apply(params["out_norm"], y * jax.nn.silu(z))
+    out = nn.dense_apply(params["out_proj"], y, cd)
+    return out, {"conv": conv_state, "ssm": ssm_state}

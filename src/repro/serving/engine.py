@@ -1,0 +1,143 @@
+"""Batched serving engine: parallel-scan prefill + slot-based continuous
+batching decode.
+
+The paper's serving story (§4.1, App. D.2): prefill processes the whole
+prompt with the parallel scan (one forward), then decode rolls the O(1)
+sequential cell.  The engine keeps a fixed-capacity batch of slots; new
+requests prefill individually and their terminal state is spliced into
+their slot, so decode always runs one fused step for every active request
+(continuous batching, vLLM-style but with RNN/SSM states as first-class
+cache kinds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    temperature: float = 0.0
+    eos: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+
+
+def _splice(cache_batch, cache_one, slot: int):
+    """Write a prefilled (batch-1) cache into slot `slot`."""
+    def upd(big, small):
+        if big.ndim == 1:                       # pos: (B,)
+            return big.at[slot].set(small[0])
+        # (L, B, ...) or (B, ...)?  all our caches are (L, B, ...) except pos
+        return big.at[:, slot].set(small[:, 0])
+
+    return jax.tree.map(upd, cache_batch, cache_one)
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 max_len: int = 2048, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.cache = lm.init_cache(cfg, max_batch, max_len)
+        self.free = list(range(max_batch))
+        self.active: Dict[int, Request] = {}
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._rng = np.random.default_rng(seed)
+        self._last_token = np.zeros((max_batch,), np.int32)
+
+        self._decode = jax.jit(
+            lambda p, tok, cache: lm.decode_step(p, cfg, tok, cache))
+        self._splice = jax.jit(_splice, static_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int = 32,
+               temperature: float = 0.0, eos: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new,
+                                  temperature, eos))
+        return rid
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        while self.queue and self.free:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            req.slot = slot
+            logits, cache_one = lm.prefill(
+                self.params, self.cfg, jnp.asarray([req.prompt], jnp.int32),
+                self.max_len)
+            self.cache = self._splice(self.cache, cache_one, slot)
+            tok = self._sample(np.asarray(logits)[0], req)
+            req.out.append(int(tok))
+            self._last_token[slot] = tok
+            self.active[slot] = req
+
+    def _sample(self, logits: np.ndarray, req: Request) -> int:
+        logits = logits[:self.cfg.vocab_size]
+        if req.temperature <= 0:
+            return int(logits.argmax())
+        p = np.exp((logits - logits.max()) / req.temperature)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit pending requests, decode one token for every active slot.
+        Returns the number of active requests after the step."""
+        self._admit()
+        if not self.active:
+            return 0
+        tok = jnp.asarray(self._last_token)
+        logits, self.cache = self._decode(self.params, tok, self.cache)
+        logits = np.asarray(logits)
+        for slot, req in list(self.active.items()):
+            t = self._sample(logits[slot], req)
+            req.out.append(t)
+            self._last_token[slot] = t
+            if (req.eos is not None and t == req.eos) or \
+                    len(req.out) >= req.max_new:
+                req.done = True
+                self.finished[req.rid] = req
+                del self.active[slot]
+                self.free.append(slot)
+        return len(self.active)
+
+    # ------------------------------------------------------------------
+    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return {rid: r.out for rid, r in self.finished.items()}
+
+
+def generate_one(cfg, params, prompt: List[int], max_new: int = 32,
+                 max_len: int = 2048) -> List[int]:
+    """Single-request reference path (tests compare the engine to this)."""
+    logits, cache = lm.prefill(params, cfg, jnp.asarray([prompt], jnp.int32),
+                               max_len)
+    out = [int(np.asarray(logits)[0, :cfg.vocab_size].argmax())]
+    for _ in range(max_new - 1):
+        logits, cache = lm.decode_step(params, cfg,
+                                       jnp.asarray([out[-1]], jnp.int32),
+                                       cache)
+        out.append(int(np.asarray(logits)[0, :cfg.vocab_size].argmax()))
+    return out

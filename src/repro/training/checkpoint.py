@@ -1,0 +1,184 @@
+"""Fault-tolerant checkpointing.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json, written to a tmp dir
+and atomically renamed (a crash mid-save never corrupts the latest good
+checkpoint).  Restore accepts target shardings, so a checkpoint written on
+one mesh restores onto any other mesh (elastic scaling / node-count
+changes): arrays are device_put with the *target* NamedShardings.
+
+Trees are flattened to path-keyed entries ("params/layers/blocks/..."), so
+restore does not need a pickled treedef -- robust across code versions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten(tree, prefix: str) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = prefix + SEP + SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten(flat: Dict[str, np.ndarray], prefix: str):
+    """Rebuild a nested dict tree from path keys."""
+    root: Dict[str, Any] = {}
+    pl = prefix + SEP
+    for key, val in flat.items():
+        if not key.startswith(pl):
+            continue
+        parts = key[len(pl):].split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save(directory: str, step: int, params, opt_state=None,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic checkpoint write.  Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    arrays = _flatten(params, "params")
+    manifest = {"step": step, "time": time.time(), "extra": extra or {}}
+    if opt_state is not None:
+        arrays.update(_flatten(opt_state.mu, "mu"))
+        arrays.update(_flatten(opt_state.nu, "nu"))
+        arrays["opt_step"] = np.asarray(jax.device_get(opt_state.step))
+        manifest["has_opt"] = True
+    # dtype map (npz keeps dtypes, but bf16 round-trips via view)
+    dtypes = {}
+    packed = {}
+    for k, v in arrays.items():
+        if v.dtype == jnp.bfloat16:
+            packed[k] = v.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        else:
+            packed[k] = v
+            dtypes[k] = str(v.dtype)
+    manifest["dtypes"] = dtypes
+    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _load_arrays(path: str) -> Dict[str, np.ndarray]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    raw = np.load(os.path.join(path, "arrays.npz"))
+    out = {}
+    for k in raw.files:
+        v = raw[k]
+        if manifest["dtypes"].get(k) == "bfloat16":
+            v = v.view(jnp.bfloat16)
+        out[k] = v
+    return out, manifest
+
+
+def restore(path: str, *, shardings=None, opt_shardings=None):
+    """Returns (step, params, opt_state_or_None).
+
+    ``shardings``: optional pytree of NamedShardings matching params --
+    arrays land directly on the (possibly different) target mesh.
+    """
+    flat, manifest = _load_arrays(path)
+    params = _unflatten(flat, "params")
+    params = _place(params, shardings)
+    opt_state = None
+    if manifest.get("has_opt"):
+        from repro.training.optimizer import AdamWState
+        mu = _place(_unflatten(flat, "mu"),
+                    opt_shardings[1] if opt_shardings else shardings)
+        nu = _place(_unflatten(flat, "nu"),
+                    opt_shardings[2] if opt_shardings else shardings)
+        opt_state = AdamWState(step=jnp.asarray(flat["opt_step"]),
+                               mu=mu, nu=nu)
+    return manifest["step"], params, opt_state
+
+
+def _place(tree, shardings):
+    if shardings is None:
+        return jax.tree.map(jnp.asarray, tree)
+    return jax.tree.map(lambda a, s: jax.device_put(jnp.asarray(a), s),
+                        tree, shardings)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """keep-N GC + optional background-thread saves."""
+
+    def __init__(self, directory: str, keep: int = 3,
+                 save_interval: int = 100, async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.save_interval = save_interval
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, params, opt_state=None, force=False):
+        if not force and (step == 0 or step % self.save_interval != 0):
+            return False
+        self.wait()
+        if self.async_save:
+            # snapshot to host before handing off to the thread
+            host_p = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  params)
+            host_o = opt_state if opt_state is None else jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), opt_state)
+            self._thread = threading.Thread(
+                target=self._save_and_gc, args=(step, host_p, host_o))
+            self._thread.start()
+        else:
+            self._save_and_gc(step, params, opt_state)
+        return True
+
+    def _save_and_gc(self, step, params, opt_state):
+        save(self.directory, step, params, opt_state)
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, **kw):
+        step = latest_step(self.directory)
+        if step is None:
+            return None
+        return restore(os.path.join(self.directory, f"step_{step:08d}"), **kw)

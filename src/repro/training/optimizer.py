@@ -1,0 +1,120 @@
+"""Optimizers in pure JAX (no optax): AdamW with dtype-configurable moments
+(bf16 moments halve optimizer HBM at >100B scale), global-norm clipping,
+and warmup+cosine schedules.  State is a pytree mirroring params, so it
+inherits parameter sharding (ZeRO: moments are sharded exactly like their
+parameters)."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # "bfloat16" for >100B models
+    # schedule
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"             # cosine | constant | linear
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+
+
+def _decay_mask(path_leaf):
+    """No weight decay on norms / biases / 1-d params."""
+    path, leaf = path_leaf
+    names = [str(getattr(p, "key", p)) for p in path]
+    if leaf.ndim <= 1:
+        return 0.0
+    if any(n in ("scale", "bias", "a_log", "dt_bias", "d_skip") for n in names):
+        return 0.0
+    return 1.0
+
+
+def schedule_lr(cfg: AdamWConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "linear":
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    else:                                 # cosine
+        decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * 0.5 * (
+            1.0 + jnp.cos(math.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def apply(cfg: AdamWConfig, state: AdamWState, params, grads,
+          ) -> tuple:
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    masks = [_decay_mask(pl) for pl in flat]
+    masks = jax.tree_util.tree_unflatten(treedef, masks)
+
+    def upd(p, g, mu, nu, wd_mask):
+        g32 = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32)
+        nu32 = nu.astype(jnp.float32)
+        mu32 = b1 * mu32 + (1 - b1) * g32
+        nu32 = b2 * nu32 + (1 - b2) * g32 * g32
+        mu_hat = mu32 / bc1
+        nu_hat = nu32 / bc2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        delta = delta + cfg.weight_decay * wd_mask * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), mu32.astype(mu.dtype),
+                nu32.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu, masks)
+    new_params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, AdamWState(step, new_mu, new_nu), metrics

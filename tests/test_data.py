@@ -1,0 +1,75 @@
+"""Data pipeline invariants (hypothesis where the property is cheap)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import lm_corpus, rl_proxy, synthetic
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**20), step=st.integers(0, 1000))
+def test_selective_copy_structure(seed, step):
+    b = synthetic.selective_copy_batch(seed, step, 4, seq_len=32, n_data=5)
+    tokens, labels = b["tokens"], b["labels"]
+    assert tokens.shape == labels.shape
+    for i in range(4):
+        answer = labels[i][labels[i] >= 0]
+        assert len(answer) == 5
+        data_tokens = tokens[i, :32][tokens[i, :32] > 0]
+        np.testing.assert_array_equal(np.sort(answer), np.sort(data_tokens))
+        # labels are next-token aligned
+        for p in np.nonzero(labels[i] >= 0)[0][:-1]:
+            assert labels[i, p] == tokens[i, p + 1]
+
+
+def test_determinism_same_seed_step():
+    a = synthetic.selective_copy_batch(7, 42, 4, seq_len=16, n_data=3)
+    b = synthetic.selective_copy_batch(7, 42, 4, seq_len=16, n_data=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synthetic.selective_copy_batch(7, 43, 4, seq_len=16, n_data=3)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+@pytest.mark.parametrize("task", list(synthetic.CHOMSKY_TASKS))
+def test_chomsky_labels_in_range(task):
+    fn = synthetic.CHOMSKY_TASKS[task]
+    b = fn(0, 0, 16)
+    assert b["label"].min() >= 0
+    assert b["label"].max() < b["n_classes"]
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < synthetic.CLS_VOCAB
+
+
+def test_cycle_nav_ground_truth():
+    b = synthetic.cycle_nav(0, 0, 8, min_len=5, max_len=10)
+    moves = {1: 1, 2: -1, 3: 0}
+    for i in range(8):
+        toks = b["tokens"][i][b["tokens"][i] > 0]
+        assert b["label"][i] == sum(moves[t] for t in toks) % 5
+
+
+def test_listops_eval_correct():
+    b = synthetic.listops(1, 0, 8, max_len=64, max_depth=2)
+    assert (0 <= b["label"]).all() and (b["label"] < 10).all()
+
+
+def test_lm_corpus_split_and_batch():
+    train, test = lm_corpus.build_corpus(target_bytes=50_000)
+    assert len(train) > 40_000 and len(test) > 4_000
+    b = lm_corpus.lm_batch(train, 0, 0, 4, 64)
+    assert b["tokens"].shape == (4, 64)
+    # next-char alignment
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_rl_proxy_rtg_consistency():
+    ds = rl_proxy.build_dataset("medium", n_episodes=4)
+    rtg = ds["rtg"][:, :, 0]
+    # rtg[t] - rtg[t+1] == reward at t; rtg decreasing toward episode end
+    assert np.isfinite(rtg).all()
+    assert (np.abs(rtg[:, -1]) <= np.abs(rtg[:, 0]) + 1e-3).all()
+
+
+def test_rl_proxy_expert_beats_random():
+    assert rl_proxy.expert_score() > rl_proxy.random_score() + 1.0

@@ -1,0 +1,145 @@
+"""Parallel scan: every strategy must agree with the sequential oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scan as scan_lib
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, kind):
+    k1, k2 = jax.random.split(key)
+    if kind == "gate":      # a in (0,1) like (1-z)
+        a = jax.nn.sigmoid(jax.random.normal(k1, shape))
+    else:                   # arbitrary sign/scale
+        a = jax.random.normal(k1, shape) * 0.9
+    b = jax.random.normal(k2, shape)
+    return a, b
+
+
+@pytest.mark.parametrize("shape", [(2, 8, 4), (1, 128, 16), (3, 33, 7)])
+@pytest.mark.parametrize("kind", ["gate", "free"])
+def test_associative_matches_sequential(shape, kind):
+    a, b = _rand(jax.random.PRNGKey(0), shape, kind)
+    ref = scan_lib.scan_sequential(a, b)
+    out = scan_lib.scan_associative(a, b)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(2, 16, 4)])
+def test_associative_with_h0(shape):
+    a, b = _rand(jax.random.PRNGKey(1), shape, "gate")
+    h0 = jax.random.normal(jax.random.PRNGKey(2), shape[:1] + shape[2:])
+    ref = scan_lib.scan_sequential(a, b, h0)
+    out = scan_lib.scan_associative(a, b, h0)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 16, 64])
+@pytest.mark.parametrize("t", [12, 64, 100])
+def test_chunked_matches_sequential(chunk, t):
+    a, b = _rand(jax.random.PRNGKey(3), (2, t, 8), "gate")
+    ref = scan_lib.scan_sequential(a, b)
+    out = scan_lib.scan_chunked(a, b, chunk=chunk)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_with_h0():
+    a, b = _rand(jax.random.PRNGKey(4), (2, 40, 8), "gate")
+    h0 = jax.random.normal(jax.random.PRNGKey(5), (2, 8))
+    ref = scan_lib.scan_sequential(a, b, h0)
+    out = scan_lib.scan_chunked(a, b, h0, chunk=16)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_log_space_matches_linear():
+    """Heinsen scan == linear scan when a, b > 0."""
+    key = jax.random.PRNGKey(6)
+    k1, k2 = jax.random.split(key)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (2, 32, 8)))
+    b = jnp.exp(jax.random.normal(k2, (2, 32, 8)) * 0.5)
+    ref = scan_lib.scan_sequential(a, b)
+    out = scan_lib.scan_log_space(jnp.log(a), jnp.log(b))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_log_space_with_h0():
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (2, 16, 4)))
+    b = jnp.exp(jax.random.normal(k2, (2, 16, 4)) * 0.5)
+    h0 = jnp.exp(jax.random.normal(k3, (2, 4)) * 0.5)
+    ref = scan_lib.scan_sequential(a, b, h0)
+    out = scan_lib.scan_log_space(jnp.log(a), jnp.log(b), jnp.log(h0))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_log_space_stability_extreme_gates():
+    """Saturated gates (|preact| ~ 40) must not produce inf/nan in log space."""
+    k = jnp.full((1, 64, 4), 40.0)           # z -> 1:   log(1-z) ~ -40
+    log_a = -jax.nn.softplus(k)
+    log_b = -jax.nn.softplus(-k) + 0.3       # log z + log h~
+    out = scan_lib.scan_log_space(log_a, log_b)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 50),
+    d=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_associative_equals_sequential(t, d, seed):
+    a, b = _rand(jax.random.PRNGKey(seed), (2, t, d), "gate")
+    ref = scan_lib.scan_sequential(a, b)
+    out = scan_lib.scan_associative(a, b)
+    np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(2, 40),
+    split=st.integers(1, 39),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_scan_composition(t, split, seed):
+    """Scanning [0:s] then [s:T] with the carried state == scanning [0:T].
+
+    This is the associativity invariant that makes chunking, sequence
+    parallelism and prefill/decode splits all correct.
+    """
+    if split >= t:
+        split = t - 1
+    if split < 1:
+        return
+    a, b = _rand(jax.random.PRNGKey(seed), (1, t, 3), "gate")
+    full = scan_lib.scan_sequential(a, b)
+    h_first = scan_lib.scan_sequential(a[:, :split], b[:, :split])
+    h_rest = scan_lib.scan_sequential(a[:, split:], b[:, split:],
+                                      h_first[:, -1])
+    np.testing.assert_allclose(
+        jnp.concatenate([h_first, h_rest], axis=1), full,
+        rtol=5e-5, atol=5e-5)
+
+
+def test_bf16_scan_runs():
+    a, b = _rand(jax.random.PRNGKey(8), (2, 32, 8), "gate")
+    out = scan_lib.scan_associative(a.astype(jnp.bfloat16),
+                                    b.astype(jnp.bfloat16))
+    assert out.dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+def test_scan_grad_finite():
+    a, b = _rand(jax.random.PRNGKey(9), (2, 64, 8), "gate")
+
+    def loss(ab):
+        return jnp.sum(scan_lib.scan_associative(*ab) ** 2)
+
+    g = jax.grad(loss)((a, b))
+    for leaf in g:
+        assert bool(jnp.all(jnp.isfinite(leaf)))

@@ -1,0 +1,80 @@
+"""SSD dual forms: masked (paper-faithful) vs compact (beyond-paper) must
+agree with the sequential oracle, including the strong-decay stress case
+that refuted the factored-decay attempt (EXPERIMENTS.md §Perf)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssd
+
+
+def _inputs(seed, t=40, nh=8, hd=8, g=2, ds=8, dt_scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (2, t, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, t, nh))) * dt_scale
+    b = jax.random.normal(ks[2], (2, t, g, ds))
+    c = jax.random.normal(ks[3], (2, t, g, ds))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, nh))
+    return x, dt, b, c, a_log, jnp.ones(nh)
+
+
+@pytest.mark.parametrize("form", ["masked", "compact"])
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_forms_match_sequential(form, chunk):
+    x, dt, b, c, a_log, dsk = _inputs(0)
+    seq = ssd.ssd_sequential(x, dt, a_log, b, c, dsk)
+    y = ssd.ssd_chunked(x, dt, a_log, b, c, dsk, chunk=chunk, form=form)
+    np.testing.assert_allclose(y, seq, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("form", ["masked", "compact"])
+def test_forms_strong_decay(form):
+    """Per-chunk decay >> e^30: the regime that broke factored decay."""
+    x, dt, b, c, a_log, dsk = _inputs(1, dt_scale=20.0)
+    seq = ssd.ssd_sequential(x, dt, a_log, b, c, dsk)
+    y = ssd.ssd_chunked(x, dt, a_log, b, c, dsk, chunk=8, form=form)
+    np.testing.assert_allclose(y, seq, rtol=1e-3, atol=1e-3)
+
+
+def test_forms_grads_match():
+    x, dt, b, c, a_log, dsk = _inputs(2)
+
+    def loss(form):
+        def f(args):
+            return jnp.mean(ssd.ssd_chunked(*args, dsk, chunk=8,
+                                            form=form) ** 2)
+        return jax.grad(f)((x, dt, a_log, b, c))
+
+    g_m = loss("masked")
+    g_c = loss("compact")
+    for a, b_ in zip(jax.tree.leaves(g_m), jax.tree.leaves(g_c)):
+        np.testing.assert_allclose(a, b_, rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([4, 8, 16]))
+def test_property_compact_equals_masked(seed, chunk):
+    x, dt, b, c, a_log, dsk = _inputs(seed, t=24, nh=4, hd=4, g=1, ds=4)
+    y_m = ssd.ssd_chunked(x, dt, a_log, b, c, dsk, chunk=chunk,
+                          form="masked")
+    y_c = ssd.ssd_chunked(x, dt, a_log, b, c, dsk, chunk=chunk,
+                          form="compact")
+    np.testing.assert_allclose(y_m, y_c, rtol=2e-4, atol=2e-4)
+
+
+def test_masked_form_no_nan_gradient_at_extreme_decay():
+    """Regression: exp(seg) on the masked triangle used to overflow and
+    its inf cotangent x 0 produced NaN grads once dt grew during training
+    (fig2 mamba2 NaN at ~150 steps)."""
+    x, dt, b, c, a_log, dsk = _inputs(3, dt_scale=50.0)
+
+    def loss(args):
+        y = ssd.ssd_chunked(*args, dsk, chunk=8, form="masked")
+        return jnp.mean(y ** 2)
+
+    g = jax.grad(loss)((x, dt, a_log, b, c))
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.all(jnp.isfinite(leaf))), "NaN/inf gradient"

@@ -1,0 +1,185 @@
+"""Training substrate: optimizer vs numpy reference, grad-accumulation
+equivalence, checkpoint roundtrip + restart, fault-tolerant supervisor."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.data import lm_corpus
+from repro.models import lm
+from repro.training import checkpoint as ckpt_lib
+from repro.training import optimizer as opt_lib
+from repro.training import train_step as ts_lib
+from repro.training.fault_tolerance import TrainSupervisor
+
+
+# ---------------------------------------------------------------------------
+# AdamW vs a straight-line numpy reference
+# ---------------------------------------------------------------------------
+
+def _np_adamw(p, g, mu, nu, step, cfg, wd_on):
+    mu = cfg.b1 * mu + (1 - cfg.b1) * g
+    nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+    lr = float(opt_lib.schedule_lr(cfg, jnp.asarray(step)))
+    mu_hat = mu / (1 - cfg.b1 ** step)
+    nu_hat = nu / (1 - cfg.b2 ** step)
+    p = p - lr * (mu_hat / (np.sqrt(nu_hat) + cfg.eps)
+                  + cfg.weight_decay * wd_on * p)
+    return p, mu, nu
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = opt_lib.AdamWConfig(lr=1e-2, grad_clip=0.0, warmup_steps=0,
+                              schedule="constant")
+    params = {"w": {"kernel": jnp.ones((3, 4))},
+              "norm": {"scale": jnp.ones((4,))}}
+    state = opt_lib.init(cfg, params)
+    g = {"w": {"kernel": jnp.full((3, 4), 0.5)},
+         "norm": {"scale": jnp.full((4,), 0.25)}}
+    p_np = np.ones((3, 4))
+    mu_np = np.zeros((3, 4))
+    nu_np = np.zeros((3, 4))
+    p, s = params, state
+    for step in range(1, 4):
+        p, s, _ = opt_lib.apply(cfg, s, p, g)
+        p_np, mu_np, nu_np = _np_adamw(p_np, np.full((3, 4), 0.5), mu_np,
+                                       nu_np, step, cfg, wd_on=1.0)
+        np.testing.assert_allclose(p["w"]["kernel"], p_np, rtol=1e-5)
+    # norms get no weight decay: pure adam on scale
+    assert not np.allclose(p["norm"]["scale"], 1.0)
+
+
+def test_grad_clip_bounds_update():
+    cfg = opt_lib.AdamWConfig(grad_clip=1.0, warmup_steps=0,
+                              schedule="constant", weight_decay=0.0)
+    params = {"w": {"kernel": jnp.zeros((4, 4))}}
+    state = opt_lib.init(cfg, params)
+    g = {"w": {"kernel": jnp.full((4, 4), 100.0)}}
+    _, _, metrics = opt_lib.apply(cfg, state, params, g)
+    assert float(metrics["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_schedule_shapes():
+    cfg = opt_lib.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+    lrs = [float(opt_lib.schedule_lr(cfg, jnp.asarray(s)))
+           for s in (0, 5, 10, 55, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation == large batch
+# ---------------------------------------------------------------------------
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = archs.smoke("mingru-lm")
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    data, _ = lm_corpus.build_corpus()
+    batch = lm_corpus.lm_batch(data, 0, 0, 8, 32)
+
+    step1 = jax.jit(ts_lib.make_train_step(cfg, ocfg, microbatches=1))
+    step4 = jax.jit(ts_lib.make_train_step(cfg, ocfg, microbatches=4))
+    o1 = opt_lib.init(ocfg, params)
+    o4 = opt_lib.init(ocfg, params)
+    p1, _, m1 = step1(params, o1, batch)
+    p4, _, m4 = step4(params, o4, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint roundtrip / restart / GC
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = archs.smoke("mingru-lm")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt_lib.AdamWConfig()
+    opt_state = opt_lib.init(ocfg, params)
+    path = ckpt_lib.save(str(tmp_path), 7, params, opt_state)
+    step, p2, o2 = ckpt_lib.restore(path)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(o2.step) == int(opt_state.step)
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    tree = {"w": jnp.ones((3,), jnp.bfloat16) * 1.5}
+    path = ckpt_lib.save(str(tmp_path), 1, tree)
+    _, t2, _ = ckpt_lib.restore(path)
+    assert t2["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(t2["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+
+
+def test_checkpoint_manager_gc_and_latest(tmp_path):
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path), keep=2, save_interval=1)
+    tree = {"w": jnp.zeros((2,))}
+    for step in (1, 2, 3):
+        mgr.maybe_save(step, {"w": jnp.full((2,), float(step))})
+    assert ckpt_lib.latest_step(str(tmp_path)) == 3
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2          # GC kept only 2
+
+
+def test_supervisor_recovers_from_failure(tmp_path):
+    cfg = archs.smoke("mingru-lm")
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, total_steps=20)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_lib.init(ocfg, params)
+    data, _ = lm_corpus.build_corpus()
+    step_fn = jax.jit(ts_lib.make_train_step(cfg, ocfg))
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path), keep=2, save_interval=5)
+    sup = TrainSupervisor(step_fn,
+                          lambda s: lm_corpus.lm_batch(data, 0, s, 4, 32),
+                          mgr)
+    fired = []
+
+    def hook(step):
+        if step == 12 and not fired:
+            fired.append(step)
+            raise RuntimeError("injected fault")
+
+    sup.failure_hook = hook
+    params, opt_state, report = sup.run(params, opt_state, 15)
+    assert report.failures_recovered == 1
+    assert report.restarts == [12]
+    assert report.steps_run >= 15 - 10   # resumed from ckpt at 10
+
+
+def test_supervisor_gives_up_after_max_retries(tmp_path):
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path))
+    sup = TrainSupervisor(lambda p, o, b: (p, o, {}), lambda s: None, mgr,
+                          max_retries=2)
+
+    def hook(step):
+        raise RuntimeError("always fails")
+
+    sup.failure_hook = hook
+    with pytest.raises(RuntimeError):
+        sup.run({}, {}, 5)
+
+
+def test_dp_compressed_step_runs_single_device():
+    """shard_map DP path with bf16 grad psum on a 1x1 mesh."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = archs.smoke("mingru-lm")
+    ocfg = opt_lib.AdamWConfig(lr=1e-3)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_lib.init(ocfg, params)
+    data, _ = lm_corpus.build_corpus()
+    batch = lm_corpus.lm_batch(data, 0, 0, 4, 32)
+    step = ts_lib.make_dp_compressed_step(cfg, ocfg, mesh)
+    p2, o2, m = step(params, opt_state, batch)
+    assert np.isfinite(float(m["loss"]))
