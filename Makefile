@@ -1,0 +1,21 @@
+# Tier-1 verify + convenience targets.  PYTHONPATH=src is the only setup;
+# `hypothesis` is optional (tests/conftest.py ships a deterministic shim).
+
+PYTEST = PYTHONPATH=src python -m pytest
+
+.PHONY: test test-fast test-serving bench-engine example-serve
+
+test:            ## full tier-1 suite (what CI runs)
+	$(PYTEST) -q
+
+test-fast:       ## skip the heavy model-smoke / multi-device tier
+	$(PYTEST) -q -m "not slow"
+
+test-serving:    ## engine + sampling + kernel-scan tests only
+	$(PYTEST) -q tests/test_serving.py tests/test_sampling.py tests/test_scan.py
+
+bench-engine:    ## v1-vs-v2 serving throughput sweep
+	PYTHONPATH=src python -m benchmarks.engine_throughput
+
+example-serve:   ## continuous-batching demo
+	PYTHONPATH=src python examples/serve_batched.py

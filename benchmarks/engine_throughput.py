@@ -1,0 +1,187 @@
+"""Serving-engine throughput: v2 (batched prefill + on-device sampling)
+versus the v1 seed engine, across batch sizes on a mixed-prompt workload.
+
+The v1 baseline is vendored below exactly as the seed shipped it: one
+``lm.prefill`` call *per request* spliced slot-by-slot, and a per-slot
+host-side numpy sampling loop each decode step.  v2 admits a whole group
+in one right-padded masked prefill and samples every slot in one jitted
+call.  Emits the standard ``name,us_per_call,derived`` CSV rows; derived
+is end-to-end tokens/s (prefill + decode).  A short warmup compiles the
+decode step and the common shapes first; note that v1 recompiles prefill
+for *every distinct prompt length* while v2 buckets padded lengths to
+powers of two -- that compile traffic is part of the cost being measured.
+
+    PYTHONPATH=src python -m benchmarks.engine_throughput \
+        --arch mingru-lm --batches 1 2 4 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_utils import header, row
+from repro.configs import archs
+from repro.models import lm
+from repro.serving.engine import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# The seed (v1) engine, vendored as the baseline under test
+# ---------------------------------------------------------------------------
+
+class SeedEngine:
+    """v1 behavior: per-request prefill, host-side per-slot sampling."""
+
+    def __init__(self, cfg, params, *, max_batch=8, max_len=2048, seed=0):
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.max_len = max_batch, max_len
+        self.cache = lm.init_cache(cfg, max_batch, max_len)
+        self.free = list(range(max_batch))
+        self.active: Dict[int, dict] = {}
+        self.queue: List[dict] = []
+        self.finished: Dict[int, list] = {}
+        self._rid = 0
+        self._rng = np.random.default_rng(seed)
+        self._last = np.zeros((max_batch,), np.int32)
+        self._decode = jax.jit(
+            lambda p, tok, cache: lm.decode_step(p, cfg, tok, cache))
+
+        def _splice(big, one, slot):
+            def upd(b, s):
+                if b.ndim == 1:
+                    return b.at[slot].set(s[0])
+                return b.at[:, slot].set(s[:, 0])
+            return jax.tree.map(upd, big, one)
+
+        self._splice = jax.jit(_splice, static_argnums=(2,))
+
+    def submit(self, prompt, max_new=32, temperature=0.0):
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(dict(rid=rid, prompt=list(prompt), max_new=max_new,
+                               temperature=temperature, out=[]))
+        return rid
+
+    def _sample(self, logits, temperature):
+        logits = logits[:self.cfg.vocab_size]
+        if temperature <= 0:
+            return int(logits.argmax())
+        p = np.exp((logits - logits.max()) / temperature)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def step(self):
+        while self.queue and self.free:
+            req = self.queue.pop(0)
+            slot = self.free.pop(0)
+            req["slot"] = slot
+            logits, one = lm.prefill(
+                self.params, self.cfg,
+                jnp.asarray([req["prompt"]], jnp.int32), self.max_len)
+            self.cache = self._splice(self.cache, one, slot)
+            tok = self._sample(np.asarray(logits)[0], req["temperature"])
+            req["out"].append(tok)
+            self._last[slot] = tok
+            self.active[slot] = req
+        if not self.active:
+            return 0
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(self._last),
+                                          self.cache)
+        logits = np.asarray(logits)
+        for slot, req in list(self.active.items()):
+            t = self._sample(logits[slot], req["temperature"])
+            req["out"].append(t)
+            self._last[slot] = t
+            if len(req["out"]) >= req["max_new"]:
+                self.finished[req["rid"]] = req["out"]
+                del self.active[slot]
+                self.free.append(slot)
+        return len(self.active)
+
+    def run_to_completion(self, max_steps=100_000):
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Workload + measurement
+# ---------------------------------------------------------------------------
+
+def mixed_prompts(n: int, seed: int = 0) -> List[List[int]]:
+    """Mixed-length workload: short chat-y prompts + a long tail."""
+    rng = np.random.default_rng(seed)
+    lens = np.clip(rng.lognormal(mean=2.5, sigma=0.8, size=n), 3, 96
+                   ).astype(int)
+    return [list(rng.integers(1, 250, size=int(l))) for l in lens]
+
+
+def run_engine(make_engine, prompts, max_new, temperature):
+    """Returns (wall_s, total_tokens) for one full drain of the workload."""
+    engine = make_engine()
+    for p in prompts:
+        engine.submit(p, max_new=max_new, temperature=temperature)
+    t0 = time.perf_counter()
+    outs = engine.run_to_completion()
+    dt = time.perf_counter() - t0
+    n_prompt = sum(len(p) for p in prompts)
+    n_out = sum(len(o) for o in outs.values())
+    assert len(outs) == len(prompts)
+    return dt, n_prompt + n_out
+
+
+def bench(arch: str, batches, n_requests: int, max_new: int,
+          temperature: float, prefill_chunk: Optional[int]):
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 160
+    prompts = mixed_prompts(n_requests)
+    header(f"engine throughput {arch}: {n_requests} reqs, "
+           f"max_new={max_new}, T={temperature}")
+
+    results = {}
+    for mb in batches:
+        for name, make in [
+            ("seed_v1", lambda mb=mb: SeedEngine(
+                cfg, params, max_batch=mb, max_len=max_len)),
+            ("v2", lambda mb=mb: ServingEngine(
+                cfg, params, max_batch=mb, max_len=max_len,
+                prefill_chunk=prefill_chunk)),
+        ]:
+            run_engine(make, prompts[:2], 4, temperature)   # compile warmup
+            dt, toks = run_engine(make, prompts, max_new, temperature)
+            tps = toks / dt
+            results[(name, mb)] = tps
+            row(f"engine_{name}_b{mb}", dt * 1e6, f"{tps:.1f} tok/s")
+
+    for mb in batches:
+        if ("seed_v1", mb) in results and ("v2", mb) in results:
+            speedup = results[("v2", mb)] / results[("seed_v1", mb)]
+            row(f"engine_speedup_b{mb}", 0.0, f"{speedup:.2f}x v2/v1")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mingru-lm")
+    ap.add_argument("--batches", type=int, nargs="*", default=[1, 2, 4, 8])
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    args = ap.parse_args(argv)
+    bench(args.arch, args.batches, args.n_requests, args.max_new,
+          args.temperature, args.prefill_chunk)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
-"""Continuous-batching serving demo: multiple requests of different
-lengths share one decode batch; RNN-state caches make each step O(1).
+"""Continuous-batching serving demo (engine v2): multiple requests of
+different lengths are right-padded into ONE batched prefill, sampled
+on-device, and share one decode batch; RNN-state caches make each decode
+step O(1).  The long prompt below exercises chunked prefill: it is consumed
+in fixed-size chunks interleaved with the other requests' decode steps.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -17,13 +20,19 @@ from repro.serving.engine import ServingEngine
 def main():
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params, max_batch=4, max_len=256)
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
+                           prefill_chunk=16)
 
     prompts = [b"To be, or not to be", b"Now is the winter",
                b"Friends, Romans, countrymen", b"All the world's a stage",
-               b"If music be the food of love", b"Once more unto the breach"]
-    for p in prompts:                       # 6 requests, 4 slots: queueing
-        engine.submit(list(p), max_new=16)
+               b"If music be the food of love", b"Once more unto the breach",
+               b"O for a Muse of fire, that would ascend the brightest "
+               b"heaven of invention"]        # long: chunked prefill
+    for i, p in enumerate(prompts):           # 7 requests, 4 slots: queueing
+        # mix of greedy and sampled requests in the same decode batch
+        engine.submit(list(p), max_new=16,
+                      temperature=0.0 if i % 2 == 0 else 0.8,
+                      top_k=0 if i % 2 == 0 else 40, top_p=0.95)
 
     t0 = time.time()
     outs = engine.run_to_completion()
@@ -32,6 +41,12 @@ def main():
         print(f"req {rid}: {decode_bytes(outs[rid])!r}")
     n = sum(len(o) for o in outs.values())
     print(f"{len(outs)} requests, {n} tokens, {n / dt:.1f} tok/s")
+    snap = engine.stats.snapshot()
+    print(f"prefill calls: {snap['prefill_calls']}, "
+          f"prefill tokens: {snap['prefill_tokens']} "
+          f"(padding x{snap['padding_overhead']:.2f}), "
+          f"decode steps: {snap['decode_steps']}, "
+          f"queue peak: {snap['queue_peak']}")
 
 
 if __name__ == "__main__":

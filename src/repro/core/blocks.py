@@ -70,32 +70,51 @@ def init(key, cfg: MinRNNBlockConfig, *, dtype=jnp.float32):
 
 
 def apply(params, cfg: MinRNNBlockConfig, x: Array, *,
-          h0: Optional[Array] = None, compute_dtype=None,
+          h0: Optional[Array] = None, state0: Optional[dict] = None,
+          lengths: Optional[Array] = None, compute_dtype=None,
           scan_strategy: str = "associative", dropout_rng=None,
           deterministic: bool = True, return_state: bool = False):
     """x: (..., T, d_model) parallel (training / prefill) form.
 
     With ``return_state`` also returns the decode-ready state (final h and
     conv window) so prefill can hand off to sequential decoding.
+
+    ``lengths`` (B,) supports right-padded variable-length batches: the
+    returned state is taken at each row's true terminal position (the
+    recurrence is causal, so padded positions never influence it).
+    ``state0`` (a previous ``return_state`` dict) resumes the block from a
+    carried (h, conv window) -- the chunked-prefill path.
     """
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
     state = {}
+    if state0 is not None:
+        h0 = state0["h"]
+    conv0 = state0.get("conv") if (state0 is not None and cfg.use_conv) \
+        else None
     if cfg.use_conv:
         if return_state:
-            pad = max(cfg.conv_kernel - 1 - y.shape[-2], 0)
-            win = y[..., -(cfg.conv_kernel - 1):, :]
-            if pad:
-                win = jnp.concatenate(
-                    [jnp.zeros(y.shape[:-2] + (pad, y.shape[-1]), y.dtype),
-                     win], axis=-2)
-            state["conv"] = win
-        y = nn.causal_conv_apply(params["conv"], y)
+            width = cfg.conv_kernel - 1
+            if lengths is not None or conv0 is not None:
+                lens = lengths if lengths is not None \
+                    else jnp.full(y.shape[:1], y.shape[-2], jnp.int32)
+                state["conv"] = nn.gather_conv_window(y, lens, width,
+                                                      prefix=conv0)
+            else:
+                pad = max(width - y.shape[-2], 0)
+                win = y[..., -width:, :]
+                if pad:
+                    win = jnp.concatenate(
+                        [jnp.zeros(y.shape[:-2] + (pad, y.shape[-1]),
+                                   y.dtype), win], axis=-2)
+                state["conv"] = win
+        y = nn.causal_conv_apply(params["conv"], y, prefix=conv0)
     h = cell.parallel(params["rnn"], y, h0, mode=cfg.mode,
                       scan_strategy=scan_strategy,
                       compute_dtype=compute_dtype)
     if return_state:
-        state["h"] = h[..., -1, :]
+        state["h"] = nn.gather_last(h, lengths) if lengths is not None \
+            else h[..., -1, :]
     y = nn.dense_apply(params["down"], h, compute_dtype)
     y = _dropout(y, cfg.dropout, dropout_rng, deterministic)
     x = x + y

@@ -117,12 +117,21 @@ def causal_conv_init(key, dim: int, kernel_size: int = 4, dtype=jnp.float32):
             "bias": jnp.zeros((dim,), dtype)}
 
 
-def causal_conv_apply(p, x: Array) -> Array:
-    """x: (..., T, D) depthwise causal conv along T."""
+def causal_conv_apply(p, x: Array, prefix: Optional[Array] = None) -> Array:
+    """x: (..., T, D) depthwise causal conv along T.
+
+    ``prefix`` (default zeros) is the (..., K-1, D) window of inputs that
+    precede ``x`` -- passing the carried conv state here makes chunked
+    prefill bit-exact with an unchunked pass (same slide-multiply-add
+    schedule, only the left pad values change).
+    """
     k = p["kernel"].astype(x.dtype)          # (K, D)
     ksize = k.shape[0]
-    pad = [(0, 0)] * (x.ndim - 2) + [(ksize - 1, 0), (0, 0)]
-    xp = jnp.pad(x, pad)
+    if prefix is None:
+        pad = [(0, 0)] * (x.ndim - 2) + [(ksize - 1, 0), (0, 0)]
+        xp = jnp.pad(x, pad)
+    else:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=-2)
     # sum_k x[t - (K-1) + k] * k[k]  -- small K: unrolled adds (fuses well)
     y = jnp.zeros_like(x)
     t = x.shape[-2]
@@ -137,6 +146,38 @@ def causal_conv_step(p, x_t: Array, conv_state: Array):
     window = jnp.concatenate([conv_state, x_t[..., None, :]], axis=-2)
     y = jnp.einsum("...kd,kd->...d", window, k) + p["bias"].astype(x_t.dtype)
     return y, window[..., 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Variable-length (right-padded batch) state gathers
+#
+# Batched prefill right-pads prompts to a shared T.  Because every sequence
+# mixer in the zoo is causal, positions < length are bit-identical to an
+# unpadded run, so the decode state of request b is simply the state *at
+# position lengths[b]-1* -- these helpers extract it.
+# ---------------------------------------------------------------------------
+
+def gather_last(x: Array, lengths: Array) -> Array:
+    """x: (B, T, ...) -> (B, ...), row b taken at position lengths[b]-1."""
+    idx = (lengths - 1).reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.take_along_axis(x, idx.astype(jnp.int32), axis=1)[:, 0]
+
+
+def gather_conv_window(x: Array, lengths: Array, width: int,
+                       prefix: Optional[Array] = None) -> Array:
+    """Trailing ``width`` inputs after consuming ``lengths[b]`` tokens.
+
+    x: (B, T, D); returns (B, width, D) = rows [len-width, len-1] of
+    ``concat(prefix, x)`` where ``prefix`` (default zeros) holds the
+    ``width`` inputs that preceded ``x`` (carried conv state on resume).
+    """
+    bsz = x.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((bsz, width) + x.shape[2:], x.dtype)
+    ext = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    idx = lengths[:, None].astype(jnp.int32) + jnp.arange(width)[None, :]
+    idx = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
+    return jnp.take_along_axis(ext, idx, axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -145,6 +145,8 @@ def _cell_costs(cfg, shape, mesh, microbatches: int = 1) -> dict:
     with mesh_ctx.use_mesh(mesh, pure_dp=bool(getattr(cfg, "pure_dp", 0))):
         compiled = jax.jit(fn, **kw).lower(*args).compile()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # older jax: one dict per program
+        ca = ca[0] if ca else {}
     coll = hlo_analysis.collective_stats(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),

@@ -3,8 +3,10 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mingru-lm --smoke \
         --ckpt-dir /tmp/repro_ckpt --prompts "To be" "Friends,"
 
-Loads the latest checkpoint (or random init), runs the continuous-batching
-engine over the given prompts, prints completions + throughput.
+Loads the latest checkpoint (or random init), runs the v2 continuous-
+batching engine (batched prefill, on-device sampling, optional chunked
+prefill) over the given prompts, prints completions + the engine stats
+snapshot (prefill/decode token counters, queue depth, tokens/s).
 """
 
 from __future__ import annotations
@@ -32,6 +34,13 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k highest logits (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill size (recurrent-cache archs)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = archs.smoke(args.arch) if args.smoke else archs.get(args.arch)
@@ -45,11 +54,13 @@ def main(argv=None):
             print(f"loaded checkpoint step {step}")
 
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           max_len=args.max_len)
+                           max_len=args.max_len, seed=args.seed,
+                           prefill_chunk=args.prefill_chunk)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
-                            temperature=args.temperature)
+                            temperature=args.temperature,
+                            top_k=args.top_k, top_p=args.top_p)
         rids[rid] = p
 
     t0 = time.time()
@@ -60,6 +71,10 @@ def main(argv=None):
         print(f"--- [{rids[rid]!r}] -> {decode_bytes(toks)!r}")
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
+    snap = engine.stats.snapshot()
+    print("engine stats: " + ", ".join(
+        f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in sorted(snap.items())))
 
 
 if __name__ == "__main__":

@@ -584,7 +584,7 @@ def _hybrid_decode(params, cfg, x, cache):
 # Prefill: parallel pass over the prompt that seeds the decode caches
 # ===========================================================================
 
-def _attn_block_prefill(p, cfg, x, positions, *, has_moe):
+def _attn_block_prefill(p, cfg, x, positions, *, has_moe, lengths=None):
     nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
     y = nn.norm_apply(cfg.norm, p["norm1"], x, **nk)
     if cfg.seq_mixer in _MIN_CELLS:
@@ -593,7 +593,8 @@ def _attn_block_prefill(p, cfg, x, positions, *, has_moe):
         h = cell.parallel(p["mixer"]["rnn"], y, mode=mode,
                           compute_dtype=cfg.cdtype)
         out = nn.dense_apply(p["mixer"]["down"], h, cfg.cdtype)
-        mix_cache = {"h": h[:, -1]}
+        mix_cache = {"h": h[:, -1] if lengths is None
+                     else nn.gather_last(h, lengths)}
     elif cfg.attn_kind == "mla":
         out, ckv, krope = attn.mla_prefill(p["mixer"], cfg, y,
                                            positions=positions)
@@ -620,46 +621,99 @@ def _seed_kv(full, max_len):
     return jnp.pad(full, pad)
 
 
+def supports_chunked_prefill(cfg) -> bool:
+    """True when ``prefill`` can resume from a carried cache, i.e. the whole
+    decode state is a constant-size recurrence (the paper's minRNN family).
+    KV/SSD caches would need offset-aware attention / state-resumed chunk
+    scans; those archs prefill whole-prompt instead."""
+    return cfg.block_kind == "minrnn"
+
+
 def prefill(params, cfg, tokens: Array, max_len: int, *,
-            patch_embeds: Optional[Array] = None
+            patch_embeds: Optional[Array] = None,
+            lengths: Optional[Array] = None,
+            cache: Optional[Dict[str, Any]] = None
             ) -> Tuple[Array, Dict[str, Any]]:
     """Parallel prompt processing.  Returns (last-token logits (B, V), cache
     ready for decode_step).  This is the paper's headline win: the prompt is
-    one parallel scan, not T sequential cell evaluations."""
+    one parallel scan, not T sequential cell evaluations.
+
+    ``lengths`` (B,) int32 enables *batched* prefill of right-padded
+    variable-length prompts: row b's logits/state are taken at its true
+    terminal position ``lengths[b]-1``.  Every mixer is causal, so positions
+    before the pad are bit-identical to an unpadded run; recurrent states
+    are gathered per-row (SSD additionally masks dt so padded steps are
+    inert), while KV caches may hold garbage beyond ``lengths[b]`` -- decode
+    masks attention by the per-slot ``pos`` and overwrites those positions
+    in place before they ever become visible.
+
+    ``cache`` resumes prefill from a previous prefill's cache (chunked
+    prefill); only supported for ``supports_chunked_prefill`` configs.
+    """
+    if cache is not None and not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill resume not supported for block_kind="
+            f"{cfg.block_kind!r}")
+    if lengths is not None and cfg.frontend == "patches":
+        raise NotImplementedError("variable-length prefill with a patch "
+                                  "frontend prefix is not supported")
     x = _embed(params, cfg, tokens, patch_embeds)
     bsz, t = x.shape[0], x.shape[1]
     positions = jnp.arange(t)[None, :]
-    cache: Dict[str, Any] = {"pos": jnp.full((bsz,), t, jnp.int32)}
+    consumed = jnp.full((bsz,), t, jnp.int32) if lengths is None \
+        else lengths.astype(jnp.int32)
+    pos0 = cache["pos"] if cache is not None else 0
+    new_cache: Dict[str, Any] = {"pos": pos0 + consumed}
 
     if cfg.block_kind == "minrnn":
         bc = _minrnn_block_cfg(cfg)
 
-        def body(carry, p_l):
-            h, state = minrnn_blocks.apply(p_l, bc, carry,
-                                           compute_dtype=cfg.cdtype,
-                                           return_state=True)
-            return h, state
+        if cache is not None:
+            state0 = {"h": cache["h"]}
+            if bc.use_conv:
+                state0["conv"] = cache["conv"]
 
-        x, states = _scan_layers(cfg, body, x, params["layers"]["blocks"])
-        cache["h"] = states["h"]
+            def body_r(carry, scanned):
+                p_l, st_l = scanned
+                h, state = minrnn_blocks.apply(p_l, bc, carry, state0=st_l,
+                                               lengths=lengths,
+                                               compute_dtype=cfg.cdtype,
+                                               return_state=True)
+                return h, state
+
+            x, states = _scan_layers(cfg, body_r, x,
+                                     (params["layers"]["blocks"], state0))
+        else:
+            def body(carry, p_l):
+                h, state = minrnn_blocks.apply(p_l, bc, carry,
+                                               lengths=lengths,
+                                               compute_dtype=cfg.cdtype,
+                                               return_state=True)
+                return h, state
+
+            x, states = _scan_layers(cfg, body, x,
+                                     params["layers"]["blocks"])
+        new_cache["h"] = states["h"]
         if bc.use_conv:
-            cache["conv"] = states["conv"]
+            new_cache["conv"] = states["conv"]
 
     elif cfg.block_kind == "ssm":
         def body(carry, p_l):
             nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
             y = nn.norm_apply(cfg.norm, p_l["norm"], carry, **nk)
             out, state = ssd_lib.ssd_block_apply(p_l["mixer"], cfg, y,
-                                                 return_state=True)
+                                                 return_state=True,
+                                                 lengths=lengths)
             return carry + out, state
 
         x, states = _scan_layers(cfg, body, x, params["layers"]["blocks"])
-        cache["conv"] = states["conv"]
-        cache["ssm"] = states["ssm"]
+        new_cache["conv"] = states["conv"]
+        new_cache["ssm"] = states["ssm"]
 
     elif cfg.block_kind == "hybrid":
-        x, cache_h = _hybrid_prefill(params, cfg, x, positions, max_len)
-        cache.update(cache_h)
+        x, cache_h = _hybrid_prefill(params, cfg, x, positions, max_len,
+                                     lengths=lengths)
+        new_cache.update(cache_h)
 
     else:
         layers = params["layers"]
@@ -669,14 +723,14 @@ def prefill(params, cfg, tokens: Array, max_len: int, *,
         if "dense_blocks" in layers:
             def body_d(carry, p_l):
                 return _attn_block_prefill(p_l, cfg, carry, positions,
-                                           has_moe=False)
+                                           has_moe=False, lengths=lengths)
 
             x, mc_d = _scan_layers(cfg, body_d, x, layers["dense_blocks"])
             mix_caches.append(mc_d)
 
         def body(carry, p_l):
             return _attn_block_prefill(p_l, cfg, carry, positions,
-                                       has_moe=has_moe)
+                                       has_moe=has_moe, lengths=lengths)
 
         x, mc = _scan_layers(cfg, body, x, layers["blocks"])
         mix_caches.append(mc)
@@ -686,20 +740,21 @@ def prefill(params, cfg, tokens: Array, max_len: int, *,
         else:
             mc = mix_caches[0]
         if "h" in mc:
-            cache["h"] = mc["h"]
+            new_cache["h"] = mc["h"]
         elif "ckv" in mc:
-            cache["ckv"] = _seed_kv(mc["ckv"], max_len)
-            cache["krope"] = _seed_kv(mc["krope"], max_len)
+            new_cache["ckv"] = _seed_kv(mc["ckv"], max_len)
+            new_cache["krope"] = _seed_kv(mc["krope"], max_len)
         else:
-            cache["k"] = _seed_kv(mc["k"], max_len)
-            cache["v"] = _seed_kv(mc["v"], max_len)
+            new_cache["k"] = _seed_kv(mc["k"], max_len)
+            new_cache["v"] = _seed_kv(mc["v"], max_len)
 
     nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
-    x_last = nn.norm_apply(cfg.norm, params["final_norm"], x[:, -1], **nk)
-    return _logits(params, cfg, x_last), cache
+    x_last = x[:, -1] if lengths is None else nn.gather_last(x, lengths)
+    x_last = nn.norm_apply(cfg.norm, params["final_norm"], x_last, **nk)
+    return _logits(params, cfg, x_last), new_cache
 
 
-def _hybrid_prefill(params, cfg, x, positions, max_len):
+def _hybrid_prefill(params, cfg, x, positions, max_len, lengths=None):
     every = cfg.hybrid_attn_every
     n_groups = cfg.n_layers // every
     blocks = params["layers"]["blocks"]
@@ -712,11 +767,13 @@ def _hybrid_prefill(params, cfg, x, positions, max_len):
             nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
             y = nn.norm_apply(cfg.norm, p_l["norm"], c, **nk)
             out, state = ssd_lib.ssd_block_apply(p_l["mixer"], cfg, y,
-                                                 return_state=True)
+                                                 return_state=True,
+                                                 lengths=lengths)
             return c + out, state
 
         h, states = _iterate(cfg, inner, carry, p_group)
-        h, mc = _attn_block_prefill(shared, cfg, h, positions, has_moe=False)
+        h, mc = _attn_block_prefill(shared, cfg, h, positions, has_moe=False,
+                                    lengths=lengths)
         return h, (states, mc)
 
     x, (states, mc) = _iterate(cfg, _remat(cfg, group_body), x, grouped)

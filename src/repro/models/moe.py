@@ -200,7 +200,7 @@ def moe_apply(params, cfg, x: Array, *, activation: str = "silu"
                                dp_axes=dp, fsdp_axis=fsdp_axis)
             return y.reshape(x_loc.shape), aux
 
-        y, aux = jax.shard_map(
+        y, aux = mesh_ctx.shard_map(
             body, mesh=mesh,
             in_specs=(P(), gw_spec, gw_spec, dw_spec,
                       P(dp, None, None)),

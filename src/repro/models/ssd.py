@@ -226,8 +226,16 @@ def ssd_step(x_t, dt_t, a_log, b_t, c_t, d_skip, state):
 # ---------------------------------------------------------------------------
 
 def ssd_block_apply(params, cfg, u: Array, *, chunk: Optional[int] = None,
-                    return_state: bool = False):
-    """u: (B, T, d_model) -> (B, T, d_model) [, decode state]."""
+                    return_state: bool = False,
+                    lengths: Optional[Array] = None):
+    """u: (B, T, d_model) -> (B, T, d_model) [, decode state].
+
+    ``lengths`` (B,) supports right-padded variable-length batches: padded
+    positions get dt = 0 (decay a = 1, update 0 -- an inert recurrence
+    step, the same trick ``ssd_chunked`` uses for its own chunk padding),
+    so the returned ssm state is exactly the state after ``lengths[b]``
+    tokens; the conv window is gathered at each row's true position.
+    """
     s = cfg.ssm
     d_in = s.d_inner(cfg.d_model)
     nh = s.n_heads(cfg.d_model)
@@ -238,13 +246,16 @@ def ssd_block_apply(params, cfg, u: Array, *, chunk: Optional[int] = None,
     conv_state = None
     if return_state:
         kk = s.conv_kernel - 1
-        pad = max(kk - xbc.shape[-2], 0)
-        win = xbc[..., -kk:, :]
-        if pad:
-            win = jnp.concatenate(
-                [jnp.zeros(xbc.shape[:-2] + (pad, xbc.shape[-1]), xbc.dtype),
-                 win], axis=-2)
-        conv_state = win
+        if lengths is not None:
+            conv_state = nn.gather_conv_window(xbc, lengths, kk)
+        else:
+            pad = max(kk - xbc.shape[-2], 0)
+            win = xbc[..., -kk:, :]
+            if pad:
+                win = jnp.concatenate(
+                    [jnp.zeros(xbc.shape[:-2] + (pad, xbc.shape[-1]),
+                               xbc.dtype), win], axis=-2)
+            conv_state = win
     xbc = jax.nn.silu(nn.causal_conv_apply(params["conv"], xbc))
     x, b, c = (xbc[..., :d_in],
                xbc[..., d_in:d_in + s.n_groups * s.d_state],
@@ -255,6 +266,10 @@ def ssd_block_apply(params, cfg, u: Array, *, chunk: Optional[int] = None,
     c = c.reshape(bsz, t, s.n_groups, s.d_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + params["dt_bias"][None, None, :])
+    if lengths is not None:
+        valid = (jnp.arange(t)[None, :] < lengths[:, None])
+        dt = dt * valid[..., None]
+        x = x * valid[..., None, None].astype(x.dtype)
     out = ssd_chunked(x, dt, params["a_log"], b, c, params["d_skip"],
                       chunk or s.chunk, return_state=return_state,
                       form=s.dual_form)

@@ -1,26 +1,52 @@
-"""Batched serving engine: parallel-scan prefill + slot-based continuous
-batching decode.
+"""Serving engine v2: batched prefill + on-device sampling + chunked prefill.
 
 The paper's serving story (§4.1, App. D.2): prefill processes the whole
 prompt with the parallel scan (one forward), then decode rolls the O(1)
-sequential cell.  The engine keeps a fixed-capacity batch of slots; new
-requests prefill individually and their terminal state is spliced into
-their slot, so decode always runs one fused step for every active request
+sequential cell.  The engine keeps a fixed-capacity batch of slots
 (continuous batching, vLLM-style but with RNN/SSM states as first-class
-cache kinds).
+cache kinds).  v2 rebuilds the three hot paths of the v1 engine:
+
+  * **Batched prefill** -- each admission round gathers every queued
+    request that fits a free slot, right-pads the prompts into ONE
+    ``(k, T_pad)`` ``lm.prefill`` call with per-row length masking
+    (``lengths=``), and splices all k terminal states into their slots in
+    one jitted tree scatter.  v1 prefilled requests one at a time.
+    Padded lengths are bucketed to powers of two so the number of
+    compiled prefill programs stays O(log max_len).
+
+  * **On-device sampling** -- ``serving.sampling`` draws every slot's next
+    token in one jitted call (per-slot temperature / top-k / top-p /
+    PRNG key), replacing v1's per-slot host numpy loop; decode transfers
+    one small token vector per step instead of the full logits matrix.
+
+  * **Chunked prefill** -- prompts longer than ``prefill_chunk`` are
+    prefilled in fixed-size chunks interleaved with decode steps (one
+    chunk per ``step()``), bounding how long running requests stall
+    behind a long prompt.  Supported for recurrent-cache archs
+    (``lm.supports_chunked_prefill``); KV-cache archs prefill
+    whole-prompt.
+
+Scheduling and accounting (queue policy, token counters, tokens/s) live in
+``serving.scheduler``; ``engine.stats.snapshot()`` is the monitoring
+surface.  Greedy engine output is argmax-identical to the single-request
+``generate_one`` reference for every cache kind, under any admission order
+and slot reuse -- the parity tests in tests/test_serving.py drive this.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serving import sampling
+from repro.serving.scheduler import (EngineStats, FifoScheduler,
+                                     SchedulerConfig, bucket_length)
 
 
 @dataclasses.dataclass
@@ -29,26 +55,45 @@ class Request:
     prompt: List[int]
     max_new: int
     temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    prefilled: int = 0            # prompt tokens already consumed
     done: bool = False
 
 
-def _splice(cache_batch, cache_one, slot: int):
-    """Write a prefilled (batch-1) cache into slot `slot`."""
-    def upd(big, small):
-        if big.ndim == 1:                       # pos: (B,)
-            return big.at[slot].set(small[0])
-        # (L, B, ...) or (B, ...)?  all our caches are (L, B, ...) except pos
-        return big.at[:, slot].set(small[:, 0])
+def _splice_rows(cache_batch, cache_rows, slots):
+    """Write k prefilled rows into slots ``slots`` of the engine cache.
 
-    return jax.tree.map(upd, cache_batch, cache_one)
+    Every cache leaf is (L, B, ...) with batch on axis 1, except the shared
+    position counter ``pos`` which is (B,).  One jitted tree-map scatter
+    replaces v1's per-request splice loop.
+    """
+    def upd(big, small):
+        if big.ndim == 1:                       # pos: (B,) <- (k,)
+            return big.at[slots].set(small)
+        return big.at[:, slots].set(small)      # (L, B, ...) <- (L, k, ...)
+
+    return jax.tree.map(upd, cache_batch, cache_rows)
+
+
+def _take_rows(cache_rows, keep):
+    """Row-subset of a batched cache pytree (same layout as above)."""
+    def sel(leaf):
+        if leaf.ndim == 1:
+            return leaf[keep]
+        return leaf[:, keep]
+
+    return jax.tree.map(sel, cache_rows)
 
 
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
-                 max_len: int = 2048, seed: int = 0):
+                 max_len: int = 2048, seed: int = 0,
+                 prefill_chunk: Optional[int] = None,
+                 max_prefill_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -56,74 +101,224 @@ class ServingEngine:
         self.cache = lm.init_cache(cfg, max_batch, max_len)
         self.free = list(range(max_batch))
         self.active: Dict[int, Request] = {}
-        self.queue: List[Request] = []
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
-        self._rng = np.random.default_rng(seed)
         self._last_token = np.zeros((max_batch,), np.int32)
+
+        self.scheduler = FifoScheduler(SchedulerConfig(
+            max_batch=max_batch, prefill_chunk=prefill_chunk,
+            max_prefill_tokens=max_prefill_tokens))
+        self.stats = EngineStats()
+        self._chunking = bool(prefill_chunk) and lm.supports_chunked_prefill(cfg)
+        # in-flight chunked-prefill cohort: requests that prefill together,
+        # one chunk per step, until each hands its slot to decode
+        self._cohort: List[Request] = []
+        self._cohort_cache: Optional[Dict[str, Any]] = None
+
+        # per-slot sampling controls: host mirrors + cached device copies
+        # (controls change only at admission; don't re-upload per step)
+        self._temp = np.zeros((max_batch,), np.float32)
+        self._topk = np.zeros((max_batch,), np.int32)
+        self._topp = np.ones((max_batch,), np.float32)
+        self._controls_dev = None
+        self._keys = sampling.make_keys(seed, max_batch)
 
         self._decode = jax.jit(
             lambda p, tok, cache: lm.decode_step(p, cfg, tok, cache))
-        self._splice = jax.jit(_splice, static_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda p, toks, lengths: lm.prefill(p, cfg, toks, max_len,
+                                                lengths=lengths))
+        self._prefill_resume = jax.jit(
+            lambda p, toks, lengths, cache: lm.prefill(
+                p, cfg, toks, max_len, lengths=lengths, cache=cache))
+        self._splice = jax.jit(_splice_rows)
 
     # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int = 32,
-               temperature: float = 0.0, eos: Optional[int] = None) -> int:
+               temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+               eos: Optional[int] = None) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"engine max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new,
-                                  temperature, eos))
+        self.scheduler.submit(Request(rid, list(prompt), max_new,
+                                      temperature, top_k, top_p, eos))
+        self.stats.submitted += 1
+        self.stats.observe_queue(len(self.scheduler))
         return rid
 
     # ------------------------------------------------------------------
+    # Prefill path
+    # ------------------------------------------------------------------
+    def _pad_batch(self, reqs: List[Request], chunk: Optional[int]):
+        """Right-pad the next (chunk of the) prompt of each request into a
+        (k, T_pad) token matrix + true lengths."""
+        pieces = []
+        for r in reqs:
+            rest = r.prompt[r.prefilled:]
+            pieces.append(rest[:chunk] if chunk else rest)
+        # clamp the pow2 bucket to max_len: KV caches are sized (max_len,)
+        # and _seed_kv cannot pad a prompt matrix wider than that
+        t_pad = min(bucket_length(max(len(p) for p in pieces)),
+                    self.max_len)
+        toks = np.zeros((len(reqs), t_pad), np.int32)
+        lengths = np.zeros((len(reqs),), np.int32)
+        for i, p in enumerate(pieces):
+            toks[i, :len(p)] = p
+            lengths[i] = len(p)
+        self.stats.prefill_tokens += int(lengths.sum())
+        self.stats.padded_prefill_tokens += len(reqs) * t_pad
+        return jnp.asarray(toks), jnp.asarray(lengths)
+
+    def _set_slot_controls(self, reqs: List[Request]):
+        for r in reqs:
+            self._temp[r.slot] = r.temperature
+            self._topk[r.slot] = r.top_k
+            self._topp[r.slot] = r.top_p
+        self._controls_dev = None               # invalidate device copies
+
+    def _controls(self):
+        if self._controls_dev is None:
+            self._controls_dev = (jnp.asarray(self._temp),
+                                  jnp.asarray(self._topk),
+                                  jnp.asarray(self._topp))
+        return self._controls_dev
+
+    def _first_tokens(self, reqs: List[Request], logits_rows):
+        """Sample each new request's first token from its last-prompt-position
+        logits (one vectorized call, per-slot keys)."""
+        slots = np.asarray([r.slot for r in reqs])
+        keys = self._keys[jnp.asarray(slots)]
+        toks, new_keys = sampling.sample_tokens(
+            logits_rows, keys,
+            jnp.asarray(self._temp[slots]), jnp.asarray(self._topk[slots]),
+            jnp.asarray(self._topp[slots]))
+        self._keys = self._keys.at[jnp.asarray(slots)].set(new_keys)
+        toks = np.asarray(toks)
+        for i, r in enumerate(reqs):
+            t = int(toks[i])
+            r.out.append(t)
+            self._last_token[r.slot] = t
+            self.active[r.slot] = r
+            if (r.eos is not None and t == r.eos) or len(r.out) >= r.max_new:
+                self._retire(r.slot)
+
     def _admit(self):
-        while self.queue and self.free:
-            req = self.queue.pop(0)
-            slot = self.free.pop(0)
-            req.slot = slot
-            logits, cache_one = lm.prefill(
-                self.params, self.cfg, jnp.asarray([req.prompt], jnp.int32),
-                self.max_len)
-            self.cache = self._splice(self.cache, cache_one, slot)
-            tok = self._sample(np.asarray(logits)[0], req)
-            req.out.append(int(tok))
-            self._last_token[slot] = tok
-            self.active[slot] = req
+        """Move queued requests into slots.  Whole-prompt mode prefills the
+        admission group in one batched call; chunked mode enqueues the group
+        as the prefill cohort processed by ``_prefill_step``.
 
-    def _sample(self, logits: np.ndarray, req: Request) -> int:
-        logits = logits[:self.cfg.vocab_size]
-        if req.temperature <= 0:
-            return int(logits.argmax())
-        p = np.exp((logits - logits.max()) / req.temperature)
-        p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+        While a cohort is in flight (at most one at a time), requests at
+        the queue head whose whole prompt fits in one chunk are still
+        admitted into idle slots via the whole-prompt path -- a long
+        prompt must not head-of-line-block short ones."""
+        if self._cohort:
+            group = self.scheduler.take(
+                len(self.free), self.scheduler.cfg.prefill_chunk)
+        else:
+            group = self.scheduler.take(len(self.free))
+        if not group:
+            return
+        for r in group:
+            r.slot = self.free.pop(0)
+        self._set_slot_controls(group)
+        self.stats.admitted += len(group)
+
+        if self._chunking and not self._cohort:
+            self._cohort = group
+            self._cohort_cache = None
+            return
+
+        toks, lengths = self._pad_batch(group, None)
+        with self.stats.timed("prefill"):
+            logits, rows = self._prefill(self.params, toks, lengths)
+            jax.block_until_ready(logits)
+        self.stats.prefill_calls += 1
+        slots = jnp.asarray([r.slot for r in group])
+        self.cache = self._splice(self.cache, rows, slots)
+        for r in group:
+            r.prefilled = len(r.prompt)
+        self._first_tokens(group, logits)
+
+    def _prefill_step(self):
+        """Advance the chunked-prefill cohort by one fixed-size chunk."""
+        if not self._cohort:
+            return
+        chunk = self.scheduler.cfg.prefill_chunk
+        toks, lengths = self._pad_batch(self._cohort, chunk)
+        with self.stats.timed("prefill"):
+            if self._cohort_cache is None:
+                logits, rows = self._prefill(self.params, toks, lengths)
+            else:
+                logits, rows = self._prefill_resume(
+                    self.params, toks, lengths, self._cohort_cache)
+            jax.block_until_ready(logits)
+        self.stats.prefill_calls += 1
+
+        lengths = np.asarray(lengths)
+        finished, keep = [], []
+        for i, r in enumerate(self._cohort):
+            r.prefilled += int(lengths[i])
+            (finished if r.prefilled >= len(r.prompt) else keep).append(i)
+        if finished:
+            done_reqs = [self._cohort[i] for i in finished]
+            idx = jnp.asarray(finished)
+            slots = jnp.asarray([r.slot for r in done_reqs])
+            self.cache = self._splice(self.cache, _take_rows(rows, idx),
+                                      slots)
+            self._first_tokens(done_reqs, logits[idx])
+        self._cohort = [self._cohort[i] for i in keep]
+        self._cohort_cache = _take_rows(rows, jnp.asarray(keep)) \
+            if keep else None
 
     # ------------------------------------------------------------------
+    # Decode path
+    # ------------------------------------------------------------------
+    def _retire(self, slot: int):
+        req = self.active.pop(slot)
+        req.done = True
+        self.finished[req.rid] = req
+        self.free.append(slot)
+        self.stats.completed += 1
+
     def step(self) -> int:
-        """Admit pending requests, decode one token for every active slot.
-        Returns the number of active requests after the step."""
+        """Admit pending requests, advance chunked prefill by one chunk,
+        decode one token for every active slot.  Returns the number of
+        requests still in flight (active + prefilling + queued)."""
         self._admit()
-        if not self.active:
-            return 0
-        tok = jnp.asarray(self._last_token)
-        logits, self.cache = self._decode(self.params, tok, self.cache)
-        logits = np.asarray(logits)
-        for slot, req in list(self.active.items()):
-            t = self._sample(logits[slot], req)
-            req.out.append(t)
-            self._last_token[slot] = t
-            if (req.eos is not None and t == req.eos) or \
-                    len(req.out) >= req.max_new:
-                req.done = True
-                self.finished[req.rid] = req
-                del self.active[slot]
-                self.free.append(slot)
-        return len(self.active)
+        self._prefill_step()
+        if self.active:
+            tok = jnp.asarray(self._last_token)
+            temp, topk, topp = self._controls()
+            with self.stats.timed("decode"):
+                logits, self.cache = self._decode(self.params, tok,
+                                                  self.cache)
+                toks, self._keys = sampling.sample_tokens(
+                    logits, self._keys, temp, topk, topp)
+                toks_np = np.asarray(toks)
+            self.stats.decode_steps += 1
+            for slot, req in list(self.active.items()):
+                t = int(toks_np[slot])
+                req.out.append(t)
+                self._last_token[slot] = t
+                self.stats.decode_tokens += 1
+                if (req.eos is not None and t == req.eos) or \
+                        len(req.out) >= req.max_new:
+                    self._retire(slot)
+        return len(self.active) + len(self._cohort) + len(self.scheduler)
 
     # ------------------------------------------------------------------
-    def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+    def run_to_completion(self, max_steps: int = 10_000
+                          ) -> Dict[int, List[int]]:
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (len(self.scheduler) or self._cohort or self.active) \
+                and steps < max_steps:
             self.step()
             steps += 1
         return {rid: r.out for rid, r in self.finished.items()}
@@ -131,7 +326,7 @@ class ServingEngine:
 
 def generate_one(cfg, params, prompt: List[int], max_new: int = 32,
                  max_len: int = 2048) -> List[int]:
-    """Single-request reference path (tests compare the engine to this)."""
+    """Single-request greedy reference path (the engine parity oracle)."""
     logits, cache = lm.prefill(params, cfg, jnp.asarray([prompt], jnp.int32),
                                max_len)
     out = [int(np.asarray(logits)[0, :cfg.vocab_size].argmax())]

@@ -1,0 +1,86 @@
+"""On-device vectorized token sampling for the serving engine.
+
+One jitted call samples the whole ``(batch, vocab)`` logits matrix at once
+with *per-slot* controls -- temperature, top-k, top-p and an independent RNG
+key per slot -- replacing the engine v1 per-request host-side numpy loop
+(one device->host transfer + one python iteration per slot per step).
+
+Semantics (matching the common serving stacks):
+
+  * ``temperature <= 0``  -> greedy argmax (exact, not a small-T limit).
+  * ``temperature > 0``   -> categorical over ``softmax(logits / T)`` after
+    the support restrictions below.
+  * ``top_k > 0``    keeps the k highest logits (ties at the k-th value are
+    all kept); ``top_k <= 0`` disables the filter.
+  * ``top_p < 1``    keeps the smallest set of tokens whose probability mass
+    reaches ``top_p`` (nucleus sampling); ``top_p >= 1`` disables it.
+
+All controls are traced arrays, so one compiled program serves any mix of
+greedy / sampled slots.  Keys advance every call (`jax.random.split` per
+slot), making runs reproducible under a fixed engine seed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG = jnp.float32(-1e30)     # "removed from support" without -inf NaN risk
+
+
+def make_keys(seed: int, batch: int) -> Array:
+    """Independent per-slot PRNG keys, (batch, 2) uint32."""
+    base = jax.random.PRNGKey(int(seed) % (2**31 - 1))
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(batch))
+
+
+def _support_mask(logits: Array, top_k: Array, top_p: Array) -> Array:
+    """Apply top-k then nucleus filtering with ONE descending sort.
+
+    Both filters keep a *prefix* of the sorted row (top-k keeps everything
+    >= the k-th value, ties included; the nucleus keeps the smallest prefix
+    whose mass reaches top_p), so their intersection is a prefix too: find
+    its last element and threshold the unsorted row against it.
+    """
+    v = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+
+    k = jnp.clip(top_k, 1, v).astype(jnp.int32)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    kth = jnp.where((top_k > 0)[:, None], kth, _NEG)
+    keep_k = sorted_desc >= kth                       # prefix (ties kept)
+
+    probs = jax.nn.softmax(jnp.where(keep_k, sorted_desc, _NEG), axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # token j (sorted) is in the nucleus iff the mass *before* it is
+    # < top_p; top_p >= 1 disables explicitly (f32 cumsum saturates at 1.0,
+    # which would otherwise drop tiny-probability tail tokens)
+    keep_p = ((csum - probs) < top_p[:, None]) | (top_p >= 1.0)[:, None]
+
+    count = jnp.maximum(jnp.sum(keep_k & keep_p, axis=-1), 1).astype(
+        jnp.int32)
+    cutoff = jnp.take_along_axis(sorted_desc, (count - 1)[:, None], axis=-1)
+    return jnp.where(logits >= cutoff, logits, _NEG)
+
+
+@jax.jit
+def sample_tokens(logits: Array, keys: Array, temperature: Array,
+                  top_k: Array, top_p: Array):
+    """logits: (B, V); keys: (B, 2) uint32; temperature/top_p: (B,) f32;
+    top_k: (B,) int32.  Returns (tokens (B,) int32, advanced keys)."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    split = jax.vmap(jax.random.split)(keys)        # (B, 2, 2)
+    new_keys, use_keys = split[:, 0], split[:, 1]
+
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = _support_mask(scaled, top_k, top_p)
+    sampled = jax.vmap(jax.random.categorical)(use_keys, scaled
+                                               ).astype(jnp.int32)
+    tokens = jnp.where(temperature > 0, sampled, greedy)
+    return tokens, new_keys

@@ -1,0 +1,138 @@
+"""Admission scheduling + engine statistics for the serving engine.
+
+The scheduler is deliberately simple (FIFO admission into free slots with a
+per-round prefill token budget); its value is that the policy and the
+accounting live *outside* the engine's jax plumbing, so policy experiments
+(priority queues, length-aware packing) don't touch device code.
+
+Shape bucketing: jitted prefill recompiles per (rows, T_pad) shape, so
+``bucket_length`` rounds the padded prompt length up to a power of two
+(min 8) -- the number of distinct compiled prefill programs is then
+O(log max_len) rather than O(#distinct prompt lengths).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+def bucket_length(t: int, minimum: int = 8) -> int:
+    """Round t up to a power of two (>= minimum) to bound recompiles."""
+    b = minimum
+    while b < t:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_batch: int = 8
+    # prompts longer than this prefill in fixed-size chunks interleaved
+    # with decode steps (None/0 = whole-prompt prefill).  Only effective
+    # for archs whose cache supports resume (lm.supports_chunked_prefill).
+    prefill_chunk: Optional[int] = None
+    # cap on summed prompt tokens admitted per round (None = no cap);
+    # bounds the size of one batched prefill call under bursty arrivals
+    max_prefill_tokens: Optional[int] = None
+
+
+class FifoScheduler:
+    """FIFO admission: fill free slots, respecting the prefill token budget."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.waiting: List = []           # Request objects (engine-owned)
+
+    def submit(self, req) -> None:
+        self.waiting.append(req)
+
+    def __len__(self) -> int:
+        return len(self.waiting)
+
+    def take(self, free_slots: int,
+             max_prompt_len: Optional[int] = None) -> List:
+        """Pop the next admission group: at most ``free_slots`` requests,
+        at most ``max_prefill_tokens`` summed prompt tokens (always at
+        least one request, so oversized prompts cannot starve).
+
+        ``max_prompt_len`` stops at the first queue head longer than the
+        limit (FIFO order preserved) -- used to admit short prompts into
+        idle slots while a chunked-prefill cohort is in flight.
+        """
+        budget = self.cfg.max_prefill_tokens
+        group: List = []
+        used = 0
+        while self.waiting and len(group) < free_slots:
+            nxt = len(self.waiting[0].prompt)
+            if max_prompt_len is not None and nxt > max_prompt_len:
+                break
+            if group and budget is not None and used + nxt > budget:
+                break
+            group.append(self.waiting.pop(0))
+            used += nxt
+        return group
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters + wall-clock for the serving hot paths.
+
+    ``prefill_tokens`` counts true prompt tokens (padding excluded);
+    ``decode_tokens`` counts generated tokens (one per active slot per
+    step).  Timers wrap the device calls including host sync, so
+    tokens-per-second is an end-to-end number.
+    """
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    prefill_tokens: int = 0
+    padded_prefill_tokens: int = 0
+    prefill_calls: int = 0
+    decode_tokens: int = 0
+    decode_steps: int = 0
+    queue_peak: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+
+    def observe_queue(self, depth: int) -> None:
+        self.queue_peak = max(self.queue_peak, depth)
+
+    def timed(self, kind: str):
+        """Context manager: adds elapsed wall time to ``<kind>_time_s``."""
+        stats = self
+
+        class _Timer:
+            def __enter__(self):
+                self.t0 = time.perf_counter()
+
+            def __exit__(self, *exc):
+                dt = time.perf_counter() - self.t0
+                setattr(stats, f"{kind}_time_s",
+                        getattr(stats, f"{kind}_time_s") + dt)
+                return False
+
+        return _Timer()
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def total_time_s(self) -> float:
+        return self.prefill_time_s + self.decode_time_s
+
+    def tokens_per_second(self) -> float:
+        return self.total_tokens / max(self.total_time_s, 1e-9)
+
+    def decode_tokens_per_second(self) -> float:
+        return self.decode_tokens / max(self.decode_time_s, 1e-9)
+
+    def snapshot(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["tokens_per_second"] = self.tokens_per_second()
+        d["decode_tokens_per_second"] = self.decode_tokens_per_second()
+        d["padding_overhead"] = (
+            self.padded_prefill_tokens / max(self.prefill_tokens, 1))
+        return d

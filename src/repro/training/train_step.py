@@ -86,6 +86,7 @@ def make_dp_compressed_step(cfg, opt_cfg: opt_lib.AdamWConfig, mesh, *,
     """Explicit-DP step: per-device grads cast to ``grad_dtype`` before the
     cross-device psum (gradient compression), fp32 master accumulation in
     the optimizer.  Params replicated across the mesh."""
+    from repro.distributed import context as mesh_ctx
     from repro.distributed.context import dp_axes
 
     loss_fn = make_loss_fn(cfg)
@@ -109,7 +110,7 @@ def make_dp_compressed_step(cfg, opt_cfg: opt_lib.AdamWConfig, mesh, *,
     def wrapped(params, opt_state, batch):
         in_batch_specs = jax.tree.map(
             lambda x: P(dp, *([None] * (x.ndim - 1))), batch)
-        return jax.shard_map(
+        return mesh_ctx.shard_map(
             local_step, mesh=mesh,
             in_specs=(P(), P(), in_batch_specs),
             out_specs=(P(), P(), P()),

@@ -1,0 +1,123 @@
+"""Shared test config.
+
+Two things live here:
+
+1. A vendored no-op-free fallback shim for ``hypothesis``: the tier-1 suite
+   uses property-based tests, but the execution image does not ship the
+   package.  When the real ``hypothesis`` is importable we use it untouched;
+   otherwise a small deterministic stand-in is installed into
+   ``sys.modules`` *before* the test modules are collected, so
+   ``from hypothesis import given, settings, strategies as st`` works either
+   way.  The stand-in draws a fixed number of pseudo-random examples per
+   test (seeded from the test name, so runs are reproducible) and always
+   includes the boundary values.
+
+2. The ``slow`` marker registration lives in ``pytest.ini``; nothing to do
+   here beyond keeping imports cheap.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw rule: boundary examples first, then seeded random draws."""
+
+        def __init__(self, draw, boundary=()):
+            self._draw = draw
+            self._boundary = list(boundary)
+
+        def example(self, rng, index):
+            if index < len(self._boundary):
+                return self._boundary[index]
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         boundary=[min_value, max_value])
+
+    def _floats(min_value, max_value, **_kw):
+        span = float(max_value) - float(min_value)
+        return _Strategy(lambda rng: min_value + rng.random() * span,
+                         boundary=[float(min_value), float(max_value), 0.0
+                                   if min_value <= 0.0 <= max_value
+                                   else float(min_value)])
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5,
+                         boundary=[False, True])
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements),
+                         boundary=elements[:2])
+
+    def _lists(elem, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem._draw(rng) for _ in range(n)]
+        return _Strategy(draw, boundary=[[elem.example(random.Random(0), 0)
+                                          for _ in range(min_size)]])
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    class _SkipExample(Exception):
+        pass
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper(*call_args, **call_kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(fn.__name__)
+                for i in range(n):
+                    args = [s.example(rng, i) for s in arg_strategies]
+                    kwargs = {k: s.example(rng, i)
+                              for k, s in kw_strategies.items()}
+                    kwargs.update(call_kwargs)
+                    try:
+                        fn(*call_args, *args, **kwargs)
+                    except _SkipExample:
+                        continue
+                    except Exception as e:  # annotate the failing example
+                        raise AssertionError(
+                            f"falsifying example (shim): args={args} "
+                            f"kwargs={kwargs}") from e
+            # NB: no functools.wraps / __wrapped__ -- pytest would follow it
+            # and treat the strategy parameters as fixture requests.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.sampled_from = _sampled_from
+    _st.lists = _lists
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                             data_too_large="data_too_large")
+    _hyp.assume = lambda cond: None if cond else (_ for _ in ()).throw(
+        _SkipExample())
+    _hyp.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

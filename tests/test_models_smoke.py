@@ -10,6 +10,10 @@ import pytest
 from repro.configs import archs
 from repro.models import encdec, lm
 
+# heavy tier: every arch x (forward, train step, prefill/decode roll-out);
+# deselect with `pytest -m "not slow"` for the fast loop
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = archs.ASSIGNED + archs.PAPER_OWN + archs.EXTRAS
 
 B, S = 2, 16

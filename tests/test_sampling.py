@@ -1,0 +1,145 @@
+"""Property tests for the on-device sampling module (serving.sampling).
+
+Core properties: the greedy path is exact argmax, sampling approaches
+greedy as T -> 0, top-k / top-p restrict the support to exactly the
+documented sets, and everything is deterministic under a fixed key.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import sampling
+
+V = 64
+
+
+def _logits(seed, batch=4, v=V, scale=3.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (batch, v)) * scale
+
+
+def _call(logits, seed=0, temperature=1.0, top_k=0, top_p=1.0):
+    b = logits.shape[0]
+    return sampling.sample_tokens(
+        logits, sampling.make_keys(seed, b),
+        jnp.full((b,), temperature, jnp.float32),
+        jnp.full((b,), top_k, jnp.int32),
+        jnp.full((b,), top_p, jnp.float32))
+
+
+def test_greedy_is_exact_argmax():
+    logits = _logits(0)
+    toks, _ = _call(logits, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_temperature_to_zero_limit_is_greedy(seed):
+    """As T -> 0 the categorical collapses onto the argmax."""
+    logits = _logits(seed)
+    toks, _ = _call(logits, seed=seed, temperature=1e-4)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), k=st.integers(1, V))
+def test_top_k_restricts_support(seed, k):
+    logits = _logits(seed, batch=8)
+    toks, _ = _call(logits, seed=seed, temperature=1.3, top_k=k)
+    toks = np.asarray(toks)
+    srt = np.sort(np.asarray(logits), axis=-1)[:, ::-1]
+    for b in range(logits.shape[0]):
+        kth = srt[b, k - 1]
+        assert np.asarray(logits)[b, toks[b]] >= kth, (b, k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), p=st.floats(0.05, 1.0))
+def test_top_p_restricts_support(seed, p):
+    """Sampled token must lie in the smallest prefix of the sorted
+    distribution whose mass reaches p (ties at the cutoff kept)."""
+    logits = _logits(seed, batch=8)
+    toks, _ = _call(logits, seed=seed, temperature=1.0, top_p=p)
+    toks = np.asarray(toks)
+    l_np = np.asarray(logits, np.float64)
+    for b in range(logits.shape[0]):
+        srt = np.sort(l_np[b])[::-1]
+        probs = np.exp(srt - srt.max())
+        probs /= probs.sum()
+        csum = np.cumsum(probs)
+        count = max(1, int(np.sum((csum - probs) < p)))
+        cutoff = srt[count - 1]
+        assert l_np[b, toks[b]] >= cutoff - 1e-6, (b, p)
+
+
+def test_top_k_one_is_greedy_even_at_high_temperature():
+    logits = _logits(3)
+    toks, _ = _call(logits, temperature=5.0, top_k=1)
+    np.testing.assert_array_equal(np.asarray(toks),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_deterministic_under_fixed_key(seed):
+    logits = _logits(seed)
+    t1, k1 = _call(logits, seed=seed, temperature=0.9, top_k=10, top_p=0.9)
+    t2, k2 = _call(logits, seed=seed, temperature=0.9, top_k=10, top_p=0.9)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_keys_advance_and_vary_across_steps():
+    logits = _logits(7, batch=16, scale=0.3)   # flat-ish: sampling visible
+    keys = sampling.make_keys(0, 16)
+    temps = jnp.ones((16,), jnp.float32)
+    topk = jnp.zeros((16,), jnp.int32)
+    topp = jnp.ones((16,), jnp.float32)
+    t1, keys2 = sampling.sample_tokens(logits, keys, temps, topk, topp)
+    t2, keys3 = sampling.sample_tokens(logits, keys2, temps, topk, topp)
+    assert not np.array_equal(np.asarray(keys), np.asarray(keys2))
+    # same logits, advanced keys: draws differ somewhere with high prob
+    assert not np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_per_slot_controls_are_independent():
+    """Greedy and sampled slots coexist in one call."""
+    logits = _logits(11, batch=6, scale=0.2)
+    keys = sampling.make_keys(0, 6)
+    temps = jnp.asarray([0.0, 2.0, 0.0, 2.0, 0.0, 2.0], jnp.float32)
+    topk = jnp.zeros((6,), jnp.int32)
+    topp = jnp.ones((6,), jnp.float32)
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    draws = []
+    for trial in range(8):
+        toks, keys = sampling.sample_tokens(logits, keys, temps, topk, topp)
+        toks = np.asarray(toks)
+        np.testing.assert_array_equal(toks[::2], greedy[::2])
+        draws.append(toks[1::2].copy())
+    # hot slots actually explore (flat logits, T=2): not all draws equal
+    assert len({tuple(d) for d in draws}) > 1
+
+
+def test_top_p_one_disables_nucleus_entirely():
+    """top_p=1.0 must keep the FULL support even when the f32 cumsum
+    saturates at 1.0 (one dominant token + tiny tail)."""
+    logits = np.full((2, V), -20.0, np.float32)
+    logits[:, 0] = 10.0                         # tail probs ~ e^-30
+    masked = sampling._support_mask(jnp.asarray(logits),
+                                    jnp.zeros((2,), jnp.int32),
+                                    jnp.ones((2,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(masked), logits)
+
+
+def test_masked_vocab_tail_is_never_sampled():
+    """Columns at -1e30 (padded vocab) have zero probability."""
+    logits = np.array(_logits(13, batch=4, scale=0.1))
+    logits[:, V // 2:] = -1e30
+    for trial in range(5):
+        toks, _ = _call(jnp.asarray(logits), seed=trial, temperature=3.0)
+        assert np.all(np.asarray(toks) < V // 2)

@@ -126,6 +126,78 @@ def test_property_scan_composition(t, split, seed):
         rtol=5e-5, atol=5e-5)
 
 
+# ---------------------------------------------------------------------------
+# Pallas chunked-scan kernel: tiling sweeps against the pure-jnp oracle
+# (interpret mode; ops.py handles padding of ragged T / D)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.scan import kernel as scan_kernel
+from repro.kernels.scan import ops as scan_ops
+from repro.kernels.scan import ref as scan_ref
+
+
+def _kernel_case(key, t, d, bsz=2):
+    k1, k2, k3 = jax.random.split(key, 3)
+    a = jax.nn.sigmoid(jax.random.normal(k1, (bsz, t, d)))
+    b = jax.random.normal(k2, (bsz, t, d))
+    h0 = jax.random.normal(k3, (bsz, d))
+    return a, b, h0
+
+
+@pytest.mark.parametrize("block_t,block_d", [
+    (8, 128),        # minimum sublane tile
+    (16, 256),       # wider lanes
+    (32, 128),
+    (128, 512),      # block_t > T: ops clamps to next pow2 of T
+    (256, 128),      # default
+])
+def test_linear_scan_kernel_tilings(block_t, block_d):
+    a, b, h0 = _kernel_case(jax.random.PRNGKey(block_t + block_d), 96, 40)
+    out = scan_ops.linear_scan(a, b, h0, block_t, block_d, True)
+    ref = scan_ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("t,d", [
+    (1, 1),          # degenerate
+    (5, 3),          # both odd, below one tile
+    (33, 17),        # odd, just past tile boundaries
+    (100, 70),       # ragged mid-size
+    (127, 129),      # one under / one over pow2 and lane width
+    (257, 1),        # long time axis, single feature
+])
+def test_linear_scan_kernel_odd_sizes_padding_path(t, d):
+    """Arbitrary T/D exercise the ops.py identity-padding (a=1, b=0) path."""
+    a, b, h0 = _kernel_case(jax.random.PRNGKey(t * 1000 + d), t, d)
+    out = scan_ops.linear_scan(a, b, h0, 64, 128, True)
+    ref = scan_ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    t=st.integers(1, 70),
+    d=st.integers(1, 40),
+    block_t=st.sampled_from([8, 16, 64, 256]),
+    seed=st.integers(0, 2**20),
+)
+def test_property_linear_scan_kernel_matches_ref(t, d, block_t, seed):
+    a, b, h0 = _kernel_case(jax.random.PRNGKey(seed), t, d, bsz=1)
+    out = scan_ops.linear_scan(a, b, h0, block_t, 128, True)
+    ref = scan_ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+def test_linear_scan_kernel_direct_tile_aligned():
+    """Call the raw kernel (no ops padding) on exactly tile-aligned shapes
+    with a non-default tiling."""
+    a, b, h0 = _kernel_case(jax.random.PRNGKey(42), 64, 256)
+    out = scan_kernel.linear_scan_kernel(a, b, h0, block_t=16, block_d=128,
+                                         interpret=True)
+    ref = scan_ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+
 def test_bf16_scan_runs():
     a, b = _rand(jax.random.PRNGKey(8), (2, 32, 8), "gate")
     out = scan_lib.scan_associative(a.astype(jnp.bfloat16),

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# heavy tier: each test boots a fresh 8-fake-device interpreter
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -27,6 +30,7 @@ def test_sequence_parallel_scan_matches_sequential():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import scan as scan_lib
+        from repro.distributed import context as mesh_ctx
 
         mesh = jax.make_mesh((8,), ("data",))
         key = jax.random.PRNGKey(0)
@@ -35,7 +39,7 @@ def test_sequence_parallel_scan_matches_sequential():
         b = jax.random.normal(k2, (2, 64, 4))
         ref = scan_lib.scan_sequential(a, b)
 
-        fn = jax.shard_map(
+        fn = mesh_ctx.shard_map(
             lambda a, b: scan_lib.scan_sequence_parallel(a, b, "data"),
             mesh=mesh, in_specs=(P(None, "data", None),) * 2,
             out_specs=P(None, "data", None))
@@ -130,7 +134,10 @@ def test_tiny_dryrun_lower_compile():
                     kw["out_shardings"] = out_sh
                 with mesh_ctx.use_mesh(mesh):
                     c = jax.jit(fn, **kw).lower(*args).compile()
-                assert c.cost_analysis()["flops"] > 0
+                ca = c.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                assert ca["flops"] > 0
                 print(arch, sh.name, "OK")
     """, timeout=900)
 
