@@ -3,7 +3,7 @@
 
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-serving bench-engine example-serve
+.PHONY: test test-fast test-serving bench-engine bench-train example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -16,6 +16,9 @@ test-serving:    ## engine + sampling + kernel-scan tests only
 
 bench-engine:    ## v1-vs-v2 serving throughput sweep
 	PYTHONPATH=src python -m benchmarks.engine_throughput
+
+bench-train:     ## train-step tokens/s across scan strategies -> BENCH_train.json
+	PYTHONPATH=src python -m benchmarks.train_throughput
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -1,8 +1,12 @@
 """Shared benchmark helpers.  Every bench emits ``name,us_per_call,derived``
-CSV rows (assignment contract for benchmarks/run.py)."""
+CSV rows (assignment contract for benchmarks/run.py); benches that feed the
+perf trajectory additionally dump machine-readable JSON via ``dump_json``
+(kernel_bench -> BENCH_kernel.json, train_throughput -> BENCH_train.json,
+engine_throughput -> BENCH_engine.json)."""
 
 from __future__ import annotations
 
+import json
 import time
 from typing import Callable, Optional
 
@@ -33,3 +37,18 @@ def row(name: str, us: float, derived: str = "") -> str:
 
 def header(title: str):
     print(f"# --- {title} ---", flush=True)
+
+
+def dump_json(path: str, payload: dict) -> str:
+    """Write a benchmark result dict as pretty JSON; returns the path.
+
+    Adds a ``backend`` key so downstream consumers can tell real-TPU
+    numbers from CPU interpret-mode structural runs.
+    """
+    payload = dict(payload)
+    payload.setdefault("backend", jax.default_backend())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}", flush=True)
+    return path

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.bench_utils import header, row
+from benchmarks.bench_utils import dump_json, header, row
 from repro.configs import archs
 from repro.models import lm
 from repro.serving.engine import ServingEngine
@@ -140,7 +140,8 @@ def run_engine(make_engine, prompts, max_new, temperature):
 
 
 def bench(arch: str, batches, n_requests: int, max_new: int,
-          temperature: float, prefill_chunk: Optional[int]):
+          temperature: float, prefill_chunk: Optional[int],
+          out_path: str = "BENCH_engine.json"):
     cfg = archs.smoke(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     max_len = 160
@@ -163,10 +164,19 @@ def bench(arch: str, batches, n_requests: int, max_new: int,
             results[(name, mb)] = tps
             row(f"engine_{name}_b{mb}", dt * 1e6, f"{tps:.1f} tok/s")
 
+    speedups = {}
     for mb in batches:
         if ("seed_v1", mb) in results and ("v2", mb) in results:
-            speedup = results[("v2", mb)] / results[("seed_v1", mb)]
-            row(f"engine_speedup_b{mb}", 0.0, f"{speedup:.2f}x v2/v1")
+            speedups[mb] = results[("v2", mb)] / results[("seed_v1", mb)]
+            row(f"engine_speedup_b{mb}", 0.0, f"{speedups[mb]:.2f}x v2/v1")
+    dump_json(out_path, {
+        "arch": arch,
+        "n_requests": n_requests,
+        "max_new": max_new,
+        "tokens_per_s": {f"{name}_b{mb}": tps
+                         for (name, mb), tps in results.items()},
+        "speedup_v2_over_v1": speedups,
+    })
     return results
 
 
@@ -178,9 +188,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args(argv)
     bench(args.arch, args.batches, args.n_requests, args.max_new,
-          args.temperature, args.prefill_chunk)
+          args.temperature, args.prefill_chunk, out_path=args.out)
 
 
 if __name__ == "__main__":

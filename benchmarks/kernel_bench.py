@@ -1,25 +1,34 @@
-"""Kernel micro-bench: Pallas chunked scan (interpret) vs jnp strategies.
+"""Kernel micro-bench: Pallas kernels (interpret off-TPU) vs jnp strategies.
 
-On CPU the Pallas kernel runs in interpret mode (python), so wall-clock is
-NOT the TPU story -- the derived column therefore reports the structural
-quantities that determine TPU performance: HBM bytes moved per element and
-the arithmetic-intensity estimate from DESIGN.md §3.
+On CPU the Pallas kernels run in interpret mode (python-level emulation),
+so wall-clock is NOT the TPU story -- the derived column therefore reports
+the structural quantities that determine TPU performance: HBM bytes moved
+per element and the arithmetic-intensity estimate from DESIGN.md §3.
+Emits CSV rows plus machine-readable JSON (``--out``, default
+BENCH_kernel.json) through the shared ``bench_utils.dump_json``.
 """
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.bench_utils import header, row, time_call
+from benchmarks.bench_utils import dump_json, header, row, time_call
 from repro.core import scan as scan_lib
+from repro.kernels.fused_mingru import ops as fg_ops
 from repro.kernels.scan import ops as scan_ops
 
 
-def main() -> dict:
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernel.json")
+    args = ap.parse_args(argv)
+
     header("kernel_bench (scan strategies)")
     key = jax.random.PRNGKey(0)
-    k1, k2 = jax.random.split(key)
+    k1, k2, k3 = jax.random.split(key, 3)
     shape = (4, 1024, 128)
     a = jax.nn.sigmoid(jax.random.normal(k1, shape))
     b = jax.random.normal(k2, shape)
@@ -37,20 +46,69 @@ def main() -> dict:
     out = {}
     for name, fn in runners.items():
         us = time_call(fn, a, b, repeats=3)
-        out[name] = us
+        out[name] = {"us_per_call": us}
         row(f"kernel/{name}", us, "")
 
-    # pallas (interpret) -- correctness-mode timing, structural derived
-    us = time_call(
-        lambda a, b, h0: scan_ops.linear_scan(a, b, h0, 256, 128, True),
-        a, b, h0, repeats=1)
+    # pallas rows -- real kernels on TPU, interpret-mode timing elsewhere;
+    # structural derived either way.
+    interp = scan_ops.DEFAULT_INTERPRET
     n = a.size
-    bytes_moved = 3 * n * 4                      # read a,b + write h
+    # linear chunked-scan kernel: read a,b + write h
+    us = time_call(
+        lambda a, b, h0: scan_ops.linear_scan(a, b, h0, 256, 128, interp),
+        a, b, h0, repeats=1)
+    bytes_moved = 3 * n * 4
     intensity = 2 * 8 / (3 * 4)                  # kogge-stone flops/byte
-    row("kernel/pallas_interpret", us,
+    out["pallas_linear"] = {
+        "us_per_call": us,
+        "hbm_bytes_per_elem": bytes_moved / n,
+        "arith_intensity_flops_per_byte": intensity,
+    }
+    row("kernel/pallas_linear", us,
         f"hbm_bytes_per_elem={bytes_moved / n:.0f};"
         f"arith_intensity={intensity:.2f}flops_per_byte")
-    out["pallas_interpret"] = us
+
+    # log-space scan kernel: same traffic, ~3x the VPU flops (logaddexp)
+    la, lb = jnp.log(a), jnp.log(jnp.abs(b) + 1e-6)
+    lh0 = jnp.full_like(h0, -jnp.inf)
+    us = time_call(
+        lambda la, lb, lh0: scan_ops.log_space_scan(la, lb, lh0, 256, 128,
+                                                    interp),
+        la, lb, lh0, repeats=1)
+    out["pallas_log"] = {
+        "us_per_call": us,
+        "hbm_bytes_per_elem": bytes_moved / n,
+        "arith_intensity_flops_per_byte": 3 * intensity,
+    }
+    row("kernel/pallas_log", us,
+        f"hbm_bytes_per_elem={bytes_moved / n:.0f};"
+        f"arith_intensity={3 * intensity:.2f}flops_per_byte")
+
+    # fused minGRU: read x + weights + write/re-read h (no gate round-trip).
+    # Activation traffic convention matches train_throughput.py's
+    # structural model: fused 2*Dh vs unfused (2P+2)*Dh = 6*Dh per token
+    # (write + downstream read of every materialised activation).
+    bsz, t, dh = shape
+    dx = 64
+    x = jax.random.normal(k3, (bsz, t, dx))
+    wz = jax.random.normal(k1, (dx, dh)) * 0.2
+    wh = jax.random.normal(k2, (dx, dh)) * 0.2
+    us = time_call(
+        lambda x, wz, wh: fg_ops.fused_mingru(x, wz, None, wh, None,
+                                              interpret=interp),
+        x, wz, wh, repeats=1)
+    fused_bytes = (x.size + 2 * dx * dh + 2 * bsz * t * dh) * 4
+    unfused_bytes = (x.size + 2 * dx * dh + 6 * bsz * t * dh) * 4
+    out["pallas_fused_mingru"] = {
+        "us_per_call": us,
+        "hbm_bytes_per_elem": fused_bytes / (bsz * t * dh),
+        "unfused_bytes_ratio": unfused_bytes / fused_bytes,
+    }
+    row("kernel/pallas_fused_mingru", us,
+        f"hbm_bytes_per_elem={fused_bytes / (bsz * t * dh):.1f};"
+        f"unfused_traffic={unfused_bytes / fused_bytes:.2f}x")
+
+    dump_json(args.out, {"shape": list(shape), "kernels": out})
     return out
 
 

@@ -24,7 +24,7 @@ def main(argv=None) -> None:
     from benchmarks import (fig1_runtime, fig2_lm, fig3_inference,
                             fig5_forget_bias, kernel_bench, param_ratios,
                             roofline, table1_selective_copy, table3_rl_proxy,
-                            table4_chomsky)
+                            table4_chomsky, train_throughput)
 
     steps = 60 if args.quick else 250
     suite = {
@@ -40,7 +40,12 @@ def main(argv=None) -> None:
         "fig3_inference": lambda: fig3_inference.main(),
         "fig5_forget_bias":
             lambda: fig5_forget_bias.main(steps=150 if args.quick else 400),
-        "kernel_bench": lambda: kernel_bench.main(),
+        "kernel_bench": lambda: kernel_bench.main([]),
+        # suite runs never clobber the tracked BENCH_train.json trajectory;
+        # regenerate that deliberately via `python -m benchmarks.train_throughput`
+        "train_throughput": lambda: train_throughput.main(
+            ["--tiny"] if args.quick
+            else ["--out", "BENCH_train.local.json"]),
         "roofline": lambda: roofline.main(),
     }
     failures = []

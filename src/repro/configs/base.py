@@ -117,6 +117,11 @@ class ModelConfig:
     # numerics / performance -------------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
+    # minRNN scan execution (core.scan.STRATEGIES): "auto" resolves to the
+    # fused Pallas projection+scan kernels -- real kernels on TPU,
+    # interpret-mode parity elsewhere.  Set "associative" to force the
+    # pure-jnp reference path.
+    scan_strategy: str = "auto"
     remat: str = "none"            # none | full | dots
     scan_layers: bool = True       # lax.scan over stacked layer params
     pure_dp: int = 0               # 1: replicate weights, all axes are DP

@@ -35,6 +35,9 @@ class MinRNNBlockConfig:
     mode: str = "log"               # log | linear scan parameterization
     norm: str = "rmsnorm"
     dropout: float = 0.0
+    # core.scan.STRATEGIES; "auto" = fused Pallas kernels (real on TPU,
+    # interpret parity elsewhere).  Callers of ``apply`` may override.
+    scan_strategy: str = "auto"
 
     @property
     def d_hidden(self) -> int:
@@ -72,7 +75,7 @@ def init(key, cfg: MinRNNBlockConfig, *, dtype=jnp.float32):
 def apply(params, cfg: MinRNNBlockConfig, x: Array, *,
           h0: Optional[Array] = None, state0: Optional[dict] = None,
           lengths: Optional[Array] = None, compute_dtype=None,
-          scan_strategy: str = "associative", dropout_rng=None,
+          scan_strategy: Optional[str] = None, dropout_rng=None,
           deterministic: bool = True, return_state: bool = False):
     """x: (..., T, d_model) parallel (training / prefill) form.
 
@@ -84,7 +87,16 @@ def apply(params, cfg: MinRNNBlockConfig, x: Array, *,
     recurrence is causal, so padded positions never influence it).
     ``state0`` (a previous ``return_state`` dict) resumes the block from a
     carried (h, conv window) -- the chunked-prefill path.
+
+    ``scan_strategy`` overrides ``cfg.scan_strategy`` (default ``None`` =
+    use the config's; "auto" = fused Pallas kernels, with carried h0 /
+    lengths composing exactly because the fused scan is causal and
+    chunk-associative) and is forwarded to the cell (see
+    min_gru.parallel) -- so the classifier/DT heads and every other
+    trunk over these blocks hit the fused path by default too.
     """
+    if scan_strategy is None:
+        scan_strategy = cfg.scan_strategy
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
     state = {}

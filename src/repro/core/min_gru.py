@@ -45,7 +45,22 @@ def n_params(d_in: int, d_hidden: int, use_bias: bool = False) -> int:
 def parallel(params, x: Array, h0: Optional[Array] = None, *,
              mode: str = "log", scan_strategy: str = "associative",
              compute_dtype=None) -> Array:
-    """x: (..., T, d_in) -> h: (..., T, d_hidden)."""
+    """x: (..., T, d_in) -> h: (..., T, d_hidden).
+
+    ``scan_strategy`` selects the execution path (``core.scan.STRATEGIES``):
+    ``"auto"``/``"fused"`` run the whole layer (projections + scan) in the
+    Pallas fused kernel; ``"pallas"`` keeps XLA projections but scans in
+    the Pallas kernel (log-space kernel for ``mode="log"``); the remaining
+    strategies are pure-jnp.  In log mode only ``pallas`` changes the scan
+    implementation -- ``sequential``/``chunked`` fall back to the
+    associative Heinsen scan.
+    """
+    if mode not in ("log", "linear"):
+        raise ValueError(f"unknown minGRU mode {mode!r}")
+    strategy = scan_lib.resolve_strategy(scan_strategy)
+    if strategy == "fused":
+        return _fused_parallel(params, x, h0, mode=mode,
+                               compute_dtype=compute_dtype)
     k = nn.dense_apply(params["wz"], x, compute_dtype)   # gate pre-activation
     v = nn.dense_apply(params["wh"], x, compute_dtype)   # candidate pre-act
 
@@ -55,19 +70,52 @@ def parallel(params, x: Array, h0: Optional[Array] = None, *,
         log_coeffs = nn.log_sigmoid(-k.astype(jnp.float32))   # log(1-z)
         log_h_tilde = nn.log_g(v.astype(jnp.float32))
         log_h0 = None if h0 is None else jnp.log(h0.astype(jnp.float32))
-        h = scan_lib.scan_log_space(log_coeffs, log_z + log_h_tilde, log_h0)
+        h = scan_lib.scan_log_space(log_coeffs, log_z + log_h_tilde, log_h0,
+                                    strategy=strategy)
         return h.astype(x.dtype if compute_dtype is None else compute_dtype)
-    elif mode == "linear":
-        z = jax.nn.sigmoid(k)
-        a = 1.0 - z
-        b = z * v
-        return scan_lib.scan_linear(a, b, h0, strategy=scan_strategy)
-    raise ValueError(f"unknown minGRU mode {mode!r}")
+    z = jax.nn.sigmoid(k)
+    a = 1.0 - z
+    b = z * v
+    return scan_lib.scan_linear(a, b, h0, strategy=strategy)
+
+
+def _fused_parallel(params, x: Array, h0: Optional[Array], *, mode: str,
+                    compute_dtype=None) -> Array:
+    """Whole layer in one Pallas call (kernels/fused_mingru)."""
+    from repro.kernels.fused_mingru import ops as fused_ops
+    from repro.kernels.scan.ops import call_with_flat_lead
+    wz, wh = params["wz"]["kernel"], params["wh"]["kernel"]
+    bz, bh = params["wz"].get("bias"), params["wh"].get("bias")
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        wz, wh = wz.astype(compute_dtype), wh.astype(compute_dtype)
+        bz = None if bz is None else bz.astype(compute_dtype)
+        bh = None if bh is None else bh.astype(compute_dtype)
+    if h0 is None:                          # kernel wants (B, T, D)
+        return call_with_flat_lead(
+            lambda xf: fused_ops.fused_mingru(xf, wz, bz, wh, bh,
+                                              mode=mode), (x, 2))
+    return call_with_flat_lead(
+        lambda xf, h0f: fused_ops.fused_mingru(xf, wz, bz, wh, bh, h0f,
+                                               mode=mode), (x, 2), (h0, 1))
 
 
 def gates(params, x: Array, *, mode: str = "log", compute_dtype=None):
     """Return the (a, b) recurrence inputs -- used by the Pallas fused path
-    and by the sequence-parallel layer which must scan externally."""
+    and by the sequence-parallel layer which must scan externally.
+
+    Note on modes: these are always *linear-space* scan inputs, even for
+    ``mode="log"`` -- (a, b) = (1-z, z*g(v)).  Scanning them linearly is
+    mathematically identical to ``parallel(mode="log")``'s log-space
+    Heinsen scan (h_t = (1-z_t) h_{t-1} + z_t g(v_t) either way); the
+    parameterisations differ only in rounding.  In fp32 the linear scan is
+    fine at any practical T (gates in (0,1) keep it non-amplifying), which
+    is why the fused kernel scans linearly in fp32 on-chip.  In bf16 the
+    linear form drifts measurably by T ~ 4096 while the log form does not
+    -- ``tests/test_kernels.py::test_log_vs_linear_bf16_drift_at_4096``
+    quantifies this, motivating the log-space kernel for low-precision
+    inputs.
+    """
     k = nn.dense_apply(params["wz"], x, compute_dtype)
     v = nn.dense_apply(params["wh"], x, compute_dtype)
     z = jax.nn.sigmoid(k)

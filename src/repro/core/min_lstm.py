@@ -48,9 +48,30 @@ def _normalized_log_gates(kf: Array, ki: Array):
     return log_f, log_i
 
 
+def normalized_gates(kf: Array, ki: Array):
+    """Linear-space f' = f/(f+i), i' = i/(f+i), computed stably.
+
+    Naive f/(f+i) hits 0/0 = NaN once both sigmoids underflow (pre-
+    activations below ~-104 in fp32); this is Algorithm 8's log form
+    exponentiated -- f' = sigmoid(-diff), i' = sigmoid(diff) -- which is
+    exact and finite everywhere.  Used by the linear-mode layer path and
+    by the fused Pallas kernel (forward and rematerialised backward).
+    """
+    diff = jax.nn.softplus(-kf) - jax.nn.softplus(-ki)
+    return jax.nn.sigmoid(-diff), jax.nn.sigmoid(diff)
+
+
 def parallel(params, x: Array, h0: Optional[Array] = None, *,
              mode: str = "log", normalize: bool = True,
              scan_strategy: str = "associative", compute_dtype=None) -> Array:
+    """See ``min_gru.parallel`` for the scan_strategy contract; ``"auto"``/
+    ``"fused"`` run the whole layer in the Pallas fused minLSTM kernel."""
+    if mode not in ("log", "linear"):
+        raise ValueError(f"unknown minLSTM mode {mode!r}")
+    strategy = scan_lib.resolve_strategy(scan_strategy)
+    if strategy == "fused":
+        return _fused_parallel(params, x, h0, mode=mode, normalize=normalize,
+                               compute_dtype=compute_dtype)
     kf = nn.dense_apply(params["wf"], x, compute_dtype)
     ki = nn.dense_apply(params["wi"], x, compute_dtype)
     v = nn.dense_apply(params["wh"], x, compute_dtype)
@@ -64,29 +85,54 @@ def parallel(params, x: Array, h0: Optional[Array] = None, *,
             log_i = nn.log_sigmoid(ki32)
         log_h_tilde = nn.log_g(v.astype(jnp.float32))
         log_h0 = None if h0 is None else jnp.log(h0.astype(jnp.float32))
-        h = scan_lib.scan_log_space(log_f, log_i + log_h_tilde, log_h0)
+        h = scan_lib.scan_log_space(log_f, log_i + log_h_tilde, log_h0,
+                                    strategy=strategy)
         return h.astype(x.dtype if compute_dtype is None else compute_dtype)
-    elif mode == "linear":
-        f = jax.nn.sigmoid(kf)
-        i = jax.nn.sigmoid(ki)
-        if normalize:
-            denom = f + i
-            f, i = f / denom, i / denom
-        return scan_lib.scan_linear(f, i * v, h0, strategy=scan_strategy)
-    raise ValueError(f"unknown minLSTM mode {mode!r}")
+    if normalize:
+        f, i = normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
+    return scan_lib.scan_linear(f, i * v, h0, strategy=strategy)
+
+
+def _fused_parallel(params, x: Array, h0: Optional[Array], *, mode: str,
+                    normalize: bool, compute_dtype=None) -> Array:
+    """Whole layer in one Pallas call (kernels/fused_minlstm)."""
+    from repro.kernels.fused_minlstm import ops as fused_ops
+    from repro.kernels.scan.ops import call_with_flat_lead
+    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
+    bs = [params[k].get("bias") for k in ("wf", "wi", "wh")]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        ws = [w.astype(compute_dtype) for w in ws]
+        bs = [None if b is None else b.astype(compute_dtype) for b in bs]
+    wf, wi, wh = ws
+    bf, bi, bh = bs
+    if h0 is None:                          # kernel wants (B, T, D)
+        return call_with_flat_lead(
+            lambda xf: fused_ops.fused_minlstm(
+                xf, wf, bf, wi, bi, wh, bh, mode=mode, normalize=normalize),
+            (x, 2))
+    return call_with_flat_lead(
+        lambda xf, h0f: fused_ops.fused_minlstm(
+            xf, wf, bf, wi, bi, wh, bh, h0f, mode=mode, normalize=normalize),
+        (x, 2), (h0, 1))
 
 
 def gates(params, x: Array, *, mode: str = "log", normalize: bool = True,
           compute_dtype=None):
-    """(a, b) recurrence inputs for external scans (Pallas / seq-parallel)."""
+    """(a, b) recurrence inputs for external scans (Pallas / seq-parallel).
+
+    As with ``min_gru.gates``, these are linear-space inputs even for
+    ``mode="log"`` -- mathematically identical to the log-space scan,
+    differing only in rounding (see min_gru.gates for the bf16 caveat)."""
     kf = nn.dense_apply(params["wf"], x, compute_dtype)
     ki = nn.dense_apply(params["wi"], x, compute_dtype)
     v = nn.dense_apply(params["wh"], x, compute_dtype)
-    f = jax.nn.sigmoid(kf)
-    i = jax.nn.sigmoid(ki)
     if normalize:
-        denom = f + i
-        f, i = f / denom, i / denom
+        f, i = normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
     h_tilde = nn.g(v) if mode == "log" else v
     return f, i * h_tilde
 

@@ -105,14 +105,25 @@ def logcumsumexp(x: Array, axis: int = -2) -> Array:
 
 
 def scan_log_space(log_a: Array, log_b: Array,
-                   log_h0: Optional[Array] = None, axis: int = -2) -> Array:
+                   log_h0: Optional[Array] = None, axis: int = -2,
+                   strategy: str = "associative") -> Array:
     """Heinsen scan: inputs are log coefficients / log values, output is h.
 
     h_t = exp(a*_t + logcumsumexp(log_b - a*)_t)  with a*_t = cumsum(log_a).
     Requires b_t > 0 (the paper guarantees this via the g() transform).
     If ``log_h0`` is given it is prepended exactly as in the paper's
     ``torch.cat([log_h0, ...])``.
+
+    ``strategy="pallas"`` routes to the in-kernel logaddexp ladder
+    (``repro.kernels.scan.ops.log_space_scan``): same math, chunked in
+    VMEM with a log-space cross-chunk carry; any other value runs the
+    ``lax.associative_scan`` formulation below.
     """
+    if strategy == "pallas":
+        from repro.kernels.scan import ops as scan_kernel_ops
+        if axis not in (-2, log_a.ndim - 2):
+            raise ValueError("pallas log scan requires time axis -2")
+        return scan_kernel_ops.log_space_scan_auto(log_a, log_b, log_h0)
     if log_h0 is not None:
         zero = jnp.zeros_like(jnp.take(log_a, jnp.array([0]), axis=axis))
         log_a_ext = jnp.concatenate([zero, log_a], axis=axis)
@@ -223,7 +234,22 @@ def scan_sequence_parallel(a: Array, b: Array, axis_name: str,
 # Strategy dispatch
 # ---------------------------------------------------------------------------
 
-STRATEGIES = ("associative", "sequential", "chunked", "pallas")
+# "fused" = the Pallas fused projection+scan kernels (minGRU/minLSTM layers
+# only; resolved by the cell's ``parallel``, not by ``scan_linear``).
+# "auto" = backend-aware default: the fused Pallas path everywhere -- real
+# TPU kernels on TPU, interpret-mode (bit-compatible semantics, CPU
+# execution) elsewhere, via kernels/*/ops.DEFAULT_INTERPRET.
+STRATEGIES = ("associative", "sequential", "chunked", "pallas", "fused",
+              "auto")
+
+
+def resolve_strategy(strategy: str) -> str:
+    """Resolve the config-level ``scan_strategy`` to a concrete strategy."""
+    if strategy == "auto":
+        return "fused"
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown scan strategy {strategy!r}")
+    return strategy
 
 
 def scan_linear(a: Array, b: Array, h0: Optional[Array] = None,

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import nn
 from repro.kernels.scan.kernel import _kogge_stone
 
 
@@ -39,11 +40,13 @@ def _fused_kernel(x_ref, wz_ref, bz_ref, wh_ref, bh_ref, h0_ref,
     x = x_ref[0].astype(jnp.float32)                      # (bt, Dx)
     wz = wz_ref[...].astype(jnp.float32)                  # (Dx, bdh)
     wh = wh_ref[...].astype(jnp.float32)
-    k = jnp.dot(x, wz, preferred_element_type=jnp.float32) + bz_ref[...]
-    v = jnp.dot(x, wh, preferred_element_type=jnp.float32) + bh_ref[...]
+    bz = bz_ref[...].astype(jnp.float32)
+    bh = bh_ref[...].astype(jnp.float32)
+    k = jnp.dot(x, wz, preferred_element_type=jnp.float32) + bz
+    v = jnp.dot(x, wh, preferred_element_type=jnp.float32) + bh
     z = jax.nn.sigmoid(k)
     if mode == "log":
-        h_tilde = jnp.where(v >= 0, v + 0.5, jax.nn.sigmoid(v))
+        h_tilde = nn.g(v)
     else:
         h_tilde = v
     A, B = _kogge_stone(1.0 - z, z * h_tilde)

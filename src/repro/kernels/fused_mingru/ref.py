@@ -7,9 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-
-def _g(x):
-    return jnp.where(x >= 0, x + 0.5, jax.nn.sigmoid(x))
+from repro.core import nn
 
 
 def fused_mingru_ref(x: jax.Array, wz: jax.Array, bz: jax.Array,
@@ -23,7 +21,7 @@ def fused_mingru_ref(x: jax.Array, wz: jax.Array, bz: jax.Array,
     k = x @ wz + bz
     v = x @ wh + bh
     z = jax.nn.sigmoid(k)
-    h_tilde = _g(v) if mode == "log" else v
+    h_tilde = nn.g(v) if mode == "log" else v
     a = 1.0 - z
     b = z * h_tilde
     if h0 is None:

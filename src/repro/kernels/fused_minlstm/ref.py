@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused minLSTM gate-projection + scan kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import min_lstm, nn
+
+
+def fused_minlstm_ref(x: jax.Array, wf: jax.Array, bf: jax.Array,
+                      wi: jax.Array, bi: jax.Array,
+                      wh: jax.Array, bh: jax.Array,
+                      h0: Optional[jax.Array] = None,
+                      mode: str = "log", normalize: bool = True) -> jax.Array:
+    """minLSTM layer forward: projections + recurrence, unfused reference.
+
+    x: (B, T, Dx); wf, wi, wh: (Dx, Dh); bf, bi, bh: (Dh,); h0: (B, Dh).
+    """
+    kf = x @ wf + bf
+    ki = x @ wi + bi
+    v = x @ wh + bh
+    if normalize:
+        f, i = min_lstm.normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
+    h_tilde = nn.g(v) if mode == "log" else v
+    a = f
+    b = i * h_tilde
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:-2] + (wf.shape[1],), b.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(a, -2, 0), jnp.moveaxis(b, -2, 0)))
+    return jnp.moveaxis(hs, 0, -2)

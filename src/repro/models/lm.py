@@ -95,7 +95,7 @@ def _minrnn_block_cfg(cfg):
         d_model=cfg.d_model, cell=mr.cell, expansion=mr.expansion,
         use_conv=mr.use_conv, conv_kernel=mr.conv_kernel,
         use_mlp=mr.use_mlp, mlp_factor=cfg.d_ff / cfg.d_model,
-        mode=mr.mode, norm=cfg.norm)
+        mode=mr.mode, norm=cfg.norm, scan_strategy=cfg.scan_strategy)
 
 
 def _mixer_init(key, cfg, dtype):
@@ -164,7 +164,8 @@ def _mixer_apply(p, cfg, x, positions):
     if cfg.seq_mixer in _MIN_CELLS:
         cell = _MIN_CELLS[cfg.seq_mixer]
         mode = cfg.minrnn.mode if cfg.minrnn else "log"
-        h = cell.parallel(p["rnn"], x, mode=mode, compute_dtype=cfg.cdtype)
+        h = cell.parallel(p["rnn"], x, mode=mode, compute_dtype=cfg.cdtype,
+                          scan_strategy=cfg.scan_strategy)
         return nn.dense_apply(p["down"], h, cfg.cdtype)
     if cfg.attn_kind == "mla":
         return attn.mla_apply(p, cfg, x, positions=positions, causal=True)
@@ -203,7 +204,8 @@ def _trunk_apply(params, cfg, x, positions) -> Tuple[Array, Array]:
         bc = _minrnn_block_cfg(cfg)
 
         def body(carry, p_l):
-            h = minrnn_blocks.apply(p_l, bc, carry, compute_dtype=cfg.cdtype)
+            h = minrnn_blocks.apply(p_l, bc, carry, compute_dtype=cfg.cdtype,
+                                    scan_strategy=cfg.scan_strategy)
             return h, None
 
         x, _ = _scan_layers(cfg, body, x, params["layers"]["blocks"])
@@ -591,7 +593,8 @@ def _attn_block_prefill(p, cfg, x, positions, *, has_moe, lengths=None):
         cell = _MIN_CELLS[cfg.seq_mixer]
         mode = cfg.minrnn.mode if cfg.minrnn else "log"
         h = cell.parallel(p["mixer"]["rnn"], y, mode=mode,
-                          compute_dtype=cfg.cdtype)
+                          compute_dtype=cfg.cdtype,
+                          scan_strategy=cfg.scan_strategy)
         out = nn.dense_apply(p["mixer"]["down"], h, cfg.cdtype)
         mix_cache = {"h": h[:, -1] if lengths is None
                      else nn.gather_last(h, lengths)}
@@ -678,6 +681,7 @@ def prefill(params, cfg, tokens: Array, max_len: int, *,
                 h, state = minrnn_blocks.apply(p_l, bc, carry, state0=st_l,
                                                lengths=lengths,
                                                compute_dtype=cfg.cdtype,
+                                               scan_strategy=cfg.scan_strategy,
                                                return_state=True)
                 return h, state
 
@@ -688,6 +692,7 @@ def prefill(params, cfg, tokens: Array, max_len: int, *,
                 h, state = minrnn_blocks.apply(p_l, bc, carry,
                                                lengths=lengths,
                                                compute_dtype=cfg.cdtype,
+                                               scan_strategy=cfg.scan_strategy,
                                                return_state=True)
                 return h, state
 
