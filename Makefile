@@ -3,7 +3,8 @@
 
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-serving bench-engine bench-train example-serve
+.PHONY: test test-fast test-serving bench-engine bench-train bench-decode \
+	example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -19,6 +20,9 @@ bench-engine:    ## v1-vs-v2 serving throughput sweep
 
 bench-train:     ## train-step tokens/s across scan strategies -> BENCH_train.json
 	PYTHONPATH=src python -m benchmarks.train_throughput
+
+bench-decode:    ## decode tokens/s per decode-block size K -> BENCH_decode.json
+	PYTHONPATH=src python -m benchmarks.engine_throughput --decode
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -1,5 +1,8 @@
 """Serving-engine throughput: v2 (batched prefill + on-device sampling)
-versus the v1 seed engine, across batch sizes on a mixed-prompt workload.
+versus the v1 seed engine, across batch sizes on a mixed-prompt workload
+-- plus the decode-path bench (``--decode``) comparing multi-token
+on-device decode (``step(n_tokens=K)`` / ``lm.decode_many``) against the
+per-token baseline, writing BENCH_decode.json.
 
 The v1 baseline is vendored below exactly as the seed shipped it: one
 ``lm.prefill`` call *per request* spliced slot-by-slot, and a per-slot
@@ -11,8 +14,28 @@ decode step and the common shapes first; note that v1 recompiles prefill
 for *every distinct prompt length* while v2 buckets padded lengths to
 powers of two -- that compile traffic is part of the cost being measured.
 
+The decode bench reports two metrics per block size K (mirroring
+train_throughput.py's convention):
+
+  * **wall-clock** decode tokens/s from engine.stats.  Only meaningful on
+    a real TPU; on CPU the fused decode kernel runs in interpret mode
+    (python-level emulation) so the wall numbers are honest but not the
+    TPU story.
+  * **structural** decode tokens/s from the backend-independent latency
+    model: decode at serving batch sizes is weight-bound (activations are
+    (B, D) vectors), so one device step streams the trunk + unembed
+    weights once -- t_step = weight_bytes / HBM_BW -- and each engine
+    step() pays ONE host round-trip for K device steps:
+
+        tokens/s = B * K / (K * t_step + t_roundtrip)
+
+    The K=1 row is the per-token baseline the trajectory keeps; the
+    speedup asymptotes to (t_step + rt) / t_step as K grows.
+
     PYTHONPATH=src python -m benchmarks.engine_throughput \
         --arch mingru-lm --batches 1 2 4 8
+    PYTHONPATH=src python -m benchmarks.engine_throughput --decode
+    PYTHONPATH=src python -m benchmarks.engine_throughput --decode --tiny
 """
 
 from __future__ import annotations
@@ -180,6 +203,116 @@ def bench(arch: str, batches, n_requests: int, max_new: int,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Decode-path bench: per-token baseline vs multi-token on-device decode
+# ---------------------------------------------------------------------------
+
+# nominal numbers for the structural latency model; the tracked quantity
+# is the RATIO between block sizes, which is insensitive to both
+NOMINAL_HBM_GBPS = 819.0        # TPU v5e HBM bandwidth
+NOMINAL_ROUNDTRIP_US = 100.0    # dispatch + D2H sync per engine decode call
+
+
+def decode_weight_bytes_per_step(cfg) -> float:
+    """HBM bytes of weights streamed per decode step (minRNN trunk +
+    tied unembed).  Activations are (B, D) vectors -- negligible next to
+    the weight traffic at serving batch sizes, so this is the whole
+    structural cost of one device step."""
+    mr = cfg.minrnn
+    dx = cfg.d_model
+    dh = int(dx * mr.expansion)
+    n_proj = 2 if mr.cell == "mingru" else 3
+    per_layer = (n_proj + 1) * dx * dh            # gate projections + down
+    if mr.use_conv:
+        per_layer += mr.conv_kernel * dx
+    if mr.use_mlp:
+        per_layer += 2 * dx * cfg.d_ff
+    total = cfg.n_layers * per_layer + dx * cfg.padded_vocab   # + unembed
+    return float(total * jnp.dtype(cfg.cdtype).itemsize)
+
+
+def structural_decode_tokens_per_s(cfg, batch: int, k: int) -> float:
+    t_step = decode_weight_bytes_per_step(cfg) / (NOMINAL_HBM_GBPS * 1e9)
+    t_call = k * t_step + NOMINAL_ROUNDTRIP_US * 1e-6
+    return batch * k / t_call
+
+
+def bench_decode(arch: str, batch: int, n_requests: int, max_new: int,
+                 blocks, out_path: str = "BENCH_decode.json"):
+    """Decode-dominated workload (short prompts, long completions) under
+    each decode block size; K=1 is the per-token baseline row."""
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 250, size=6)) for _ in range(n_requests)]
+    header(f"decode throughput {arch}: {n_requests} reqs x {max_new} new "
+           f"tokens, batch={batch}, blocks={list(blocks)}, "
+           f"backend={jax.default_backend()}")
+
+    results = {}
+    outs_by_k = {}
+    for k in blocks:
+        def make(k=k):
+            return ServingEngine(cfg, params, max_batch=batch,
+                                 max_len=160, decode_block=k)
+        run_engine(make, prompts[:2], 4, 0.0)          # compile warmup
+        engine = make()
+        for p in prompts:
+            engine.submit(p, max_new=max_new, temperature=0.0)
+        outs_by_k[k] = engine.run_to_completion()
+        s = engine.stats
+        wall = s.decode_tokens_per_second()
+        structural = structural_decode_tokens_per_s(cfg, batch, k)
+        results[str(k)] = {
+            "decode_block": k,
+            "decode_tokens": s.decode_tokens,
+            "decode_calls": s.decode_calls,
+            "host_roundtrips_per_decode_token":
+                s.decode_calls / max(s.decode_tokens, 1),
+            "decode_tokens_per_s_wallclock": wall,
+            "decode_tokens_per_s_structural": structural,
+        }
+        row(f"decode_{arch}_k{k}", s.decode_time_s * 1e6 / max(
+                s.decode_calls, 1),
+            f"{wall:.1f} tok/s wallclock;{structural:.0f} tok/s structural;"
+            f"{s.decode_calls} roundtrips")
+
+    # all block sizes must produce identical greedy streams -- a mismatch
+    # means a decode_many masking/carry regression, fail loudly
+    base_k = blocks[0]
+    for k in blocks[1:]:
+        if outs_by_k[k] != outs_by_k[base_k]:
+            raise SystemExit(
+                f"greedy output mismatch between decode_block={base_k} "
+                f"and decode_block={k}")
+
+    payload = {
+        "arch": arch,
+        "batch": batch,
+        "n_requests": n_requests,
+        "max_new": max_new,
+        "nominal_hbm_gbps": NOMINAL_HBM_GBPS,
+        "nominal_roundtrip_us": NOMINAL_ROUNDTRIP_US,
+        "weight_bytes_per_step": decode_weight_bytes_per_step(cfg),
+        "decode_blocks": results,
+    }
+    if "1" in results:
+        base = results["1"]
+        best_k = max(results, key=lambda k: int(k))
+        best = results[best_k]
+        payload["speedup_structural"] = (
+            best["decode_tokens_per_s_structural"]
+            / base["decode_tokens_per_s_structural"])
+        payload["speedup_wallclock"] = (
+            best["decode_tokens_per_s_wallclock"]
+            / max(base["decode_tokens_per_s_wallclock"], 1e-9))
+        row(f"decode_speedup_k{best_k}", 0.0,
+            f"{payload['speedup_structural']:.2f}x structural;"
+            f"{payload['speedup_wallclock']:.2f}x wallclock vs per-token")
+    dump_json(out_path, payload)
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mingru-lm")
@@ -188,10 +321,31 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--prefill-chunk", type=int, default=None)
-    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--decode", action="store_true",
+                    help="run the decode-block bench instead of the "
+                         "v1-vs-v2 engine sweep (writes BENCH_decode.json)")
+    ap.add_argument("--decode-blocks", type=int, nargs="*",
+                    default=[1, 4, 8],
+                    help="decode block sizes K; 1 is the per-token "
+                         "baseline row")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: tiny decode workload -> "
+                         "BENCH_decode.tiny.json (never clobbers the "
+                         "tracked trajectory)")
     args = ap.parse_args(argv)
+    if args.decode:
+        if args.tiny:
+            args.n_requests, args.max_new = 4, 8
+            args.decode_blocks = [1, 4]
+        out = args.out or ("BENCH_decode.tiny.json" if args.tiny
+                           else "BENCH_decode.json")
+        bench_decode(args.arch, max(args.batches), args.n_requests,
+                     args.max_new, args.decode_blocks, out_path=out)
+        return
     bench(args.arch, args.batches, args.n_requests, args.max_new,
-          args.temperature, args.prefill_chunk, out_path=args.out)
+          args.temperature, args.prefill_chunk,
+          out_path=args.out or "BENCH_engine.json")
 
 
 if __name__ == "__main__":

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 
 from benchmarks.bench_utils import dump_json, header, row, time_call
 from repro.core import scan as scan_lib
+from repro.kernels.decode_step import ops as step_ops
+from repro.kernels.decode_step import ref as step_ref
 from repro.kernels.fused_mingru import ops as fg_ops
 from repro.kernels.scan import ops as scan_ops
 
@@ -107,6 +109,40 @@ def main(argv=None) -> dict:
     row("kernel/pallas_fused_mingru", us,
         f"hbm_bytes_per_elem={fused_bytes / (bsz * t * dh):.1f};"
         f"unfused_traffic={unfused_bytes / fused_bytes:.2f}x")
+
+    # fused decode step: the single-token batched GEMV (serving hot path).
+    # Weight-bound at decode batch sizes -- structural traffic per step is
+    # weights (P*Dx*Dh) + x + h in/out; the unfused step additionally
+    # round-trips the P gate pre-activations (B, Dh) through HBM and
+    # splits the work across P+1 XLA fusions.
+    b_dec, dx_dec = 8, 128
+    x1 = jax.random.normal(k3, (b_dec, dx_dec))
+    h_prev = jax.random.normal(k1, (b_dec, dh))
+    wz1 = jax.random.normal(k1, (dx_dec, dh)) * 0.2
+    wh1 = jax.random.normal(k2, (dx_dec, dh)) * 0.2
+    us = time_call(
+        lambda x, h: step_ops.fused_mingru_step(x, wz1, None, wh1, None, h,
+                                                interpret=interp),
+        x1, h_prev, repeats=3)
+    us_ref = time_call(
+        jax.jit(lambda x, h: step_ref.mingru_step_ref(
+            x, wz1, jnp.zeros(dh), wh1, jnp.zeros(dh), h)),
+        x1, h_prev, repeats=3)
+    n_proj = 2
+    weight_bytes = n_proj * dx_dec * dh * 4
+    act_bytes = (x1.size + 2 * b_dec * dh) * 4          # x + h in/out
+    fused_step_bytes = weight_bytes + act_bytes
+    unfused_step_bytes = fused_step_bytes + 2 * n_proj * b_dec * dh * 4
+    out["pallas_decode_step_mingru"] = {
+        "us_per_call": us,
+        "us_per_call_jnp_ref": us_ref,
+        "hbm_bytes_per_step": fused_step_bytes,
+        "unfused_bytes_ratio": unfused_step_bytes / fused_step_bytes,
+    }
+    row("kernel/pallas_decode_step_mingru", us,
+        f"hbm_bytes_per_step={fused_step_bytes};"
+        f"unfused_traffic={unfused_step_bytes / fused_step_bytes:.2f}x;"
+        f"jnp_ref_us={us_ref:.1f}")
 
     dump_json(args.out, {"shape": list(shape), "kernels": out})
     return out

@@ -1,12 +1,16 @@
-"""Continuous-batching serving demo (engine v2): multiple requests of
-different lengths are right-padded into ONE batched prefill, sampled
-on-device, and share one decode batch; RNN-state caches make each decode
-step O(1).  The long prompt below exercises chunked prefill: it is consumed
-in fixed-size chunks interleaved with the other requests' decode steps.
+"""Continuous-batching serving demo: multiple requests of different
+lengths are right-padded into ONE batched prefill, sampled on-device, and
+share one decode batch; RNN-state caches make each decode step O(1).  The
+long prompt below exercises chunked prefill: it is consumed in fixed-size
+chunks interleaved with the other requests' decode rounds.  With
+``--decode-block K`` the engine decodes K tokens per host round-trip
+(``lm.decode_many``'s on-device step/sample/EOS-mask loop), so the stats
+line reports well under one host round-trip per generated token.
 
-    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --decode-block 4
 """
 
+import argparse
 import time
 
 import jax
@@ -17,11 +21,17 @@ from repro.models import lm
 from repro.serving.engine import ServingEngine
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="tokens decoded per host round-trip (K)")
+    args = ap.parse_args(argv)
+
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
-                           prefill_chunk=16)
+                           prefill_chunk=16,
+                           decode_block=args.decode_block)
 
     prompts = [b"To be, or not to be", b"Now is the winter",
                b"Friends, Romans, countrymen", b"All the world's a stage",
@@ -45,7 +55,11 @@ def main():
     print(f"prefill calls: {snap['prefill_calls']}, "
           f"prefill tokens: {snap['prefill_tokens']} "
           f"(padding x{snap['padding_overhead']:.2f}), "
-          f"decode steps: {snap['decode_steps']}, "
+          f"decode steps: {snap['decode_steps']} in "
+          f"{snap['decode_calls']} host round-trips "
+          f"(K={args.decode_block}, "
+          f"{snap['host_roundtrips_per_decode_token']:.2f} "
+          f"round-trips/token), "
           f"queue peak: {snap['queue_peak']}")
 
 

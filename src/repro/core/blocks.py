@@ -152,8 +152,17 @@ def init_state(cfg: MinRNNBlockConfig, batch_shape: Tuple[int, ...],
 
 
 def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
-         compute_dtype=None):
-    """Single-token decode. x_t: (..., d_model)."""
+         compute_dtype=None, scan_strategy: Optional[str] = None):
+    """Single-token decode. x_t: (..., d_model).
+
+    ``scan_strategy`` defaults to ``cfg.scan_strategy`` (``"auto"`` = the
+    fused Pallas decode-step kernel for the cell, ``kernels/decode_step``;
+    real kernel on TPU, interpret parity elsewhere).  Pass e.g.
+    ``"sequential"`` to force the pure-jnp cell step (the parity oracle).
+    Norm / conv window / down-projection / MLP stay in XLA either way.
+    """
+    if scan_strategy is None:
+        scan_strategy = cfg.scan_strategy
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x_t)
     new_state = dict(state)
@@ -161,7 +170,7 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
         y, new_state["conv"] = nn.causal_conv_step(params["conv"], y,
                                                    state["conv"])
     h = cell.step(params["rnn"], y, state["h"], mode=cfg.mode,
-                  compute_dtype=compute_dtype)
+                  compute_dtype=compute_dtype, scan_strategy=scan_strategy)
     new_state["h"] = h
     y = nn.dense_apply(params["down"], h, compute_dtype)
     x_t = x_t + y

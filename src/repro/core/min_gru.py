@@ -128,9 +128,34 @@ def gates(params, x: Array, *, mode: str = "log", compute_dtype=None):
 # ---------------------------------------------------------------------------
 
 def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
-         compute_dtype=None) -> Array:
-    """x_t: (..., d_in), h_prev: (..., d_hidden) -> h_t."""
+         compute_dtype=None, scan_strategy: Optional[str] = None) -> Array:
+    """x_t: (..., d_in), h_prev: (..., d_hidden) -> h_t.
+
+    ``scan_strategy`` mirrors ``parallel``'s contract for the decode hot
+    path: ``"auto"``/``"fused"`` run the whole step (both GEMVs + gates +
+    state update) in the fused Pallas decode kernel
+    (``kernels/decode_step``); ``None`` or any other strategy runs the
+    pure-jnp reference below (the oracle the kernel is tested against).
+    """
+    if scan_strategy is not None and \
+            scan_lib.resolve_strategy(scan_strategy) == "fused":
+        return _fused_step(params, x_t, h_prev, mode=mode,
+                           compute_dtype=compute_dtype)
     z = jax.nn.sigmoid(nn.dense_apply(params["wz"], x_t, compute_dtype))
     v = nn.dense_apply(params["wh"], x_t, compute_dtype)
     h_tilde = nn.g(v) if mode == "log" else v
     return (1.0 - z) * h_prev + z * h_tilde
+
+
+def _fused_step(params, x_t: Array, h_prev: Array, *, mode: str,
+                compute_dtype=None) -> Array:
+    """Whole cell step in one Pallas call (kernels/decode_step)."""
+    from repro.kernels.decode_step import ops as step_ops
+    wz, wh = params["wz"]["kernel"], params["wh"]["kernel"]
+    bz, bh = params["wz"].get("bias"), params["wh"].get("bias")
+    if compute_dtype is not None:
+        x_t = x_t.astype(compute_dtype)
+        wz, wh = wz.astype(compute_dtype), wh.astype(compute_dtype)
+        bz = None if bz is None else bz.astype(compute_dtype)
+        bh = None if bh is None else bh.astype(compute_dtype)
+    return step_ops.fused_mingru_step(x_t, wz, bz, wh, bh, h_prev, mode=mode)

@@ -138,12 +138,41 @@ def gates(params, x: Array, *, mode: str = "log", normalize: bool = True,
 
 
 def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
-         normalize: bool = True, compute_dtype=None) -> Array:
-    f = jax.nn.sigmoid(nn.dense_apply(params["wf"], x_t, compute_dtype))
-    i = jax.nn.sigmoid(nn.dense_apply(params["wi"], x_t, compute_dtype))
+         normalize: bool = True, compute_dtype=None,
+         scan_strategy: Optional[str] = None) -> Array:
+    """x_t: (..., d_in), h_prev: (..., d_hidden) -> h_t.
+
+    ``scan_strategy="auto"``/``"fused"`` runs the whole step in the fused
+    Pallas decode kernel (``kernels/decode_step``); otherwise pure jnp.
+    Both paths normalise via the stable ``normalized_gates`` form --
+    the naive f/(f+i) quotient NaNs once both sigmoids underflow.
+    """
+    if scan_strategy is not None and \
+            scan_lib.resolve_strategy(scan_strategy) == "fused":
+        return _fused_step(params, x_t, h_prev, mode=mode,
+                           normalize=normalize, compute_dtype=compute_dtype)
+    kf = nn.dense_apply(params["wf"], x_t, compute_dtype)
+    ki = nn.dense_apply(params["wi"], x_t, compute_dtype)
     v = nn.dense_apply(params["wh"], x_t, compute_dtype)
     h_tilde = nn.g(v) if mode == "log" else v
     if normalize:
-        denom = f + i
-        f, i = f / denom, i / denom
+        f, i = normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
     return f * h_prev + i * h_tilde
+
+
+def _fused_step(params, x_t: Array, h_prev: Array, *, mode: str,
+                normalize: bool, compute_dtype=None) -> Array:
+    """Whole cell step in one Pallas call (kernels/decode_step)."""
+    from repro.kernels.decode_step import ops as step_ops
+    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
+    bs = [params[k].get("bias") for k in ("wf", "wi", "wh")]
+    if compute_dtype is not None:
+        x_t = x_t.astype(compute_dtype)
+        ws = [w.astype(compute_dtype) for w in ws]
+        bs = [None if b is None else b.astype(compute_dtype) for b in bs]
+    wf, wi, wh = ws
+    bf, bi, bh = bs
+    return step_ops.fused_minlstm_step(x_t, wf, bf, wi, bi, wh, bh, h_prev,
+                                       mode=mode, normalize=normalize)

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: fused minGRU/minLSTM single-token decode step.
+
+Decode rolls the O(1) recurrence one token at a time, so the per-step
+compute is a *batched GEMV*: x_t (B, Dx) against the gate projections
+(Dx, Dh) followed by a handful of elementwise VPU ops.  Unfused, XLA
+materialises the gate pre-activations k/v (B, Dh) in HBM between the
+matmul and the state update and launches one fusion per projection; at
+decode batch sizes the step is weight-bound, so every extra HBM
+round-trip and launch is pure latency on the serving hot path.
+
+This kernel runs the whole cell step in ONE pallas_call per layer:
+
+  * both (minGRU) / all three (minLSTM) projections on the MXU from a
+    single resident (B, Dx) input tile;
+  * the sigmoid / g() gate transforms, the numerically stable minLSTM
+    f/(f+i) normalisation (Algorithm 8 exponentiated -- naive division
+    NaNs at saturated gates), and the convex state update
+    h = a * h_prev + b on the VPU;
+  * only the new h (B, Dh) is written back.
+
+Grid = (Dh tiles,): the x tile is pinned by its index_map so Mosaic
+keeps it resident across feature tiles, and the weight tiles stream
+through VMEM once per step.  The layer stack is dispatched as ONE
+lax.scan over stacked weights by ``models/lm.decode_step`` (the weights
+stay device-resident across the whole multi-token decode loop -- the
+weight-stationary serving regime), and ``lm.decode_many`` wraps that
+step in a second on-device scan so K tokens cost one host round-trip.
+
+All arithmetic is fp32 in-kernel regardless of input dtype (matching
+the fused parallel kernels, so prefill -> decode handoff is consistent);
+bf16 inputs are upcast on load and the output is cast back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import min_lstm, nn
+
+
+def _mingru_step_kernel(x_ref, wz_ref, bz_ref, wh_ref, bh_ref, h_ref,
+                        o_ref, *, mode: str):
+    x = x_ref[...].astype(jnp.float32)                    # (B, Dx)
+    wz = wz_ref[...].astype(jnp.float32)                  # (Dx, bdh)
+    wh = wh_ref[...].astype(jnp.float32)
+    bz = bz_ref[...].astype(jnp.float32)
+    bh = bh_ref[...].astype(jnp.float32)
+    k = jnp.dot(x, wz, preferred_element_type=jnp.float32) + bz
+    v = jnp.dot(x, wh, preferred_element_type=jnp.float32) + bh
+    z = jax.nn.sigmoid(k)
+    h_tilde = nn.g(v) if mode == "log" else v
+    h_prev = h_ref[...].astype(jnp.float32)               # (B, bdh)
+    o_ref[...] = ((1.0 - z) * h_prev + z * h_tilde).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_dh", "mode", "interpret"))
+def mingru_step_kernel(x: jax.Array, wz: jax.Array, bz: jax.Array,
+                       wh: jax.Array, bh: jax.Array, h_prev: jax.Array,
+                       *, block_dh: int = 128, mode: str = "log",
+                       interpret: bool = True) -> jax.Array:
+    """x: (B, Dx), h_prev: (B, Dh) -> h_t: (B, Dh).  Dh % block_dh == 0
+    and Dx % 128 == 0 (ops.py pads); B padded to a sublane multiple."""
+    bsz, dx = x.shape
+    dh = wz.shape[1]
+    assert dh % block_dh == 0, (dh, block_dh)
+    grid = (dh // block_dh,)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+
+    return pl.pallas_call(
+        functools.partial(_mingru_step_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, dx), lambda j: (0, 0)),
+            pl.BlockSpec((dx, block_dh), lambda j: (0, j)),
+            pl.BlockSpec((block_dh,), lambda j: (j,)),
+            pl.BlockSpec((dx, block_dh), lambda j: (0, j)),
+            pl.BlockSpec((block_dh,), lambda j: (j,)),
+            pl.BlockSpec((bsz, block_dh), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bsz, block_dh), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dh), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, wz, bz, wh, bh, h_prev)
+
+
+def _minlstm_step_kernel(x_ref, wf_ref, bf_ref, wi_ref, bi_ref, wh_ref,
+                         bh_ref, h_ref, o_ref, *, mode: str,
+                         normalize: bool):
+    x = x_ref[...].astype(jnp.float32)                    # (B, Dx)
+    wf = wf_ref[...].astype(jnp.float32)
+    wi = wi_ref[...].astype(jnp.float32)
+    wh = wh_ref[...].astype(jnp.float32)
+    kf = jnp.dot(x, wf, preferred_element_type=jnp.float32) \
+        + bf_ref[...].astype(jnp.float32)
+    ki = jnp.dot(x, wi, preferred_element_type=jnp.float32) \
+        + bi_ref[...].astype(jnp.float32)
+    v = jnp.dot(x, wh, preferred_element_type=jnp.float32) \
+        + bh_ref[...].astype(jnp.float32)
+    if normalize:
+        # stable f/(f+i) -- the naive quotient is 0/0 = NaN at saturated
+        # gates; same in-kernel call as kernels/fused_minlstm
+        f, i = min_lstm.normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
+    h_tilde = nn.g(v) if mode == "log" else v
+    h_prev = h_ref[...].astype(jnp.float32)
+    o_ref[...] = (f * h_prev + i * h_tilde).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_dh", "mode", "normalize",
+                                             "interpret"))
+def minlstm_step_kernel(x: jax.Array, wf: jax.Array, bf: jax.Array,
+                        wi: jax.Array, bi: jax.Array, wh: jax.Array,
+                        bh: jax.Array, h_prev: jax.Array,
+                        *, block_dh: int = 128, mode: str = "log",
+                        normalize: bool = True,
+                        interpret: bool = True) -> jax.Array:
+    """x: (B, Dx), h_prev: (B, Dh) -> h_t: (B, Dh).  Same tiling contract
+    as :func:`mingru_step_kernel`."""
+    bsz, dx = x.shape
+    dh = wf.shape[1]
+    assert dh % block_dh == 0, (dh, block_dh)
+    grid = (dh // block_dh,)
+
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel",))
+
+    return pl.pallas_call(
+        functools.partial(_minlstm_step_kernel, mode=mode,
+                          normalize=normalize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bsz, dx), lambda j: (0, 0)),
+            pl.BlockSpec((dx, block_dh), lambda j: (0, j)),
+            pl.BlockSpec((block_dh,), lambda j: (j,)),
+            pl.BlockSpec((dx, block_dh), lambda j: (0, j)),
+            pl.BlockSpec((block_dh,), lambda j: (j,)),
+            pl.BlockSpec((dx, block_dh), lambda j: (0, j)),
+            pl.BlockSpec((block_dh,), lambda j: (j,)),
+            pl.BlockSpec((bsz, block_dh), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bsz, block_dh), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dh), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(x, wf, bf, wi, bi, wh, bh, h_prev)

@@ -1,0 +1,97 @@
+"""Padded public wrappers for the fused decode-step kernels.
+
+``fused_mingru_step`` / ``fused_minlstm_step`` accept arbitrary batch
+leading dims, any Dx/Dh (padded up to the kernel tile grid with zeros --
+zero-padded contraction columns contribute nothing to the GEMVs, and
+padded feature columns are sliced off the output), and optional biases.
+No custom VJP: decode is inference-only; training/prefill differentiate
+through the fused *parallel* kernels instead.
+
+Dispatch: ``core.min_gru.step`` / ``core.min_lstm.step`` route here when
+their ``scan_strategy`` resolves to ``"fused"`` (the config default
+``"auto"``), which is how ``blocks.step`` -> ``lm.decode_step`` ->
+``lm.decode_many`` put the serving decode hot path on Pallas -- real
+kernels on TPU, interpret-mode parity elsewhere.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_step import kernel as _kernel
+from repro.kernels.scan.ops import call_with_flat_lead, pad_to
+
+DEFAULT_INTERPRET = jax.default_backend() != "tpu"
+
+_SUBLANES = 8     # fp32 sublane multiple; bf16 inputs are upcast in-kernel
+_LANES = 128
+
+
+def _pad_batch(x, h_prev):
+    x, b = pad_to(x, _SUBLANES, 0)
+    h_prev, _ = pad_to(h_prev, _SUBLANES, 0)
+    return x, h_prev, b
+
+
+def fused_mingru_step(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
+                      wh: jax.Array, bh: Optional[jax.Array],
+                      h_prev: jax.Array, *, mode: str = "log",
+                      block_dh: int = 128,
+                      interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """minGRU cell step (projections + gates + state update), one Pallas
+    call.  x: (..., Dx), h_prev: (..., Dh) -> h_t: (..., Dh)."""
+    dh = wz.shape[1]
+    if bz is None:
+        bz = jnp.zeros((dh,), x.dtype)
+    if bh is None:
+        bh = jnp.zeros((dh,), x.dtype)
+
+    def run(xf, hf):
+        xp, hp, b = _pad_batch(xf, hf)
+        xp, _ = pad_to(xp, _LANES, 1)
+        wzp, _ = pad_to(pad_to(wz, _LANES, 0)[0], block_dh, 1)
+        whp, _ = pad_to(pad_to(wh, _LANES, 0)[0], block_dh, 1)
+        bzp, _ = pad_to(bz, block_dh, 0)
+        bhp, _ = pad_to(bh, block_dh, 0)
+        hp, _ = pad_to(hp, block_dh, 1)
+        out = _kernel.mingru_step_kernel(xp, wzp, bzp, whp, bhp, hp,
+                                         block_dh=block_dh, mode=mode,
+                                         interpret=interpret)
+        return out[:b, :dh]
+
+    return call_with_flat_lead(run, (x, 1), (h_prev, 1))
+
+
+def fused_minlstm_step(x: jax.Array, wf: jax.Array, bf: Optional[jax.Array],
+                       wi: jax.Array, bi: Optional[jax.Array],
+                       wh: jax.Array, bh: Optional[jax.Array],
+                       h_prev: jax.Array, *, mode: str = "log",
+                       normalize: bool = True, block_dh: int = 128,
+                       interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """minLSTM cell step (three projections + stable f/(f+i) normalisation
+    + state update), one Pallas call.  Shapes as fused_mingru_step."""
+    dh = wf.shape[1]
+    if bf is None:
+        bf = jnp.zeros((dh,), x.dtype)
+    if bi is None:
+        bi = jnp.zeros((dh,), x.dtype)
+    if bh is None:
+        bh = jnp.zeros((dh,), x.dtype)
+
+    def run(xf, hf):
+        xp, hp, b = _pad_batch(xf, hf)
+        xp, _ = pad_to(xp, _LANES, 1)
+        ws = [pad_to(pad_to(w, _LANES, 0)[0], block_dh, 1)[0]
+              for w in (wf, wi, wh)]
+        bs = [pad_to(b_, block_dh, 0)[0] for b_ in (bf, bi, bh)]
+        hp, _ = pad_to(hp, block_dh, 1)
+        out = _kernel.minlstm_step_kernel(
+            xp, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2], hp,
+            block_dh=block_dh, mode=mode, normalize=normalize,
+            interpret=interpret)
+        return out[:b, :dh]
+
+    return call_with_flat_lead(run, (x, 1), (h_prev, 1))

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the fused decode-step kernels.
+
+Same math as kernel.py (fp32 internal compute, output cast to the input
+dtype) with no Pallas machinery -- the parity tests diff the kernel
+against these, and they double as readable documentation of exactly what
+the kernel computes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import min_lstm, nn
+
+
+def mingru_step_ref(x, wz, bz, wh, bh, h_prev, *, mode: str = "log"):
+    """x: (B, Dx), h_prev: (B, Dh) -> h_t: (B, Dh)."""
+    x32 = x.astype(jnp.float32)
+    k = x32 @ wz.astype(jnp.float32) + bz.astype(jnp.float32)
+    v = x32 @ wh.astype(jnp.float32) + bh.astype(jnp.float32)
+    z = jax.nn.sigmoid(k)
+    h_tilde = nn.g(v) if mode == "log" else v
+    h = (1.0 - z) * h_prev.astype(jnp.float32) + z * h_tilde
+    return h.astype(x.dtype)
+
+
+def minlstm_step_ref(x, wf, bf, wi, bi, wh, bh, h_prev, *,
+                     mode: str = "log", normalize: bool = True):
+    """x: (B, Dx), h_prev: (B, Dh) -> h_t: (B, Dh)."""
+    x32 = x.astype(jnp.float32)
+    kf = x32 @ wf.astype(jnp.float32) + bf.astype(jnp.float32)
+    ki = x32 @ wi.astype(jnp.float32) + bi.astype(jnp.float32)
+    v = x32 @ wh.astype(jnp.float32) + bh.astype(jnp.float32)
+    if normalize:
+        f, i = min_lstm.normalized_gates(kf, ki)
+    else:
+        f, i = jax.nn.sigmoid(kf), jax.nn.sigmoid(ki)
+    h_tilde = nn.g(v) if mode == "log" else v
+    h = f * h_prev.astype(jnp.float32) + i * h_tilde
+    return h.astype(x.dtype)

@@ -3,10 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mingru-lm --smoke \
         --ckpt-dir /tmp/repro_ckpt --prompts "To be" "Friends,"
 
-Loads the latest checkpoint (or random init), runs the v2 continuous-
-batching engine (batched prefill, on-device sampling, optional chunked
-prefill) over the given prompts, prints completions + the engine stats
-snapshot (prefill/decode token counters, queue depth, tokens/s).
+Loads the latest checkpoint (or random init), runs the continuous-
+batching engine (batched prefill, multi-token on-device decode, optional
+chunked prefill) over the given prompts, prints completions + the engine
+stats snapshot (prefill/decode token counters, queue depth, tokens/s,
+host round-trips per decoded token).  ``--decode-block K`` decodes K
+tokens per host round-trip (lm.decode_many's on-device loop).
 """
 
 from __future__ import annotations
@@ -40,6 +42,10 @@ def main(argv=None):
                     help="nucleus sampling mass (1.0 = off)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked prefill size (recurrent-cache archs)")
+    ap.add_argument("--decode-block", type=int, default=1,
+                    help="tokens decoded per host round-trip (K): the "
+                         "engine runs K step/sample/EOS-mask iterations "
+                         "on device per engine.step()")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -55,7 +61,8 @@ def main(argv=None):
 
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_len=args.max_len, seed=args.seed,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           decode_block=args.decode_block)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
@@ -72,6 +79,11 @@ def main(argv=None):
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()
+    print(f"decode block K={args.decode_block}: "
+          f"{snap['decode_calls']} host round-trips for "
+          f"{snap['decode_tokens']} decoded tokens "
+          f"({snap['host_roundtrips_per_decode_token']:.3f} "
+          f"round-trips/token)")
     print("engine stats: " + ", ".join(
         f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in sorted(snap.items())))

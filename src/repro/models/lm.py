@@ -420,7 +420,15 @@ def init_cache(cfg, batch: int, max_len: int) -> Dict[str, Any]:
 
 def decode_step(params, cfg, token: Array, cache: Dict[str, Any]
                 ) -> Tuple[Array, Dict[str, Any]]:
-    """token: (B,) -> (logits (B, V), new cache).  One step for every arch."""
+    """token: (B,) -> (logits (B, V), new cache).  One step for every arch.
+
+    Every trunk kind dispatches its layer stack as ONE ``lax.scan`` over
+    stacked weights (``_iterate``), so the per-step HLO is O(1) in depth;
+    the minRNN step body additionally runs its cell in the fused Pallas
+    decode kernel under the default ``scan_strategy="auto"`` (see
+    ``_minrnn_decode``).  ``decode_many`` wraps this step in a second
+    on-device scan to decode K tokens per host call.
+    """
     pos = cache["pos"]
     x = params["embed"]["table"].astype(cfg.cdtype)[token]
     if cfg.embedding_scale:
@@ -429,25 +437,7 @@ def decode_step(params, cfg, token: Array, cache: Dict[str, Any]
     new_cache = dict(cache)
 
     if cfg.block_kind == "minrnn":
-        bc = _minrnn_block_cfg(cfg)
-
-        def body(carry, scanned):
-            p_l, cache_l = scanned
-            state = {"h": cache_l["h"]}
-            if bc.use_conv:
-                state["conv"] = cache_l["conv"]
-            y, state = minrnn_blocks.step(p_l, bc, carry, state,
-                                          compute_dtype=cfg.cdtype)
-            out_c = {"h": state["h"]}
-            if bc.use_conv:
-                out_c["conv"] = state["conv"]
-            return y, out_c
-
-        scanned = {"h": cache["h"]}
-        if bc.use_conv:
-            scanned["conv"] = cache["conv"]
-        x, outs = _iterate(cfg, body, x,
-                           (params["layers"]["blocks"], scanned))
+        x, outs = _minrnn_decode(params, cfg, x, cache)
         new_cache.update(outs)
 
     elif cfg.block_kind == "ssm":
@@ -479,13 +469,100 @@ def decode_step(params, cfg, token: Array, cache: Dict[str, Any]
     return logits, new_cache
 
 
+def _minrnn_decode(params, cfg, x, cache):
+    """minRNN trunk single-token step: one stacked-weight ``lax.scan``
+    whose body is ``blocks.step`` -- the cell GEMVs + gates + state update
+    run in the fused Pallas decode kernel when ``cfg.scan_strategy``
+    resolves to ``"fused"`` (the ``"auto"`` default)."""
+    bc = _minrnn_block_cfg(cfg)
+
+    def body(carry, scanned):
+        p_l, cache_l = scanned
+        state = {"h": cache_l["h"]}
+        if bc.use_conv:
+            state["conv"] = cache_l["conv"]
+        y, state = minrnn_blocks.step(p_l, bc, carry, state,
+                                      compute_dtype=cfg.cdtype)
+        out_c = {"h": state["h"]}
+        if bc.use_conv:
+            out_c["conv"] = state["conv"]
+        return y, out_c
+
+    scanned = {"h": cache["h"]}
+    if bc.use_conv:
+        scanned["conv"] = cache["conv"]
+    return _iterate(cfg, body, x, (params["layers"]["blocks"], scanned))
+
+
+def decode_many(params, cfg, tok: Array, cache: Dict[str, Any], n: int,
+                controls: Dict[str, Array]):
+    """Decode ``n`` tokens per host round-trip, entirely on device.
+
+    One ``lax.scan`` carries (token, cache, PRNG keys, liveness) through
+    ``n`` iterations of step -> sample -> EOS/length-mask; the host sees
+    only the final ``(B, n)`` token buffer instead of one transfer per
+    token.  ``n`` must be static (the engine jits one program per block
+    size).
+
+    tok: (B,) int32 -- each slot's last sampled token.
+    controls: device-side per-slot control state,
+      ``temperature`` (B,) f32 / ``top_k`` (B,) i32 / ``top_p`` (B,) f32
+          -- sampling controls (see serving.sampling);
+      ``keys`` (B, 2) uint32 -- per-slot PRNG keys;
+      ``eos`` (B,) i32 -- stop token, -1 = none;
+      ``alive`` (B,) bool -- slots that should emit tokens;
+      ``remaining`` (B,) i32 -- tokens each slot may still emit (length
+          cap), so max_new enforcement never needs a host round-trip.
+
+    Returns ``(tokens, new_cache, state)``: ``tokens`` is (B, n) int32
+    with -1 marking positions after a slot went dead; ``state`` carries
+    the advanced ``keys`` / ``alive`` / ``remaining`` and ``tok`` (each
+    slot's final sampled token, the next call's input).
+
+    Dead and never-admitted slots still *compute* (their rows keep
+    stepping so the batch stays dense -- every cache row is independent,
+    and admission prefill overwrites a freed row wholesale before it is
+    read again) but emit -1 and keep their last token.  Keys advance for
+    every slot every iteration, exactly like the per-step
+    ``sampling.sample_tokens`` host loop this replaces, so K=1 streams
+    are bit-identical to the old one-token ``engine.step()``.
+    """
+    # lazy import: models/ stays importable without the serving package
+    # in minimal deployments; sampling itself only depends on jax
+    from repro.serving import sampling
+
+    eos = controls["eos"]
+
+    def body(carry, _):
+        tok, cache, keys, alive, remaining = carry
+        logits, cache = decode_step(params, cfg, tok, cache)
+        toks, keys = sampling.sample_tokens(
+            logits, keys, controls["temperature"], controls["top_k"],
+            controls["top_p"])
+        emit = jnp.where(alive, toks, jnp.int32(-1))
+        remaining = remaining - alive.astype(jnp.int32)
+        hit_eos = (eos >= 0) & (toks == eos)
+        alive = alive & jnp.logical_not(hit_eos) & (remaining > 0)
+        tok = jnp.where(emit >= 0, toks, tok)
+        return (tok, cache, keys, alive, remaining), emit
+
+    carry0 = (tok.astype(jnp.int32), cache, controls["keys"],
+              controls["alive"], controls["remaining"].astype(jnp.int32))
+    (tok, cache, keys, alive, remaining), emitted = lax.scan(
+        body, carry0, None, length=n)
+    state = {"tok": tok, "keys": keys, "alive": alive,
+             "remaining": remaining}
+    return jnp.swapaxes(emitted, 0, 1), cache, state
+
+
 def _attn_mixer_step(p, cfg, y, cache_l, pos):
     """Single-token mixer with cache. Returns (out, new mixer cache dict)."""
     if cfg.seq_mixer in _MIN_CELLS:
         cell = _MIN_CELLS[cfg.seq_mixer]
         mode = cfg.minrnn.mode if cfg.minrnn else "log"
         h = cell.step(p["rnn"], y, cache_l["h"], mode=mode,
-                      compute_dtype=cfg.cdtype)
+                      compute_dtype=cfg.cdtype,
+                      scan_strategy=cfg.scan_strategy)
         return nn.dense_apply(p["down"], h, cfg.cdtype), {"h": h}
     if cfg.attn_kind == "mla":
         out, ckv, krope = attn.mla_decode_step(p, cfg, y, cache_l["ckv"],

@@ -1,42 +1,47 @@
-"""Serving engine v2: batched prefill + on-device sampling + chunked prefill.
+"""Serving engine v3: batched prefill + multi-token on-device decode.
 
 The paper's serving story (§4.1, App. D.2): prefill processes the whole
 prompt with the parallel scan (one forward), then decode rolls the O(1)
 sequential cell.  The engine keeps a fixed-capacity batch of slots
 (continuous batching, vLLM-style but with RNN/SSM states as first-class
-cache kinds).  v2 rebuilds the three hot paths of the v1 engine:
+cache kinds).  Hot paths:
 
   * **Batched prefill** -- each admission round gathers every queued
     request that fits a free slot, right-pads the prompts into ONE
     ``(k, T_pad)`` ``lm.prefill`` call with per-row length masking
     (``lengths=``), and splices all k terminal states into their slots in
-    one jitted tree scatter.  v1 prefilled requests one at a time.
-    Padded lengths are bucketed to powers of two so the number of
-    compiled prefill programs stays O(log max_len).
+    one jitted tree scatter.  Padded lengths are bucketed to powers of
+    two so the number of compiled prefill programs stays O(log max_len).
 
-  * **On-device sampling** -- ``serving.sampling`` draws every slot's next
-    token in one jitted call (per-slot temperature / top-k / top-p /
-    PRNG key), replacing v1's per-slot host numpy loop; decode transfers
-    one small token vector per step instead of the full logits matrix.
+  * **Multi-token on-device decode** -- ``step(n_tokens=K)`` runs
+    ``lm.decode_many``: ONE jitted ``lax.scan`` over K iterations of
+    step -> sample -> EOS/length-mask, with sampling controls, stop
+    tokens, liveness and length caps all living in device-side control
+    state.  The host sees a single ``(B, K)`` token buffer per call
+    (one round-trip per K tokens instead of per token) and only splices
+    finished slots / drains output buffers between calls.  The minRNN
+    cell step itself runs in the fused Pallas decode kernel
+    (``kernels/decode_step``) under the default ``scan_strategy="auto"``.
 
   * **Chunked prefill** -- prompts longer than ``prefill_chunk`` are
-    prefilled in fixed-size chunks interleaved with decode steps (one
-    chunk per ``step()``), bounding how long running requests stall
-    behind a long prompt.  Supported for recurrent-cache archs
-    (``lm.supports_chunked_prefill``); KV-cache archs prefill
-    whole-prompt.
+    prefilled in fixed-size chunks interleaved with decode (one chunk
+    per ``step()``, i.e. per K decoded tokens), bounding how long
+    running requests stall behind a long prompt.  Supported for
+    recurrent-cache archs (``lm.supports_chunked_prefill``); KV-cache
+    archs prefill whole-prompt.
 
-Scheduling and accounting (queue policy, token counters, tokens/s) live in
-``serving.scheduler``; ``engine.stats.snapshot()`` is the monitoring
-surface.  Greedy engine output is argmax-identical to the single-request
-``generate_one`` reference for every cache kind, under any admission order
-and slot reuse -- the parity tests in tests/test_serving.py drive this.
+Scheduling and accounting (queue policy, token counters, tokens/s, host
+round-trips per decoded token) live in ``serving.scheduler``;
+``engine.stats.snapshot()`` is the monitoring surface.  Greedy engine
+output is argmax-identical to the single-request ``generate_one``
+reference for every cache kind and any decode block size, under any
+admission order and slot reuse -- the parity tests in
+tests/test_serving.py and tests/test_decode.py drive this.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -93,11 +98,15 @@ class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 2048, seed: int = 0,
                  prefill_chunk: Optional[int] = None,
-                 max_prefill_tokens: Optional[int] = None):
+                 max_prefill_tokens: Optional[int] = None,
+                 decode_block: int = 1):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        # K = decoded tokens per host round-trip (lm.decode_many scan
+        # length); admission / chunked prefill interleave at this grain
+        self.decode_block = max(1, int(decode_block))
         self.cache = lm.init_cache(cfg, max_batch, max_len)
         self.free = list(range(max_batch))
         self.active: Dict[int, Request] = {}
@@ -123,8 +132,8 @@ class ServingEngine:
         self._controls_dev = None
         self._keys = sampling.make_keys(seed, max_batch)
 
-        self._decode = jax.jit(
-            lambda p, tok, cache: lm.decode_step(p, cfg, tok, cache))
+        # one compiled lm.decode_many program per distinct block size
+        self._decode_fns: Dict[int, Any] = {}
         self._prefill = jax.jit(
             lambda p, toks, lengths: lm.prefill(p, cfg, toks, max_len,
                                                 lengths=lengths))
@@ -287,28 +296,72 @@ class ServingEngine:
         self.free.append(slot)
         self.stats.completed += 1
 
-    def step(self) -> int:
+    def _decode_fn(self, n: int):
+        fn = self._decode_fns.get(n)
+        if fn is None:
+            cfg = self.cfg
+            fn = jax.jit(lambda p, tok, cache, controls: lm.decode_many(
+                p, cfg, tok, cache, n, controls))
+            self._decode_fns[n] = fn
+        return fn
+
+    def _decode_controls(self):
+        """Assemble the device-side control state for one decode_many call.
+
+        Sampling controls are the cached device copies (invalidated only
+        at admission); liveness / stop / length-cap vectors are rebuilt
+        from the active table -- (B,)-sized uploads, negligible next to
+        the K decode steps they steer.
+        """
+        alive = np.zeros((self.max_batch,), bool)
+        remaining = np.zeros((self.max_batch,), np.int32)
+        eos = np.full((self.max_batch,), -1, np.int32)
+        for slot, req in self.active.items():
+            alive[slot] = True
+            remaining[slot] = req.max_new - len(req.out)
+            if req.eos is not None:
+                eos[slot] = req.eos
+        temp, topk, topp = self._controls()
+        return {"temperature": temp, "top_k": topk, "top_p": topp,
+                "keys": self._keys, "eos": jnp.asarray(eos),
+                "alive": jnp.asarray(alive),
+                "remaining": jnp.asarray(remaining)}
+
+    def step(self, n_tokens: Optional[int] = None) -> int:
         """Admit pending requests, advance chunked prefill by one chunk,
-        decode one token for every active slot.  Returns the number of
-        requests still in flight (active + prefilling + queued)."""
+        decode up to ``n_tokens`` (default ``self.decode_block``) tokens
+        for every active slot in ONE on-device loop.  Returns the number
+        of requests still in flight (active + prefilling + queued).
+
+        Slots that hit EOS or their length cap mid-buffer stop emitting
+        on device (their tail positions read -1) and are retired -- and
+        their slots refilled -- only when the call returns, so one host
+        round-trip covers ``n_tokens`` decode steps.
+        """
+        k = max(1, int(n_tokens)) if n_tokens is not None \
+            else self.decode_block
         self._admit()
         self._prefill_step()
         if self.active:
             tok = jnp.asarray(self._last_token)
-            temp, topk, topp = self._controls()
+            controls = self._decode_controls()
             with self.stats.timed("decode"):
-                logits, self.cache = self._decode(self.params, tok,
-                                                  self.cache)
-                toks, self._keys = sampling.sample_tokens(
-                    logits, self._keys, temp, topk, topp)
-                toks_np = np.asarray(toks)
-            self.stats.decode_steps += 1
+                buf, self.cache, dstate = self._decode_fn(k)(
+                    self.params, tok, self.cache, controls)
+                self._keys = dstate["keys"]
+                buf_np = np.asarray(buf)            # (B, k), -1 padded
+            self.stats.decode_calls += 1
+            self.stats.decode_steps += k
             for slot, req in list(self.active.items()):
-                t = int(toks_np[slot])
-                req.out.append(t)
-                self._last_token[slot] = t
-                self.stats.decode_tokens += 1
-                if (req.eos is not None and t == req.eos) or \
+                for t in buf_np[slot]:
+                    t = int(t)
+                    if t < 0:
+                        break
+                    req.out.append(t)
+                    self._last_token[slot] = t
+                    self.stats.decode_tokens += 1
+                if (req.eos is not None and req.out
+                        and req.out[-1] == req.eos) or \
                         len(req.out) >= req.max_new:
                     self._retire(slot)
         return len(self.active) + len(self._cohort) + len(self.scheduler)

@@ -30,7 +30,8 @@ def bucket_length(t: int, minimum: int = 8) -> int:
 class SchedulerConfig:
     max_batch: int = 8
     # prompts longer than this prefill in fixed-size chunks interleaved
-    # with decode steps (None/0 = whole-prompt prefill).  Only effective
+    # with decode rounds -- one chunk per engine step(), i.e. per decode
+    # block of K tokens (None/0 = whole-prompt prefill).  Only effective
     # for archs whose cache supports resume (lm.supports_chunked_prefill).
     prefill_chunk: Optional[int] = None
     # cap on summed prompt tokens admitted per round (None = no cap);
@@ -80,9 +81,14 @@ class EngineStats:
     """Counters + wall-clock for the serving hot paths.
 
     ``prefill_tokens`` counts true prompt tokens (padding excluded);
-    ``decode_tokens`` counts generated tokens (one per active slot per
-    step).  Timers wrap the device calls including host sync, so
-    tokens-per-second is an end-to-end number.
+    ``decode_tokens`` counts generated tokens.  ``decode_steps`` counts
+    *device* decode iterations while ``decode_calls`` counts host
+    round-trips (one ``lm.decode_many`` dispatch each); with decode
+    block K they differ by ~Kx, and the snapshot's
+    ``host_roundtrips_per_decode_token`` is the serving-efficiency
+    number the multi-token decode loop exists to shrink.  Timers wrap
+    the device calls including host sync, so tokens-per-second is an
+    end-to-end number.
     """
     submitted: int = 0
     admitted: int = 0
@@ -92,6 +98,7 @@ class EngineStats:
     prefill_calls: int = 0
     decode_tokens: int = 0
     decode_steps: int = 0
+    decode_calls: int = 0
     queue_peak: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
@@ -135,4 +142,6 @@ class EngineStats:
         d["decode_tokens_per_second"] = self.decode_tokens_per_second()
         d["padding_overhead"] = (
             self.padded_prefill_tokens / max(self.prefill_tokens, 1))
+        d["host_roundtrips_per_decode_token"] = (
+            self.decode_calls / max(self.decode_tokens, 1))
         return d

@@ -1,0 +1,364 @@
+"""Multi-token on-device decode: ``lm.decode_many`` must be bit-exact with
+a host loop of ``decode_step`` + ``sample_tokens`` (greedy and seeded
+sampling, mid-buffer EOS, length caps), the fused Pallas decode-step
+kernel must match the jnp cell step (incl. bf16 and odd d_hidden), and the
+engine's ``step(n_tokens=K>1)`` path must keep the ``generate_one`` parity
+contract across admission orders, mid-stream submits, slot retire/reuse
+across buffer boundaries, and chunked-prefill interleaving."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.core import blocks, min_gru, min_lstm
+from repro.kernels.decode_step import ops as step_ops
+from repro.kernels.decode_step import ref as step_ref
+from repro.models import lm
+from repro.serving import sampling
+from repro.serving.engine import ServingEngine, generate_one
+
+MAX_LEN = 64
+
+
+def _setup(arch):
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Fused decode-step kernel vs jnp cell step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["log", "linear"])
+@pytest.mark.parametrize("dx,dh,b", [(16, 32, 4), (12, 13, 3), (64, 200, 1)])
+def test_fused_mingru_step_matches_ref(mode, dx, dh, b):
+    params = min_gru.init(jax.random.PRNGKey(0), dx, dh)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, dx))
+    h = jax.random.normal(jax.random.PRNGKey(2), (b, dh))
+    ref = min_gru.step(params, x, h, mode=mode)
+    fused = min_gru.step(params, x, h, mode=mode, scan_strategy="auto")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+@pytest.mark.parametrize("dx,dh,b", [(16, 32, 4), (10, 17, 3)])
+def test_fused_minlstm_step_matches_ref(normalize, dx, dh, b):
+    params = min_lstm.init(jax.random.PRNGKey(3), dx, dh)
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, dx))
+    h = jax.random.normal(jax.random.PRNGKey(5), (b, dh))
+    ref = min_lstm.step(params, x, h, normalize=normalize)
+    fused = min_lstm.step(params, x, h, normalize=normalize,
+                          scan_strategy="fused")
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_step_bf16_and_saturated_gates():
+    """bf16 inputs upcast to fp32 in-kernel; the stable minLSTM gate
+    normalisation must stay finite where naive f/(f+i) is 0/0 = NaN."""
+    dx, dh = 24, 40
+    params = min_lstm.init(jax.random.PRNGKey(6), dx, dh)
+    x = (jax.random.normal(jax.random.PRNGKey(7), (4, dx))
+         .astype(jnp.bfloat16))
+    h = jax.random.normal(jax.random.PRNGKey(8), (4, dh)).astype(jnp.bfloat16)
+    ref = min_lstm.step(params, x, h, compute_dtype=jnp.bfloat16)
+    fused = min_lstm.step(params, x, h, compute_dtype=jnp.bfloat16,
+                          scan_strategy="fused")
+    assert fused.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(fused, np.float32), np.asarray(ref, np.float32),
+        rtol=2e-2, atol=2e-2)
+    # saturated gates: both sigmoids underflow in fp32
+    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
+    big = jnp.full((2, dx), -200.0)
+    sat = step_ops.fused_minlstm_step(
+        big, ws[0], jnp.full((dh,), -200.0), ws[1], jnp.full((dh,), -200.0),
+        ws[2], None, jnp.ones((2, dh)))
+    assert bool(jnp.all(jnp.isfinite(sat)))
+
+
+def test_fused_step_ops_match_pure_ref_oracle():
+    """ops wrapper (padding + kernel) against the standalone ref module."""
+    dx, dh, b = 20, 50, 5
+    key = jax.random.PRNGKey(9)
+    wz = jax.random.normal(key, (dx, dh)) * 0.3
+    wh = jax.random.normal(jax.random.PRNGKey(10), (dx, dh)) * 0.3
+    bz = jax.random.normal(jax.random.PRNGKey(11), (dh,))
+    x = jax.random.normal(jax.random.PRNGKey(12), (b, dx))
+    h = jax.random.normal(jax.random.PRNGKey(13), (b, dh))
+    out = step_ops.fused_mingru_step(x, wz, bz, wh, None, h)
+    ref = step_ref.mingru_step_ref(x, wz, bz, wh, jnp.zeros((dh,)), h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+def test_block_step_fused_matches_sequential_oracle(cell):
+    """blocks.step under the default 'auto' strategy == forced jnp path."""
+    cfg = blocks.MinRNNBlockConfig(d_model=16, cell=cell, expansion=1.5,
+                                   use_conv=True, use_mlp=True)
+    params = blocks.init(jax.random.PRNGKey(14), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(15), (3, 16))
+    state = blocks.init_state(cfg, (3,))
+    y_auto, s_auto = blocks.step(params, cfg, x, state)
+    y_ref, s_ref = blocks.step(params, cfg, x, state,
+                               scan_strategy="sequential")
+    np.testing.assert_allclose(np.asarray(y_auto), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_auto["h"]),
+                               np.asarray(s_ref["h"]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_many vs looped decode_step + sample_tokens
+# ---------------------------------------------------------------------------
+
+def _loop_reference(cfg, params, tok, cache, keys, controls_np, n):
+    """Host re-implementation of decode_many's contract: step + sample
+    every iteration, emit only while alive, stop on EOS / length cap."""
+    step_fn = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+    alive = controls_np["alive"].copy()
+    remaining = controls_np["remaining"].copy()
+    emitted = np.full((tok.shape[0], n), -1, np.int32)
+    tok = jnp.asarray(tok)
+    for j in range(n):
+        logits, cache = step_fn(params, tok, cache)
+        toks, keys = sampling.sample_tokens(
+            logits, keys, jnp.asarray(controls_np["temperature"]),
+            jnp.asarray(controls_np["top_k"]),
+            jnp.asarray(controls_np["top_p"]))
+        toks_np = np.asarray(toks)
+        next_tok = np.asarray(tok).copy()
+        for b in range(tok.shape[0]):
+            if not alive[b]:
+                continue
+            emitted[b, j] = toks_np[b]
+            next_tok[b] = toks_np[b]
+            remaining[b] -= 1
+            if (controls_np["eos"][b] >= 0
+                    and toks_np[b] == controls_np["eos"][b]) \
+                    or remaining[b] <= 0:
+                alive[b] = False
+        tok = jnp.asarray(next_tok)
+    return emitted, keys, alive
+
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_decode_many_matches_looped_decode_step(arch, temperature):
+    cfg, params = _setup(arch)
+    toks = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 0], [9, 8, 0, 0]], jnp.int32)
+    lengths = jnp.asarray([4, 3, 2], jnp.int32)
+    logits, cache = lm.prefill(params, cfg, toks, MAX_LEN, lengths=lengths)
+    bsz = 3
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    keys = sampling.make_keys(7, bsz)
+    controls_np = {
+        "temperature": np.full((bsz,), temperature, np.float32),
+        "top_k": np.asarray([0, 40, 5], np.int32),
+        "top_p": np.asarray([1.0, 0.9, 1.0], np.float32),
+        "eos": np.full((bsz,), -1, np.int32),
+        "alive": np.ones((bsz,), bool),
+        "remaining": np.asarray([6, 3, 5], np.int32),
+    }
+    n = 6
+    controls = {k: jnp.asarray(v) for k, v in controls_np.items()}
+    controls["keys"] = keys
+    buf, cache_d, state = jax.jit(
+        lambda p, t, c, ct: lm.decode_many(p, cfg, t, c, n, ct)
+    )(params, tok0, cache, controls)
+
+    ref, ref_keys, ref_alive = _loop_reference(
+        cfg, params, tok0, cache, keys, controls_np, n)
+    np.testing.assert_array_equal(np.asarray(buf), ref)
+    np.testing.assert_array_equal(np.asarray(state["keys"]),
+                                  np.asarray(ref_keys))
+    np.testing.assert_array_equal(np.asarray(state["alive"]), ref_alive)
+    # length caps honoured on device: slot 1 emitted exactly 3 tokens
+    assert int((np.asarray(buf)[1] >= 0).sum()) == 3
+
+
+def test_decode_many_mid_buffer_eos_stops_emission():
+    cfg, params = _setup("mingru-lm")
+    logits, cache = lm.prefill(params, cfg,
+                               jnp.asarray([[1, 2, 3]], jnp.int32), MAX_LEN)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    # find what greedy emits second, then rerun with it as the stop token
+    controls = {
+        "temperature": jnp.zeros((1,)), "top_k": jnp.zeros((1,), jnp.int32),
+        "top_p": jnp.ones((1,)), "keys": sampling.make_keys(0, 1),
+        "eos": jnp.full((1,), -1, jnp.int32),
+        "alive": jnp.ones((1,), bool),
+        "remaining": jnp.full((1,), 8, jnp.int32),
+    }
+    buf, _, _ = lm.decode_many(params, cfg, tok0, cache, 8, controls)
+    eos = int(np.asarray(buf)[0, 1])
+    controls["eos"] = jnp.full((1,), eos, jnp.int32)
+    buf2, _, state = lm.decode_many(params, cfg, tok0, cache, 8, controls)
+    b = np.asarray(buf2)[0]
+    stop = int(np.argmax(b == eos))
+    assert b[stop] == eos
+    assert (b[stop + 1:] == -1).all()
+    assert not bool(np.asarray(state["alive"])[0])
+
+
+def test_decode_many_dead_slots_do_not_disturb_live_rows():
+    """A dead slot keeps stepping (dense batch) but its garbage must not
+    leak into live rows: live-row tokens match a solo run."""
+    cfg, params = _setup("mingru-lm")
+    toks = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    logits, cache = lm.prefill(params, cfg, toks, MAX_LEN)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def controls(bsz, alive):
+        return {"temperature": jnp.zeros((bsz,)),
+                "top_k": jnp.zeros((bsz,), jnp.int32),
+                "top_p": jnp.ones((bsz,)),
+                "keys": sampling.make_keys(0, bsz),
+                "eos": jnp.full((bsz,), -1, jnp.int32),
+                "alive": jnp.asarray(alive),
+                "remaining": jnp.full((bsz,), 5, jnp.int32)}
+
+    buf, _, _ = lm.decode_many(params, cfg, tok0, cache, 5,
+                               controls(2, [False, True]))
+    lg1, c1 = lm.prefill(params, cfg, toks[1:], MAX_LEN)
+    buf1, _, _ = lm.decode_many(params, cfg,
+                                jnp.argmax(lg1, -1).astype(jnp.int32),
+                                c1, 5, controls(1, [True]))
+    b = np.asarray(buf)
+    assert (b[0] == -1).all()
+    np.testing.assert_array_equal(b[1], np.asarray(buf1)[0])
+
+
+# ---------------------------------------------------------------------------
+# Engine parity with n_tokens=K>1 (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", [
+    "mingru-lm",
+    # KV/SSD cache kinds ride the same decode_many loop; heavier compiles
+    pytest.param("mamba2-370m", marks=pytest.mark.slow),
+    pytest.param("gemma-2b", marks=pytest.mark.slow),
+])
+@pytest.mark.parametrize("k", [3])
+def test_engine_block_decode_matches_single_request(arch, k):
+    cfg, params = _setup(arch)
+    prompts = [[1, 2, 3, 4], [5, 6, 7], [2, 4, 6, 8, 10, 1]]
+    singles = [generate_one(cfg, params, p, max_new=7, max_len=MAX_LEN)
+               for p in prompts]
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=k)
+    rids = [engine.submit(p, max_new=7) for p in prompts]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, singles):
+        assert outs[rid] == ref, (outs[rid], ref)
+    # max_new=7 with K=3 exercises a partial final buffer
+    assert engine.stats.decode_calls < engine.stats.decode_steps
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_engine_block_decode_admission_orders(k):
+    cfg, params = _setup("mingru-lm")
+    prompts = [[1, 2, 3, 4, 5], [9, 8, 7], [3, 1, 4, 1, 5, 9], [2, 6]]
+    refs = {tuple(p): generate_one(cfg, params, p, max_new=5,
+                                   max_len=MAX_LEN) for p in prompts}
+    for order in ([0, 1, 2, 3], [3, 2, 1, 0], [2, 0, 3, 1]):
+        engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                               decode_block=k)
+        rids = {engine.submit(prompts[i], max_new=5): tuple(prompts[i])
+                for i in order}
+        outs = engine.run_to_completion()
+        for rid, key in rids.items():
+            assert outs[rid] == refs[key], (order, key)
+
+
+def test_engine_block_decode_mid_stream_submit():
+    cfg, params = _setup("mingru-lm")
+    first = [[1, 2, 3, 4], [5, 6, 7, 8, 9]]
+    late = [[2, 4, 6], [7, 5, 3, 1]]
+    refs = [generate_one(cfg, params, p, max_new=8, max_len=MAX_LEN)
+            for p in first + late]
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN,
+                           decode_block=3)
+    rids = [engine.submit(p, max_new=8) for p in first]
+    for _ in range(2):
+        engine.step()
+    rids += [engine.submit(p, max_new=8) for p in late]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
+
+
+def test_engine_block_decode_eos_retire_and_reuse_across_buffers():
+    """EOS mid-buffer retires the slot at the buffer boundary; the slot is
+    reused by a queued request whose stream must match a clean engine."""
+    cfg, params = _setup("mingru-lm")
+    eos_tok = generate_one(cfg, params, [1, 2, 3], max_new=2,
+                           max_len=MAX_LEN)[1]
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=4)
+    rid = engine.submit([1, 2, 3], max_new=16, eos=eos_tok)
+    ref = generate_one(cfg, params, [4, 5, 6, 7], max_new=6,
+                       max_len=MAX_LEN)
+    rid2 = engine.submit([4, 5, 6, 7], max_new=6)
+    outs = engine.run_to_completion()
+    # stopped at EOS well before its 16-token cap (mid-buffer for K=4)
+    assert outs[rid][-1] == eos_tok and len(outs[rid]) < 16
+    assert outs[rid2] == ref
+    # the EOS'd slot's dead-step garbage was overwritten at readmission
+    assert engine.stats.completed == 2
+
+
+def test_engine_block_decode_with_chunked_prefill_interleaving():
+    cfg, params = _setup("mingru-lm")
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 200, size=n)) for n in (19, 7, 26, 3)]
+    refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
+            for p in prompts]
+    engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                           prefill_chunk=8, decode_block=4)
+    rids = [engine.submit(p, max_new=6) for p in prompts]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
+    assert engine.stats.prefill_calls > 2       # chunking actually ran
+
+
+def test_engine_block_decode_sampled_streams_reproducible():
+    cfg, params = _setup("mingru-lm")
+
+    def run(k):
+        engine = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                               seed=7, decode_block=k)
+        rids = [engine.submit([1, 2, 3], max_new=8, temperature=0.9,
+                              top_k=50, top_p=0.95),
+                engine.submit([4, 5], max_new=8, temperature=1.2)]
+        return [engine.run_to_completion()[r] for r in rids]
+
+    a, b = run(4), run(4)
+    assert a == b
+    for out in a:
+        assert len(out) == 8
+        assert all(0 <= t < cfg.vocab_size for t in out)
+    # K=1 must reproduce the legacy one-token-per-step key schedule
+    # (decode_many advances every slot's key once per device step)
+    assert run(1) == run(1)
+
+
+def test_engine_per_call_override_and_roundtrip_accounting():
+    cfg, params = _setup("mingru-lm")
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=32)
+    engine.submit([1, 2, 3], max_new=6)
+    engine.step(n_tokens=4)             # explicit block override
+    engine.step(n_tokens=4)
+    assert engine.stats.decode_calls == 2
+    assert engine.stats.decode_steps == 8
+    snap = engine.stats.snapshot()
+    assert snap["host_roundtrips_per_decode_token"] <= 0.5
+    outs = engine.run_to_completion()
+    assert len(list(outs.values())[0]) == 6
