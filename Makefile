@@ -4,7 +4,7 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-serving bench-engine bench-train bench-decode \
-	example-serve
+	bench-serve example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -12,10 +12,11 @@ test:            ## full tier-1 suite (what CI runs)
 test-fast:       ## skip the heavy model-smoke / multi-device tier
 	$(PYTEST) -q -m "not slow"
 
-test-serving:    ## engine + sampling + kernel-scan tests only
-	$(PYTEST) -q tests/test_serving.py tests/test_sampling.py tests/test_scan.py
+test-serving:    ## engine + scheduler + sampling + kernel-scan tests only
+	$(PYTEST) -q tests/test_serving.py tests/test_scheduler.py \
+		tests/test_sampling.py tests/test_scan.py
 
-bench-engine:    ## v1-vs-v2 serving throughput sweep
+bench-engine:    ## superstep-vs-v1 serving throughput sweep
 	PYTHONPATH=src python -m benchmarks.engine_throughput
 
 bench-train:     ## train-step tokens/s across scan strategies -> BENCH_train.json
@@ -23,6 +24,9 @@ bench-train:     ## train-step tokens/s across scan strategies -> BENCH_train.js
 
 bench-decode:    ## decode tokens/s per decode-block size K -> BENCH_decode.json
 	PYTHONPATH=src python -m benchmarks.engine_throughput --decode
+
+bench-serve:     ## mixed arrival-trace: per-phase vs superstep -> BENCH_serve.json
+	PYTHONPATH=src python -m benchmarks.engine_throughput --mixed
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

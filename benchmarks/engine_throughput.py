@@ -1,41 +1,35 @@
-"""Serving-engine throughput: v2 (batched prefill + on-device sampling)
-versus the v1 seed engine, across batch sizes on a mixed-prompt workload
--- plus the decode-path bench (``--decode``) comparing multi-token
-on-device decode (``step(n_tokens=K)`` / ``lm.decode_many``) against the
-per-token baseline, writing BENCH_decode.json.
+"""Serving-engine throughput: the superstep engine versus its ancestors.
 
-The v1 baseline is vendored below exactly as the seed shipped it: one
-``lm.prefill`` call *per request* spliced slot-by-slot, and a per-slot
-host-side numpy sampling loop each decode step.  v2 admits a whole group
-in one right-padded masked prefill and samples every slot in one jitted
-call.  Emits the standard ``name,us_per_call,derived`` CSV rows; derived
-is end-to-end tokens/s (prefill + decode).  A short warmup compiles the
-decode step and the common shapes first; note that v1 recompiles prefill
-for *every distinct prompt length* while v2 buckets padded lengths to
-powers of two -- that compile traffic is part of the cost being measured.
+Three scenarios:
 
-The decode bench reports two metrics per block size K (mirroring
-train_throughput.py's convention):
+  * default -- the superstep engine versus the vendored v1 seed engine
+    (per-request prefill + host-side sampling) across batch sizes on a
+    mixed-prompt workload; end-to-end tokens/s.
+  * ``--decode`` -- decode-block sweep: tokens/s per block size K (K=1
+    is the per-token baseline row kept for the trajectory), writing
+    BENCH_decode.json.  Greedy streams must be identical across K.
+  * ``--mixed`` -- the acceptance scenario for the superstep refactor:
+    a mixed **arrival trace** (staggered arrivals, mixed prompt/output
+    lengths, queue pressure) served by (a) a round-level simulation of
+    the PR 3 *per-phase* engine (admission prefill barrier -> K-token
+    decode buffer -> retire at buffer end) and (b) the same trace under
+    the superstep loop (prefill rides the decode rounds, dead rows
+    re-arm in-loop), both on the shared structural latency model --
+    plus the REAL superstep engine replaying the trace for wall-clock.
+    Writes BENCH_serve.json (``--tiny`` -> BENCH_serve.tiny.json).
 
-  * **wall-clock** decode tokens/s from engine.stats.  Only meaningful on
-    a real TPU; on CPU the fused decode kernel runs in interpret mode
-    (python-level emulation) so the wall numbers are honest but not the
-    TPU story.
-  * **structural** decode tokens/s from the backend-independent latency
-    model: decode at serving batch sizes is weight-bound (activations are
-    (B, D) vectors), so one device step streams the trunk + unembed
-    weights once -- t_step = weight_bytes / HBM_BW -- and each engine
-    step() pays ONE host round-trip for K device steps:
-
-        tokens/s = B * K / (K * t_step + t_roundtrip)
-
-    The K=1 row is the per-token baseline the trajectory keeps; the
-    speedup asymptotes to (t_step + rt) / t_step as K grows.
+Structural latency model (shared with the decode bench, mirroring
+train_throughput.py's convention): decode at serving batch sizes is
+weight-bound, so one device round streams the trunk + unembed weights
+once -- t_step = weight_bytes / HBM_BW -- and each host call pays one
+round-trip.  Wall-clock on CPU runs the Pallas kernels in interpret
+mode: honest but not the TPU story; the structural column is.
 
     PYTHONPATH=src python -m benchmarks.engine_throughput \
         --arch mingru-lm --batches 1 2 4 8
     PYTHONPATH=src python -m benchmarks.engine_throughput --decode
-    PYTHONPATH=src python -m benchmarks.engine_throughput --decode --tiny
+    PYTHONPATH=src python -m benchmarks.engine_throughput --mixed
+    PYTHONPATH=src python -m benchmarks.engine_throughput --mixed --tiny
 """
 
 from __future__ import annotations
@@ -51,7 +45,7 @@ import numpy as np
 from benchmarks.bench_utils import dump_json, header, row
 from repro.configs import archs
 from repro.models import lm
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServingEngine, generate_one, replay_trace
 
 
 # ---------------------------------------------------------------------------
@@ -163,8 +157,7 @@ def run_engine(make_engine, prompts, max_new, temperature):
 
 
 def bench(arch: str, batches, n_requests: int, max_new: int,
-          temperature: float, prefill_chunk: Optional[int],
-          out_path: str = "BENCH_engine.json"):
+          temperature: float, out_path: str = "BENCH_engine.json"):
     cfg = archs.smoke(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     max_len = 160
@@ -178,8 +171,7 @@ def bench(arch: str, batches, n_requests: int, max_new: int,
             ("seed_v1", lambda mb=mb: SeedEngine(
                 cfg, params, max_batch=mb, max_len=max_len)),
             ("v2", lambda mb=mb: ServingEngine(
-                cfg, params, max_batch=mb, max_len=max_len,
-                prefill_chunk=prefill_chunk)),
+                cfg, params, max_batch=mb, max_len=max_len)),
         ]:
             run_engine(make, prompts[:2], 4, temperature)   # compile warmup
             dt, toks = run_engine(make, prompts, max_new, temperature)
@@ -278,7 +270,7 @@ def bench_decode(arch: str, batch: int, n_requests: int, max_new: int,
             f"{s.decode_calls} roundtrips")
 
     # all block sizes must produce identical greedy streams -- a mismatch
-    # means a decode_many masking/carry regression, fail loudly
+    # means a superstep masking/carry regression, fail loudly
     base_k = blocks[0]
     for k in blocks[1:]:
         if outs_by_k[k] != outs_by_k[base_k]:
@@ -313,38 +305,242 @@ def bench_decode(arch: str, batch: int, n_requests: int, max_new: int,
     return payload
 
 
+# ---------------------------------------------------------------------------
+# --mixed: arrival-trace scenario, per-phase baseline vs superstep
+# ---------------------------------------------------------------------------
+
+def make_trace(n: int, batch: int, seed: int = 0, rate: float = 2.0):
+    """Heavy mixed traffic: staggered arrivals at ``rate`` x service
+    capacity (so admission stays continuous and the queue never drains
+    until the tail), mixed prompt lengths with a long-ish tail, mixed
+    completion lengths.  Arrival times are in *device rounds*; both
+    simulators and the real engine replay the same trace."""
+    rng = np.random.default_rng(seed)
+    lens = np.clip(rng.lognormal(mean=1.8, sigma=0.7, size=n), 3, 48
+                   ).astype(int)
+    news = rng.integers(12, 33, size=n)
+    gaps = rng.exponential(scale=float(news.mean()) / (batch * rate),
+                           size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    return [dict(arrival=int(a), prompt_len=int(l), max_new=int(m))
+            for a, l, m in zip(arrivals, lens, news)]
+
+
+def simulate_per_phase(trace, batch: int, k: int, t_step: float, rt: float):
+    """Round-level simulation of the PR 3 per-phase engine: each step()
+    is (admission: one batched parallel-prefill call that barriers
+    decode) then (one K-round decode_many call).  First tokens are
+    sampled from prefill logits; a slot that finishes mid-buffer stops
+    emitting but is retired -- and its slot refillable -- only when the
+    buffer drains.  Returns (generated_tokens, virtual_seconds)."""
+    pending = list(trace)
+    slots: List[Optional[dict]] = [None] * batch
+    t, emitted = 0.0, 0
+    round_cost = t_step + rt / k            # arrival-clock conversion
+    while pending or any(s is not None for s in slots):
+        free = [i for i, s in enumerate(slots) if s is None]
+        group = []
+        while free and pending and pending[0]["arrival"] * round_cost <= t:
+            r = pending.pop(0)
+            group.append((free.pop(0), r))
+        if group:
+            # one batched whole-prompt parallel prefill (weight-stream
+            # cost, generous to the baseline) + its host round-trip
+            t += rt + t_step
+            for slot, r in group:
+                emitted += 1                # first token from prefill
+                rem = r["max_new"] - 1
+                slots[slot] = {"rem": rem} if rem > 0 else None
+        if any(s is not None for s in slots):
+            t += rt + k * t_step
+            for _ in range(k):
+                for s in slots:
+                    if s is not None and s["rem"] > 0:
+                        s["rem"] -= 1
+                        emitted += 1
+            for i, s in enumerate(slots):   # retire at buffer end only
+                if s is not None and s["rem"] <= 0:
+                    slots[i] = None
+        elif not group and pending:         # idle until the next arrival
+            t = max(t, pending[0]["arrival"] * round_cost)
+    return emitted, t
+
+
+def simulate_superstep(trace, batch: int, k: int, t_step: float, rt: float):
+    """Round-level simulation of the superstep engine: staging between
+    calls, in-loop arming, teacher-forced prompt consumption riding the
+    decode rounds (one prompt token per round), immediate re-admission.
+    Returns (generated_tokens, virtual_seconds)."""
+    pending = list(trace)
+    slots: List[Optional[dict]] = [None] * batch
+    staged: List[Optional[dict]] = [None] * batch
+    t, emitted = 0.0, 0
+    round_cost = t_step + rt / k
+    while pending or any(slots) or any(s is not None for s in staged):
+        order = sorted(range(batch),
+                       key=lambda i: (slots[i] is not None, i))
+        for i in order:
+            if staged[i] is None and pending and \
+                    pending[0]["arrival"] * round_cost <= t:
+                staged[i] = pending.pop(0)
+        if not any(s is not None for s in slots) and \
+                not any(s is not None for s in staged):
+            t = max(t, pending[0]["arrival"] * round_cost)
+            continue
+        t += rt + k * t_step
+        for _ in range(k):
+            for i in range(batch):
+                if slots[i] is None and staged[i] is not None:
+                    r = staged[i]
+                    staged[i] = None
+                    slots[i] = {"p": r["prompt_len"], "rem": r["max_new"]}
+                s = slots[i]
+                if s is None:
+                    continue
+                if s["p"] > 1:
+                    s["p"] -= 1             # teacher-forced prompt round
+                    continue
+                s["p"] = 0                  # last prompt round emits too
+                s["rem"] -= 1
+                emitted += 1
+                if s["rem"] <= 0:
+                    slots[i] = None
+    return emitted, t
+
+
+def _trace_prompt(i: int, n: int):
+    return list(np.random.default_rng(i).integers(1, 250, size=n))
+
+
+def replay_real_engine(cfg, params, trace, batch: int, k: int,
+                       max_len: int = 160):
+    """Run the actual superstep engine over the arrival trace (arrival
+    clock = engine device rounds) and return its stats snapshot.  Greedy
+    streams are spot-checked bit-identical to ``generate_one``."""
+    engine = ServingEngine(cfg, params, max_batch=batch, max_len=max_len,
+                           decode_block=k)
+    rids = []
+    replay_trace(engine, trace, lambda i, r: rids.append(engine.submit(
+        _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
+        temperature=0.0)))
+    assert engine.stats.completed == len(trace)
+    # mid-flight admission / re-admission must not perturb streams:
+    # spot-check a few against the single-request reference, loudly
+    for j in list(range(0, len(trace), max(1, len(trace) // 3)))[:3]:
+        ref = generate_one(cfg, params, _trace_prompt(
+            j, trace[j]["prompt_len"]), max_new=trace[j]["max_new"],
+            max_len=max_len)
+        if engine.finished[rids[j]].out != ref:
+            raise SystemExit(
+                f"greedy stream mismatch vs generate_one for request {j}")
+    return engine.stats.snapshot()
+
+
+def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
+                out_path: str = "BENCH_serve.json"):
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(n_requests, batch)
+    t_step = decode_weight_bytes_per_step(cfg) / (NOMINAL_HBM_GBPS * 1e9)
+    rt = NOMINAL_ROUNDTRIP_US * 1e-6
+    header(f"mixed arrival-trace serving {arch}: {n_requests} reqs, "
+           f"batch={batch}, K={k}, backend={jax.default_backend()}")
+
+    tok_pp, t_pp = simulate_per_phase(trace, batch, k, t_step, rt)
+    tok_ss, t_ss = simulate_superstep(trace, batch, k, t_step, rt)
+    tps_pp, tps_ss = tok_pp / t_pp, tok_ss / t_ss
+    assert tok_pp == tok_ss == sum(r["max_new"] for r in trace)
+    speedup = tps_ss / tps_pp
+    row(f"serve_per_phase_k{k}", t_pp * 1e6, f"{tps_pp:.0f} tok/s structural")
+    row(f"serve_superstep_k{k}", t_ss * 1e6, f"{tps_ss:.0f} tok/s structural")
+    row(f"serve_speedup_k{k}", 0.0,
+        f"{speedup:.2f}x superstep/per-phase structural")
+
+    # the same structural comparison at the full (non-smoke) config,
+    # where the weight stream dominates the round-trip
+    full = archs.get(arch)
+    t_step_full = (decode_weight_bytes_per_step(full)
+                   / (NOMINAL_HBM_GBPS * 1e9))
+    tok_pp_f, t_pp_f = simulate_per_phase(trace, batch, k, t_step_full, rt)
+    tok_ss_f, t_ss_f = simulate_superstep(trace, batch, k, t_step_full, rt)
+    speedup_full = (tok_ss_f / t_ss_f) / (tok_pp_f / t_pp_f)
+    row(f"serve_speedup_full_k{k}", 0.0,
+        f"{speedup_full:.2f}x at full-config weight bytes")
+
+    snap = replay_real_engine(cfg, params, trace, batch, k)
+    row(f"serve_wallclock_k{k}",
+        snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
+        f"{snap['decode_tokens_per_second']:.1f} decode tok/s wall;"
+        f"waste {snap['wasted_slot_fraction']:.1%};"
+        f"ttft {snap['ttft_rounds_mean']:.1f} rounds")
+
+    payload = {
+        "arch": arch,
+        "batch": batch,
+        "n_requests": n_requests,
+        "decode_block": k,
+        "nominal_hbm_gbps": NOMINAL_HBM_GBPS,
+        "nominal_roundtrip_us": NOMINAL_ROUNDTRIP_US,
+        "trace_generated_tokens": tok_ss,
+        "per_phase_tokens_per_s_structural": tps_pp,
+        "superstep_tokens_per_s_structural": tps_ss,
+        "speedup_structural": speedup,
+        "speedup_structural_full_config": speedup_full,
+        "real_engine": {key: snap[key] for key in (
+            "decode_tokens_per_second", "tokens_per_second",
+            "decode_tokens", "prefill_tokens", "decode_calls",
+            "slot_steps", "wasted_slot_steps", "wasted_slot_fraction",
+            "host_roundtrips_per_decode_token", "ttft_rounds_mean",
+            "ttft_s_mean", "ttft_s_p95", "itl_s_mean",
+            "itl_rounds_mean", "queue_peak")},
+    }
+    dump_json(out_path, payload)
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mingru-lm")
     ap.add_argument("--batches", type=int, nargs="*", default=[1, 2, 4, 8])
-    ap.add_argument("--n-requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
+    # scenario-dependent defaults (filled in after parsing, so explicit
+    # flags are honoured by every scenario including --mixed/--tiny)
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.8)
-    ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--out", default=None)
     ap.add_argument("--decode", action="store_true",
                     help="run the decode-block bench instead of the "
                          "v1-vs-v2 engine sweep (writes BENCH_decode.json)")
-    ap.add_argument("--decode-blocks", type=int, nargs="*",
-                    default=[1, 4, 8],
+    ap.add_argument("--mixed", action="store_true",
+                    help="arrival-trace scenario: per-phase baseline vs "
+                         "superstep engine (writes BENCH_serve.json)")
+    ap.add_argument("--decode-blocks", type=int, nargs="*", default=None,
                     help="decode block sizes K; 1 is the per-token "
-                         "baseline row")
+                         "baseline row (--mixed uses only the largest)")
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke: tiny decode workload -> "
-                         "BENCH_decode.tiny.json (never clobbers the "
-                         "tracked trajectory)")
+                    help="CI smoke: tiny workload -> BENCH_*.tiny.json "
+                         "(never clobbers the tracked trajectory)")
     args = ap.parse_args(argv)
-    if args.decode:
+    if args.mixed:
+        n_req = args.n_requests or (32 if args.tiny else 96)
+        k = max(args.decode_blocks) if args.decode_blocks else 8
         if args.tiny:
-            args.n_requests, args.max_new = 4, 8
-            args.decode_blocks = [1, 4]
+            args.batches = [min(4, max(args.batches))]
+        out = args.out or ("BENCH_serve.tiny.json" if args.tiny
+                           else "BENCH_serve.json")
+        bench_mixed(args.arch, max(args.batches), n_req, k, out_path=out)
+        return
+    if args.decode:
+        n_req = args.n_requests or (4 if args.tiny else 16)
+        max_new = args.max_new or (8 if args.tiny else 24)
+        blocks = args.decode_blocks or ([1, 4] if args.tiny else [1, 4, 8])
         out = args.out or ("BENCH_decode.tiny.json" if args.tiny
                            else "BENCH_decode.json")
-        bench_decode(args.arch, max(args.batches), args.n_requests,
-                     args.max_new, args.decode_blocks, out_path=out)
+        bench_decode(args.arch, max(args.batches), n_req, max_new, blocks,
+                     out_path=out)
         return
-    bench(args.arch, args.batches, args.n_requests, args.max_new,
-          args.temperature, args.prefill_chunk,
+    bench(args.arch, args.batches, args.n_requests or 16,
+          args.max_new or 24, args.temperature,
           out_path=args.out or "BENCH_engine.json")
 
 

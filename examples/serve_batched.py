@@ -1,66 +1,115 @@
-"""Continuous-batching serving demo: multiple requests of different
-lengths are right-padded into ONE batched prefill, sampled on-device, and
-share one decode batch; RNN-state caches make each decode step O(1).  The
-long prompt below exercises chunked prefill: it is consumed in fixed-size
-chunks interleaved with the other requests' decode rounds.  With
-``--decode-block K`` the engine decodes K tokens per host round-trip
-(``lm.decode_many``'s on-device step/sample/EOS-mask loop), so the stats
-line reports well under one host round-trip per generated token.
+"""Continuous-batching serving demo: the engine superstep.
+
+Multiple requests of different lengths share one fixed-capacity device
+batch.  Everything -- prompt consumption (teacher-forced prefill),
+decode, sampling, EOS retirement and re-admission from per-slot staging
+buffers -- happens inside ONE jitted device loop (``lm.superstep``) of
+``--decode-block K`` rounds per host round-trip.  A long prompt simply
+occupies one row while every other row keeps decoding: there is no
+prefill phase and no barrier, and a slot that finishes mid-superstep is
+re-armed from staging on the next device round (watch
+``wasted_slot_steps`` stay near zero while the queue is non-empty).
 
     PYTHONPATH=src python examples/serve_batched.py --decode-block 4
+
+``--trace N`` replays a synthetic N-request arrival trace instead of the
+fixed prompt list: requests are submitted mid-flight (by device-round
+arrival times) and per-request TTFT / inter-token latency is reported --
+the continuous-admission regime the superstep engine is built for.
+
+    PYTHONPATH=src python examples/serve_batched.py --trace 12
 """
 
 import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import archs
 from repro.data.lm_corpus import decode_bytes
 from repro.models import lm
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServingEngine, replay_trace
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--decode-block", type=int, default=4,
-                    help="tokens decoded per host round-trip (K)")
-    args = ap.parse_args(argv)
-
-    cfg = archs.smoke("mingru-lm")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
-                           prefill_chunk=16,
-                           decode_block=args.decode_block)
-
+def run_fixed(engine):
     prompts = [b"To be, or not to be", b"Now is the winter",
                b"Friends, Romans, countrymen", b"All the world's a stage",
                b"If music be the food of love", b"Once more unto the breach",
                b"O for a Muse of fire, that would ascend the brightest "
-               b"heaven of invention"]        # long: chunked prefill
+               b"heaven of invention"]        # long prompt: prefills in-loop
     for i, p in enumerate(prompts):           # 7 requests, 4 slots: queueing
-        # mix of greedy and sampled requests in the same decode batch
+        # mix of greedy and sampled requests in the same superstep batch
         engine.submit(list(p), max_new=16,
                       temperature=0.0 if i % 2 == 0 else 0.8,
                       top_k=0 if i % 2 == 0 else 40, top_p=0.95)
-
     t0 = time.time()
     outs = engine.run_to_completion()
     dt = time.time() - t0
     for rid in sorted(outs):
         print(f"req {rid}: {decode_bytes(outs[rid])!r}")
+    return outs, dt
+
+
+def run_trace(engine, n_requests, seed=0):
+    """Replay a synthetic arrival trace: request i becomes visible once
+    the engine has advanced past its arrival round, so admissions happen
+    mid-flight (staged between supersteps, armed in-loop)."""
+    rng = np.random.default_rng(seed)
+    trace = [dict(arrival=int(rng.integers(0, 6 * n_requests)),
+                  prompt=list(rng.integers(1, 250,
+                                           size=int(rng.integers(3, 17)))),
+                  max_new=int(rng.integers(8, 25)))
+             for _ in range(n_requests)]
+    trace.sort(key=lambda r: r["arrival"])
+    t0 = time.time()
+    replay_trace(engine, trace,
+                 lambda i, r: engine.submit(r["prompt"],
+                                            max_new=r["max_new"],
+                                            temperature=0.8, top_k=40,
+                                            top_p=0.95))
+    dt = time.time() - t0
+    for rid, req in sorted(engine.finished.items()):
+        print(f"req {rid}: arrived@{req.submit_round} "
+              f"ttft={req.first_round - req.submit_round + 1} rounds, "
+              f"{len(req.out)} tokens")
+    return {r: q.out for r, q in engine.finished.items()}, dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode-block", type=int, default=4,
+                    help="device rounds per host round-trip (K)")
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="replay a synthetic N-request arrival trace "
+                         "instead of the fixed prompt list")
+    args = ap.parse_args(argv)
+
+    cfg = archs.smoke("mingru-lm")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
+                           decode_block=args.decode_block)
+
+    if args.trace:
+        outs, dt = run_trace(engine, args.trace)
+    else:
+        outs, dt = run_fixed(engine)
     n = sum(len(o) for o in outs.values())
     print(f"{len(outs)} requests, {n} tokens, {n / dt:.1f} tok/s")
     snap = engine.stats.snapshot()
-    print(f"prefill calls: {snap['prefill_calls']}, "
-          f"prefill tokens: {snap['prefill_tokens']} "
-          f"(padding x{snap['padding_overhead']:.2f}), "
-          f"decode steps: {snap['decode_steps']} in "
+    print(f"prefill tokens (in-loop): {snap['prefill_tokens']}, "
+          f"decode rounds: {snap['decode_steps']} in "
           f"{snap['decode_calls']} host round-trips "
           f"(K={args.decode_block}, "
           f"{snap['host_roundtrips_per_decode_token']:.2f} "
           f"round-trips/token), "
+          f"wasted slot steps: {snap['wasted_slot_steps']} "
+          f"({snap['wasted_slot_fraction']:.1%}), "
           f"queue peak: {snap['queue_peak']}")
+    print(f"ttft mean: {snap['ttft_rounds_mean']:.1f} rounds "
+          f"({snap['ttft_s_mean'] * 1e3:.1f}ms), "
+          f"inter-token: {snap['itl_s_mean'] * 1e3:.1f}ms "
+          f"({snap['itl_rounds_mean']:.2f} rounds/token)")
 
 
 if __name__ == "__main__":

@@ -160,6 +160,11 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
     real kernel on TPU, interpret parity elsewhere).  Pass e.g.
     ``"sequential"`` to force the pure-jnp cell step (the parity oracle).
     Norm / conv window / down-projection / MLP stay in XLA either way.
+
+    This is the serving engine's only model entry point: ``lm.superstep``
+    drives both prompt consumption (teacher-forced) and decode (sampled)
+    through this step for every slot in the batch, so prefill and decode
+    share one code path and one kernel.
     """
     if scan_strategy is None:
         scan_strategy = cfg.scan_strategy

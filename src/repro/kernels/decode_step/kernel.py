@@ -23,8 +23,9 @@ keeps it resident across feature tiles, and the weight tiles stream
 through VMEM once per step.  The layer stack is dispatched as ONE
 lax.scan over stacked weights by ``models/lm.decode_step`` (the weights
 stay device-resident across the whole multi-token decode loop -- the
-weight-stationary serving regime), and ``lm.decode_many`` wraps that
-step in a second on-device scan so K tokens cost one host round-trip.
+weight-stationary serving regime), and ``lm.superstep`` wraps that step
+in a second on-device scan so K rounds -- prefilling and decoding slots
+alike -- cost one host round-trip.
 
 All arithmetic is fp32 in-kernel regardless of input dtype (matching
 the fused parallel kernels, so prefill -> decode handoff is consistent);

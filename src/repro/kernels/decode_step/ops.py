@@ -10,8 +10,10 @@ through the fused *parallel* kernels instead.
 Dispatch: ``core.min_gru.step`` / ``core.min_lstm.step`` route here when
 their ``scan_strategy`` resolves to ``"fused"`` (the config default
 ``"auto"``), which is how ``blocks.step`` -> ``lm.decode_step`` ->
-``lm.decode_many`` put the serving decode hot path on Pallas -- real
-kernels on TPU, interpret-mode parity elsewhere.
+``lm.superstep`` put the whole serving hot path on Pallas: the engine's
+unified device loop drives prefilling (teacher-forced prompt tokens) and
+decoding rows through this same kernel in the same round -- real kernels
+on TPU, interpret-mode parity elsewhere.
 """
 
 from __future__ import annotations

@@ -3,12 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mingru-lm --smoke \
         --ckpt-dir /tmp/repro_ckpt --prompts "To be" "Friends,"
 
-Loads the latest checkpoint (or random init), runs the continuous-
-batching engine (batched prefill, multi-token on-device decode, optional
-chunked prefill) over the given prompts, prints completions + the engine
-stats snapshot (prefill/decode token counters, queue depth, tokens/s,
-host round-trips per decoded token).  ``--decode-block K`` decodes K
-tokens per host round-trip (lm.decode_many's on-device loop).
+Loads the latest checkpoint (or random init) and runs the continuous-
+batching superstep engine over the given prompts: admission, prefill,
+decode and sampling all happen inside one jitted device loop per
+``--decode-block K`` rounds (``lm.superstep``), with finished slots
+re-armed from their staging buffers in-loop.  Prints completions + the
+engine stats snapshot (prefill/decode token counters, wasted slot steps,
+per-request TTFT and inter-token latency, tokens/s, host round-trips per
+decoded token).
 """
 
 from __future__ import annotations
@@ -40,12 +42,10 @@ def main(argv=None):
                     help="keep only the k highest logits (0 = off)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = off)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
-                    help="chunked prefill size (recurrent-cache archs)")
     ap.add_argument("--decode-block", type=int, default=1,
-                    help="tokens decoded per host round-trip (K): the "
-                         "engine runs K step/sample/EOS-mask iterations "
-                         "on device per engine.step()")
+                    help="device rounds per host round-trip (K): one "
+                         "superstep runs K token-select/step/sample/"
+                         "re-admit rounds on device per engine.step()")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -61,7 +61,6 @@ def main(argv=None):
 
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_len=args.max_len, seed=args.seed,
-                           prefill_chunk=args.prefill_chunk,
                            decode_block=args.decode_block)
     rids = {}
     for p in args.prompts:
@@ -79,11 +78,19 @@ def main(argv=None):
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()
-    print(f"decode block K={args.decode_block}: "
+    print(f"superstep K={args.decode_block}: "
           f"{snap['decode_calls']} host round-trips for "
           f"{snap['decode_tokens']} decoded tokens "
           f"({snap['host_roundtrips_per_decode_token']:.3f} "
-          f"round-trips/token)")
+          f"round-trips/token); "
+          f"{snap['prefill_tokens']} prompt tokens prefilled in-loop; "
+          f"wasted slot steps: {snap['wasted_slot_steps']} "
+          f"({snap['wasted_slot_fraction']:.1%} of slot steps)")
+    print(f"latency: ttft mean {snap['ttft_s_mean'] * 1e3:.1f}ms "
+          f"(p95 {snap['ttft_s_p95'] * 1e3:.1f}ms, "
+          f"{snap['ttft_rounds_mean']:.1f} device rounds), "
+          f"inter-token {snap['itl_s_mean'] * 1e3:.1f}ms "
+          f"({snap['itl_rounds_mean']:.2f} rounds/token)")
     print("engine stats: " + ", ".join(
         f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in sorted(snap.items())))

@@ -8,8 +8,12 @@ mixer for the paper's minRNN (DESIGN.md §5).
 
 Layers run under ``lax.scan`` over stacked parameters (cfg.scan_layers) so
 HLO size -- and dry-run compile time -- is O(1) in depth.  Every block kind
-provides a parallel form (train / prefill, returning per-layer caches) and
-a step form (decode, carrying caches).
+provides a parallel form (train / batch-eval ``prefill``, returning
+per-layer caches) and a step form (decode, carrying caches).  Serving
+drives the step form exclusively: ``superstep`` scans K rounds of
+token-select -> ``decode_step`` -> sample-or-teacher-force -> retire ->
+re-admission over device-resident per-slot state (``init_slot_state``),
+so prefilling and decoding requests share one code path and one kernel.
 """
 
 from __future__ import annotations
@@ -426,8 +430,10 @@ def decode_step(params, cfg, token: Array, cache: Dict[str, Any]
     stacked weights (``_iterate``), so the per-step HLO is O(1) in depth;
     the minRNN step body additionally runs its cell in the fused Pallas
     decode kernel under the default ``scan_strategy="auto"`` (see
-    ``_minrnn_decode``).  ``decode_many`` wraps this step in a second
-    on-device scan to decode K tokens per host call.
+    ``_minrnn_decode``).  This is the single model entry point of the
+    serving engine: ``superstep`` wraps it in a second on-device scan
+    that drives prefill (teacher-forced prompt tokens) and decode
+    (sampled tokens) through the same step, K rounds per host call.
     """
     pos = cache["pos"]
     x = params["embed"]["table"].astype(cfg.cdtype)[token]
@@ -494,65 +500,181 @@ def _minrnn_decode(params, cfg, x, cache):
     return _iterate(cfg, body, x, (params["layers"]["blocks"], scanned))
 
 
-def decode_many(params, cfg, tok: Array, cache: Dict[str, Any], n: int,
-                controls: Dict[str, Array]):
-    """Decode ``n`` tokens per host round-trip, entirely on device.
+# ===========================================================================
+# Superstep: unified prefill + decode + sampling + re-admission on device
+# ===========================================================================
 
-    One ``lax.scan`` carries (token, cache, PRNG keys, liveness) through
-    ``n`` iterations of step -> sample -> EOS/length-mask; the host sees
-    only the final ``(B, n)`` token buffer instead of one transfer per
-    token.  ``n`` must be static (the engine jits one program per block
-    size).
+# cache leaves that are *read back* by the recurrence and must be zeroed
+# when a slot is re-armed for a new request.  KV-style leaves (k / v /
+# ckv / krope) are deliberately NOT reset: decode masks attention by the
+# per-slot ``pos`` counter and overwrites position p before attending to
+# it, so stale rows beyond ``pos`` are never visible (the same invariant
+# batched padded prefill already relies on).
+_RECURRENT_CACHE_KEYS = ("h", "conv", "ssm")
 
-    tok: (B,) int32 -- each slot's last sampled token.
-    controls: device-side per-slot control state,
-      ``temperature`` (B,) f32 / ``top_k`` (B,) i32 / ``top_p`` (B,) f32
-          -- sampling controls (see serving.sampling);
-      ``keys`` (B, 2) uint32 -- per-slot PRNG keys;
-      ``eos`` (B,) i32 -- stop token, -1 = none;
-      ``alive`` (B,) bool -- slots that should emit tokens;
-      ``remaining`` (B,) i32 -- tokens each slot may still emit (length
-          cap), so max_new enforcement never needs a host round-trip.
 
-    Returns ``(tokens, new_cache, state)``: ``tokens`` is (B, n) int32
-    with -1 marking positions after a slot went dead; ``state`` carries
-    the advanced ``keys`` / ``alive`` / ``remaining`` and ``tok`` (each
-    slot's final sampled token, the next call's input).
+def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0
+                    ) -> Dict[str, Any]:
+    """Device-resident per-slot serving state for ``superstep``.
 
-    Dead and never-admitted slots still *compute* (their rows keep
-    stepping so the batch stays dense -- every cache row is independent,
-    and admission prefill overwrites a freed row wholesale before it is
-    read again) but emit -1 and keep their last token.  Keys advance for
-    every slot every iteration, exactly like the per-step
-    ``sampling.sample_tokens`` host loop this replaces, so K=1 streams
-    are bit-identical to the old one-token ``engine.step()``.
+    One fixed-shape pytree holds everything the device loop needs to run
+    admission, prefill, decode and sampling without host intervention:
+
+      * ``cache``       -- the decode cache (``init_cache``);
+      * active request: ``tok`` (last sampled token), ``prompt`` (B,
+        max_len) staged prompt tokens, ``prompt_len`` / ``prompt_pos``,
+        ``rid`` (host request tag riding along so the (B, n) output
+        buffer can be demuxed even when one slot serves two requests in
+        a single superstep), ``remaining`` / ``eos`` and the per-slot
+        sampling controls ``temperature`` / ``top_k`` / ``top_p``;
+      * ``alive``       -- slot has a request in flight (prefilling or
+        decoding);
+      * ``keys``        -- per-*slot* PRNG keys (slot-persistent: they
+        advance every device round, independent of which request
+        occupies the row);
+      * staging buffer  -- ``s_*`` mirrors of the request fields plus
+        ``s_valid``: the host parks the next queued request here and the
+        scan body arms it into the row the moment the row goes dead.
     """
     # lazy import: models/ stays importable without the serving package
     # in minimal deployments; sampling itself only depends on jax
     from repro.serving import sampling
 
-    eos = controls["eos"]
+    i32 = jnp.int32
+
+    def iv(fill=0):
+        return jnp.full((batch,), fill, i32)
+
+    state: Dict[str, Any] = {
+        "cache": init_cache(cfg, batch, max_len),
+        "tok": iv(), "alive": jnp.zeros((batch,), bool),
+        "keys": sampling.make_keys(seed, batch),
+        "prompt": jnp.zeros((batch, max_len), i32),
+        "prompt_len": iv(), "prompt_pos": iv(),
+        "rid": iv(-1), "remaining": iv(), "eos": iv(-1),
+        "temperature": jnp.zeros((batch,), jnp.float32),
+        "top_k": iv(), "top_p": jnp.ones((batch,), jnp.float32),
+        "s_valid": jnp.zeros((batch,), bool),
+        "s_prompt": jnp.zeros((batch, max_len), i32),
+        "s_prompt_len": iv(), "s_rid": iv(-1), "s_remaining": iv(),
+        "s_eos": iv(-1),
+        "s_temperature": jnp.zeros((batch,), jnp.float32),
+        "s_top_k": iv(), "s_top_p": jnp.ones((batch,), jnp.float32),
+    }
+    return state
+
+
+def _reset_slot_rows(cache: Dict[str, Any], mask: Array) -> Dict[str, Any]:
+    """Re-arm rows ``mask``: zero the recurrent state and position counter
+    so the row starts a fresh request (see _RECURRENT_CACHE_KEYS for why
+    KV leaves are left in place)."""
+    out = dict(cache)
+    out["pos"] = jnp.where(mask, 0, cache["pos"])
+    for name in _RECURRENT_CACHE_KEYS:
+        if name in cache:
+            leaf = cache[name]
+            m = mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+            out[name] = jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+    return out
+
+
+# request fields swapped wholesale from the staging buffer when a row arms
+_ARM_FIELDS = ("prompt_len", "rid", "remaining", "eos", "temperature",
+               "top_k", "top_p")
+
+
+def superstep(params, cfg, state: Dict[str, Any], n: int):
+    """Run ``n`` rounds of the unified serving loop entirely on device.
+
+    ONE ``lax.scan`` whose body is, for every slot simultaneously:
+
+      1. **re-admission** -- dead rows with a staged request arm it:
+         recurrent cache rows zeroed, ``pos``/``prompt_pos`` reset,
+         request fields swapped in from the ``s_*`` staging buffer;
+      2. **token select** -- prefilling rows (``prompt_pos <
+         prompt_len``) consume their next prompt token, decoding rows
+         feed back their last sampled token;
+      3. **fused block step** -- one ``decode_step`` for the whole
+         batch: prefilling and decoding rows ride the same fused Pallas
+         cell kernel in the same round;
+      4. **sample-or-teacher-force** -- every row samples (keys advance
+         every round for every slot), but only rows whose logits are
+         real output logits emit: decoding rows, and prefilling rows
+         that just consumed their *last* prompt token (their sample is
+         the request's first output token).  Teacher-forced rows
+         discard the sample and emit -1;
+      5. **EOS / retire** -- emitting rows that hit their stop token or
+         length cap go dead; the next round's step 1 re-arms them from
+         staging with zero idle rounds.
+
+    Returns ``(tokens, rids, state, counters)``: ``tokens`` (B, n) int32
+    with -1 at non-emitting positions, ``rids`` (B, n) int32 tagging
+    each emitted token with its request id (one row may emit for two
+    requests within a single call), the advanced slot state, and
+    ``counters`` with ``prefill_steps`` (prompt tokens consumed) and
+    ``wasted_slot_steps`` (rows stepped while dead with nothing staged
+    -- the idle waste this loop exists to eliminate; rows keep stepping
+    regardless so the batch stays dense and shapes stay static).
+
+    ``n`` must be static (the engine jits one program per block size).
+    """
+    from repro.serving import sampling
+
+    batch = state["tok"].shape[0]
+    p_cap = state["prompt"].shape[1]
 
     def body(carry, _):
-        tok, cache, keys, alive, remaining = carry
-        logits, cache = decode_step(params, cfg, tok, cache)
-        toks, keys = sampling.sample_tokens(
-            logits, keys, controls["temperature"], controls["top_k"],
-            controls["top_p"])
-        emit = jnp.where(alive, toks, jnp.int32(-1))
-        remaining = remaining - alive.astype(jnp.int32)
-        hit_eos = (eos >= 0) & (toks == eos)
-        alive = alive & jnp.logical_not(hit_eos) & (remaining > 0)
-        tok = jnp.where(emit >= 0, toks, tok)
-        return (tok, cache, keys, alive, remaining), emit
+        st, prefill_ct, waste_ct = carry
+        st = dict(st)
 
-    carry0 = (tok.astype(jnp.int32), cache, controls["keys"],
-              controls["alive"], controls["remaining"].astype(jnp.int32))
-    (tok, cache, keys, alive, remaining), emitted = lax.scan(
-        body, carry0, None, length=n)
-    state = {"tok": tok, "keys": keys, "alive": alive,
-             "remaining": remaining}
-    return jnp.swapaxes(emitted, 0, 1), cache, state
+        # 1. re-admission from the staging buffer
+        arm = jnp.logical_not(st["alive"]) & st["s_valid"]
+        for f in _ARM_FIELDS:
+            st[f] = jnp.where(arm, st["s_" + f], st[f])
+        st["prompt"] = jnp.where(arm[:, None], st["s_prompt"], st["prompt"])
+        st["prompt_pos"] = jnp.where(arm, 0, st["prompt_pos"])
+        st["alive"] = st["alive"] | arm
+        st["s_valid"] = st["s_valid"] & jnp.logical_not(arm)
+        st["cache"] = _reset_slot_rows(st["cache"], arm)
+
+        alive = st["alive"]
+        waste_ct = waste_ct + jnp.sum(
+            jnp.logical_not(alive).astype(jnp.int32))
+        prefilling = alive & (st["prompt_pos"] < st["prompt_len"])
+        prefill_ct = prefill_ct + jnp.sum(prefilling.astype(jnp.int32))
+
+        # 2. per-slot token select
+        nxt = st["prompt"][jnp.arange(batch),
+                           jnp.clip(st["prompt_pos"], 0, p_cap - 1)]
+        in_tok = jnp.where(prefilling, nxt, st["tok"])
+
+        # 3. fused block step, all rows in one batch
+        logits, st["cache"] = decode_step(params, cfg, in_tok, st["cache"])
+
+        # 4. sample-or-teacher-force
+        toks, st["keys"] = sampling.sample_tokens(
+            logits, st["keys"], st["temperature"], st["top_k"], st["top_p"])
+        pos_next = st["prompt_pos"] + prefilling.astype(jnp.int32)
+        emitting = alive & (pos_next >= st["prompt_len"])
+        emit = jnp.where(emitting, toks, jnp.int32(-1))
+        emit_rid = jnp.where(emitting, st["rid"], jnp.int32(-1))
+
+        # 5. EOS / length-cap retire
+        st["remaining"] = st["remaining"] - emitting.astype(jnp.int32)
+        hit_eos = emitting & (st["eos"] >= 0) & (toks == st["eos"])
+        died = hit_eos | (emitting & (st["remaining"] <= 0))
+        st["alive"] = alive & jnp.logical_not(died)
+        st["tok"] = jnp.where(emitting, toks, st["tok"])
+        st["prompt_pos"] = pos_next
+        return (st, prefill_ct, waste_ct), (emit, emit_rid)
+
+    zero = jnp.zeros((), jnp.int32)
+    (state, prefill_ct, waste_ct), (emitted, rids) = lax.scan(
+        body, (state, zero, zero), None, length=n)
+    counters = {"prefill_steps": prefill_ct,
+                "wasted_slot_steps": waste_ct}
+    return (jnp.swapaxes(emitted, 0, 1), jnp.swapaxes(rids, 0, 1),
+            state, counters)
 
 
 def _attn_mixer_step(p, cfg, y, cache_l, pos):

@@ -1,47 +1,49 @@
-"""Serving engine v3: batched prefill + multi-token on-device decode.
+"""Serving engine v4: continuous batching as ONE on-device superstep.
 
-The paper's serving story (§4.1, App. D.2): prefill processes the whole
-prompt with the parallel scan (one forward), then decode rolls the O(1)
-sequential cell.  The engine keeps a fixed-capacity batch of slots
-(continuous batching, vLLM-style but with RNN/SSM states as first-class
-cache kinds).  Hot paths:
+The paper's serving advantage over Transformers is the O(1) recurrent
+state (Were RNNs All We Needed?, section 4.1): a minGRU/minLSTM slot is a
+fixed-size hidden vector, so swapping a finished request for a queued one
+is a row write, not a KV-cache reshuffle.  This engine exploits that all
+the way down: admission, prefill, decode, sampling and retirement ALL
+happen inside one jitted device loop (``lm.superstep``), and the host's
+only jobs are queueing, staging and draining.
 
-  * **Batched prefill** -- each admission round gathers every queued
-    request that fits a free slot, right-pads the prompts into ONE
-    ``(k, T_pad)`` ``lm.prefill`` call with per-row length masking
-    (``lengths=``), and splices all k terminal states into their slots in
-    one jitted tree scatter.  Padded lengths are bucketed to powers of
-    two so the number of compiled prefill programs stays O(log max_len).
+Per engine ``step()``:
 
-  * **Multi-token on-device decode** -- ``step(n_tokens=K)`` runs
-    ``lm.decode_many``: ONE jitted ``lax.scan`` over K iterations of
-    step -> sample -> EOS/length-mask, with sampling controls, stop
-    tokens, liveness and length caps all living in device-side control
-    state.  The host sees a single ``(B, K)`` token buffer per call
-    (one round-trip per K tokens instead of per token) and only splices
-    finished slots / drains output buffers between calls.  The minRNN
-    cell step itself runs in the fused Pallas decode kernel
-    (``kernels/decode_step``) under the default ``scan_strategy="auto"``.
+  * the host stages queued requests into per-slot **staging buffers**
+    (device-resident ``s_*`` arrays in the slot state -- prompt tokens,
+    length cap, stop token, sampling controls, request id);
+  * ONE ``lm.superstep(params, cfg, state, K)`` call lax.scans K rounds
+    of *token select -> fused block step -> sample-or-teacher-force ->
+    EOS/retire -> re-admission from staging*.  Prefilling rows consume
+    their next prompt token (teacher forcing) and decoding rows feed
+    back their last sample, through the SAME ``lm.decode_step`` -- and
+    therefore the same fused Pallas cell kernel (``kernels/decode_step``
+    under the default ``scan_strategy="auto"``) -- in the same round.  A
+    row that hits EOS or its length cap is re-armed from its staging
+    buffer on the *next device round*, with zero idle rounds and no
+    host involvement;
+  * the host drains the returned ``(B, K)`` token + request-id buffers
+    (the rid plane demuxes rows that served two requests in one call),
+    retires finished requests, and restocks staging.
 
-  * **Chunked prefill** -- prompts longer than ``prefill_chunk`` are
-    prefilled in fixed-size chunks interleaved with decode (one chunk
-    per ``step()``, i.e. per K decoded tokens), bounding how long
-    running requests stall behind a long prompt.  Supported for
-    recurrent-cache archs (``lm.supports_chunked_prefill``); KV-cache
-    archs prefill whole-prompt.
-
-Scheduling and accounting (queue policy, token counters, tokens/s, host
-round-trips per decoded token) live in ``serving.scheduler``;
-``engine.stats.snapshot()`` is the monitoring surface.  Greedy engine
-output is argmax-identical to the single-request ``generate_one``
-reference for every cache kind and any decode block size, under any
-admission order and slot reuse -- the parity tests in
-tests/test_serving.py and tests/test_decode.py drive this.
+There is no separate prefill phase, no chunked-prefill interleave and no
+phase barrier: a long prompt occupies one row while every other row keeps
+decoding.  Dead rows with nothing staged still step (the batch stays
+dense, shapes stay static); ``stats.wasted_slot_steps`` counts exactly
+those rows, and ``stats`` also tracks per-request time-to-first-token and
+inter-token latency.  Greedy engine output is bit-identical to the
+single-request ``generate_one`` reference -- which drives the prompt
+through the same ``decode_step`` path -- for every cache kind and block
+size, under any admission order, mid-superstep arrival and slot reuse
+(tests/test_serving.py, tests/test_decode.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -49,9 +51,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
-from repro.serving import sampling
 from repro.serving.scheduler import (EngineStats, FifoScheduler,
-                                     SchedulerConfig, bucket_length)
+                                     SchedulerConfig)
 
 
 @dataclasses.dataclass
@@ -65,82 +66,52 @@ class Request:
     eos: Optional[int] = None
     out: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
-    prefilled: int = 0            # prompt tokens already consumed
     done: bool = False
+    # latency bookkeeping (wall clock + device-round clock)
+    submitted_s: float = 0.0
+    submit_round: int = 0
+    first_token_s: float = 0.0
+    first_round: int = 0
+    admit_seq: int = -1           # staging order (FIFO fairness witness)
 
 
-def _splice_rows(cache_batch, cache_rows, slots):
-    """Write k prefilled rows into slots ``slots`` of the engine cache.
-
-    Every cache leaf is (L, B, ...) with batch on axis 1, except the shared
-    position counter ``pos`` which is (B,).  One jitted tree-map scatter
-    replaces v1's per-request splice loop.
-    """
-    def upd(big, small):
-        if big.ndim == 1:                       # pos: (B,) <- (k,)
-            return big.at[slots].set(small)
-        return big.at[:, slots].set(small)      # (L, B, ...) <- (L, k, ...)
-
-    return jax.tree.map(upd, cache_batch, cache_rows)
-
-
-def _take_rows(cache_rows, keep):
-    """Row-subset of a batched cache pytree (same layout as above)."""
-    def sel(leaf):
-        if leaf.ndim == 1:
-            return leaf[keep]
-        return leaf[:, keep]
-
-    return jax.tree.map(sel, cache_rows)
+# staged request fields mirrored host-side as numpy (uploaded on change;
+# the device only *reads* them at arm time and only flips s_valid)
+_STAGE_FIELDS = ("s_valid", "s_prompt", "s_prompt_len", "s_rid",
+                 "s_remaining", "s_eos", "s_temperature", "s_top_k",
+                 "s_top_p")
 
 
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 2048, seed: int = 0,
-                 prefill_chunk: Optional[int] = None,
-                 max_prefill_tokens: Optional[int] = None,
                  decode_block: int = 1):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        # K = decoded tokens per host round-trip (lm.decode_many scan
-        # length); admission / chunked prefill interleave at this grain
+        # K = device rounds per host round-trip (lm.superstep scan length)
         self.decode_block = max(1, int(decode_block))
-        self.cache = lm.init_cache(cfg, max_batch, max_len)
-        self.free = list(range(max_batch))
-        self.active: Dict[int, Request] = {}
-        self.finished: Dict[int, Request] = {}
-        self._next_rid = 0
-        self._last_token = np.zeros((max_batch,), np.int32)
+        self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed)
 
-        self.scheduler = FifoScheduler(SchedulerConfig(
-            max_batch=max_batch, prefill_chunk=prefill_chunk,
-            max_prefill_tokens=max_prefill_tokens))
+        self.scheduler = FifoScheduler(SchedulerConfig(max_batch=max_batch))
         self.stats = EngineStats()
-        self._chunking = bool(prefill_chunk) and lm.supports_chunked_prefill(cfg)
-        # in-flight chunked-prefill cohort: requests that prefill together,
-        # one chunk per step, until each hands its slot to decode
-        self._cohort: List[Request] = []
-        self._cohort_cache: Optional[Dict[str, Any]] = None
+        self._next_rid = 0
+        # host mirrors of slot occupancy: the request currently armed in
+        # each row, and the request parked in each row's staging buffer
+        self.current: List[Optional[Request]] = [None] * max_batch
+        self.staged: List[Optional[Request]] = [None] * max_batch
+        self.finished: Dict[int, Request] = {}
 
-        # per-slot sampling controls: host mirrors + cached device copies
-        # (controls change only at admission; don't re-upload per step)
-        self._temp = np.zeros((max_batch,), np.float32)
-        self._topk = np.zeros((max_batch,), np.int32)
-        self._topp = np.ones((max_batch,), np.float32)
-        self._controls_dev = None
-        self._keys = sampling.make_keys(seed, max_batch)
+        # numpy mirrors of the device staging arrays (authoritative on
+        # the host side: the device only consumes them, flipping s_valid;
+        # the mirror is re-synced from the device after every superstep)
+        self._smirror = {k: np.asarray(self.state[k]) for k in _STAGE_FIELDS}
+        self._smirror = {k: v.copy() for k, v in self._smirror.items()}
+        self._dirty_slots: List[int] = []
 
-        # one compiled lm.decode_many program per distinct block size
-        self._decode_fns: Dict[int, Any] = {}
-        self._prefill = jax.jit(
-            lambda p, toks, lengths: lm.prefill(p, cfg, toks, max_len,
-                                                lengths=lengths))
-        self._prefill_resume = jax.jit(
-            lambda p, toks, lengths, cache: lm.prefill(
-                p, cfg, toks, max_len, lengths=lengths, cache=cache))
-        self._splice = jax.jit(_splice_rows)
+        # one compiled superstep program per distinct block size
+        self._superstep_fns: Dict[int, Any] = {}
 
     # ------------------------------------------------------------------
     # Submission
@@ -156,236 +127,238 @@ class ServingEngine:
                 f"engine max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
-        self.scheduler.submit(Request(rid, list(prompt), max_new,
-                                      temperature, top_k, top_p, eos))
+        req = Request(rid, list(prompt), max_new, temperature, top_k,
+                      top_p, eos)
+        req.submitted_s = time.perf_counter()
+        req.submit_round = self.stats.decode_steps
+        self.scheduler.submit(req)
         self.stats.submitted += 1
         self.stats.observe_queue(len(self.scheduler))
         return rid
 
     # ------------------------------------------------------------------
-    # Prefill path
+    # Staging (host side of admission; the device does the arming)
     # ------------------------------------------------------------------
-    def _pad_batch(self, reqs: List[Request], chunk: Optional[int]):
-        """Right-pad the next (chunk of the) prompt of each request into a
-        (k, T_pad) token matrix + true lengths."""
-        pieces = []
-        for r in reqs:
-            rest = r.prompt[r.prefilled:]
-            pieces.append(rest[:chunk] if chunk else rest)
-        # clamp the pow2 bucket to max_len: KV caches are sized (max_len,)
-        # and _seed_kv cannot pad a prompt matrix wider than that
-        t_pad = min(bucket_length(max(len(p) for p in pieces)),
-                    self.max_len)
-        toks = np.zeros((len(reqs), t_pad), np.int32)
-        lengths = np.zeros((len(reqs),), np.int32)
-        for i, p in enumerate(pieces):
-            toks[i, :len(p)] = p
-            lengths[i] = len(p)
-        self.stats.prefill_tokens += int(lengths.sum())
-        self.stats.padded_prefill_tokens += len(reqs) * t_pad
-        return jnp.asarray(toks), jnp.asarray(lengths)
+    def _row_eta(self, slot: int) -> int:
+        """Upper bound on device rounds until this row frees up (0 for an
+        idle row).  Drives staging placement: within one staging round,
+        earlier-submitted requests park behind sooner-to-free rows.
+        This is greedy per call, not a global ordering guarantee --
+        arrivals in a *later* round can still land on a row that frees
+        up before an earlier request's row does; strict FIFO holds for
+        staging order (``admit_seq``), not start order."""
+        req = self.current[slot]
+        if req is None:
+            return 0
+        prompt_left = len(req.prompt) if not req.out else 0
+        return prompt_left + req.max_new - len(req.out)
 
-    def _set_slot_controls(self, reqs: List[Request]):
-        for r in reqs:
-            self._temp[r.slot] = r.temperature
-            self._topk[r.slot] = r.top_k
-            self._topp[r.slot] = r.top_p
-        self._controls_dev = None               # invalidate device copies
+    def _stage(self):
+        """Park queued requests into empty staging buffers, strict FIFO.
 
-    def _controls(self):
-        if self._controls_dev is None:
-            self._controls_dev = (jnp.asarray(self._temp),
-                                  jnp.asarray(self._topk),
-                                  jnp.asarray(self._topp))
-        return self._controls_dev
-
-    def _first_tokens(self, reqs: List[Request], logits_rows):
-        """Sample each new request's first token from its last-prompt-position
-        logits (one vectorized call, per-slot keys)."""
-        slots = np.asarray([r.slot for r in reqs])
-        keys = self._keys[jnp.asarray(slots)]
-        toks, new_keys = sampling.sample_tokens(
-            logits_rows, keys,
-            jnp.asarray(self._temp[slots]), jnp.asarray(self._topk[slots]),
-            jnp.asarray(self._topp[slots]))
-        self._keys = self._keys.at[jnp.asarray(slots)].set(new_keys)
-        toks = np.asarray(toks)
-        for i, r in enumerate(reqs):
-            t = int(toks[i])
-            r.out.append(t)
-            self._last_token[r.slot] = t
-            self.active[r.slot] = r
-            if (r.eos is not None and t == r.eos) or len(r.out) >= r.max_new:
-                self._retire(r.slot)
-
-    def _admit(self):
-        """Move queued requests into slots.  Whole-prompt mode prefills the
-        admission group in one batched call; chunked mode enqueues the group
-        as the prefill cohort processed by ``_prefill_step``.
-
-        While a cohort is in flight (at most one at a time), requests at
-        the queue head whose whole prompt fits in one chunk are still
-        admitted into idle slots via the whole-prompt path -- a long
-        prompt must not head-of-line-block short ones."""
-        if self._cohort:
-            group = self.scheduler.take(
-                len(self.free), self.scheduler.cfg.prefill_chunk)
-        else:
-            group = self.scheduler.take(len(self.free))
+        Rows whose current request is finished (or that never held one)
+        are preferred so the device arms the request on the very next
+        round; the remaining buffers are lookahead -- the request arms
+        the moment its row dies, mid-superstep, with zero idle rounds.
+        Busy rows are filled in order of estimated rounds-to-free
+        (``_row_eta``), keeping staging placement aligned with
+        submission order.
+        """
+        empty = [i for i in range(self.max_batch) if self.staged[i] is None]
+        empty.sort(key=lambda i: (self._row_eta(i), i))
+        group = self.scheduler.take(len(empty))
         if not group:
             return
-        for r in group:
-            r.slot = self.free.pop(0)
-        self._set_slot_controls(group)
-        self.stats.admitted += len(group)
+        m = self._smirror
+        for req, slot in zip(group, empty):
+            req.slot = slot
+            req.admit_seq = self.stats.admitted
+            self.staged[slot] = req
+            m["s_prompt"][slot, :] = 0
+            m["s_prompt"][slot, :len(req.prompt)] = req.prompt
+            m["s_prompt_len"][slot] = len(req.prompt)
+            m["s_rid"][slot] = req.rid
+            m["s_remaining"][slot] = req.max_new
+            m["s_eos"][slot] = -1 if req.eos is None else req.eos
+            m["s_temperature"][slot] = req.temperature
+            m["s_top_k"][slot] = req.top_k
+            m["s_top_p"][slot] = req.top_p
+            m["s_valid"][slot] = True
+            self.stats.admitted += 1
+            self._dirty_slots.append(slot)
 
-        if self._chunking and not self._cohort:
-            self._cohort = group
-            self._cohort_cache = None
+    def _upload_staging(self):
+        """Push newly staged rows to the device.  The (B,) control
+        vectors are re-uploaded whole (a few words); the (B, max_len)
+        prompt matrix -- the only leaf whose full upload would scale
+        with max_len -- is scattered row-wise for just the dirty slots.
+        """
+        if not self._dirty_slots:
             return
-
-        toks, lengths = self._pad_batch(group, None)
-        with self.stats.timed("prefill"):
-            logits, rows = self._prefill(self.params, toks, lengths)
-            jax.block_until_ready(logits)
-        self.stats.prefill_calls += 1
-        slots = jnp.asarray([r.slot for r in group])
-        self.cache = self._splice(self.cache, rows, slots)
-        for r in group:
-            r.prefilled = len(r.prompt)
-        self._first_tokens(group, logits)
-
-    def _prefill_step(self):
-        """Advance the chunked-prefill cohort by one fixed-size chunk."""
-        if not self._cohort:
-            return
-        chunk = self.scheduler.cfg.prefill_chunk
-        toks, lengths = self._pad_batch(self._cohort, chunk)
-        with self.stats.timed("prefill"):
-            if self._cohort_cache is None:
-                logits, rows = self._prefill(self.params, toks, lengths)
-            else:
-                logits, rows = self._prefill_resume(
-                    self.params, toks, lengths, self._cohort_cache)
-            jax.block_until_ready(logits)
-        self.stats.prefill_calls += 1
-
-        lengths = np.asarray(lengths)
-        finished, keep = [], []
-        for i, r in enumerate(self._cohort):
-            r.prefilled += int(lengths[i])
-            (finished if r.prefilled >= len(r.prompt) else keep).append(i)
-        if finished:
-            done_reqs = [self._cohort[i] for i in finished]
-            idx = jnp.asarray(finished)
-            slots = jnp.asarray([r.slot for r in done_reqs])
-            self.cache = self._splice(self.cache, _take_rows(rows, idx),
-                                      slots)
-            self._first_tokens(done_reqs, logits[idx])
-        self._cohort = [self._cohort[i] for i in keep]
-        self._cohort_cache = _take_rows(rows, jnp.asarray(keep)) \
-            if keep else None
+        rows = jnp.asarray(sorted(set(self._dirty_slots)))
+        self.state["s_prompt"] = self.state["s_prompt"].at[rows].set(
+            jnp.asarray(self._smirror["s_prompt"][np.asarray(rows)]))
+        for k in _STAGE_FIELDS:
+            if k != "s_prompt":
+                self.state[k] = jnp.asarray(self._smirror[k])
+        self._dirty_slots = []
 
     # ------------------------------------------------------------------
-    # Decode path
+    # The superstep
     # ------------------------------------------------------------------
-    def _retire(self, slot: int):
-        req = self.active.pop(slot)
-        req.done = True
-        self.finished[req.rid] = req
-        self.free.append(slot)
-        self.stats.completed += 1
-
-    def _decode_fn(self, n: int):
-        fn = self._decode_fns.get(n)
+    def _superstep_fn(self, n: int):
+        fn = self._superstep_fns.get(n)
         if fn is None:
             cfg = self.cfg
-            fn = jax.jit(lambda p, tok, cache, controls: lm.decode_many(
-                p, cfg, tok, cache, n, controls))
-            self._decode_fns[n] = fn
+            fn = jax.jit(lambda p, s: lm.superstep(p, cfg, s, n))
+            self._superstep_fns[n] = fn
         return fn
 
-    def _decode_controls(self):
-        """Assemble the device-side control state for one decode_many call.
+    def _promote(self, slot: int) -> Request:
+        """The device armed this row's staged request: update mirrors."""
+        prev = self.current[slot]
+        assert prev is None or prev.done, \
+            "device armed a row whose request the host still thinks is live"
+        req = self.staged[slot]
+        assert req is not None
+        self.current[slot] = req
+        self.staged[slot] = None
+        return req
 
-        Sampling controls are the cached device copies (invalidated only
-        at admission); liveness / stop / length-cap vectors are rebuilt
-        from the active table -- (B,)-sized uploads, negligible next to
-        the K decode steps they steer.
-        """
-        alive = np.zeros((self.max_batch,), bool)
-        remaining = np.zeros((self.max_batch,), np.int32)
-        eos = np.full((self.max_batch,), -1, np.int32)
-        for slot, req in self.active.items():
-            alive[slot] = True
-            remaining[slot] = req.max_new - len(req.out)
-            if req.eos is not None:
-                eos[slot] = req.eos
-        temp, topk, topp = self._controls()
-        return {"temperature": temp, "top_k": topk, "top_p": topp,
-                "keys": self._keys, "eos": jnp.asarray(eos),
-                "alive": jnp.asarray(alive),
-                "remaining": jnp.asarray(remaining)}
+    def _finish(self, req: Request, now: float, last_round: int):
+        req.done = True
+        self.finished[req.rid] = req
+        self.current[req.slot] = None
+        self.stats.completed += 1
+        self.stats.record_completion(len(req.out), req.first_round,
+                                     last_round, req.first_token_s, now)
 
     def step(self, n_tokens: Optional[int] = None) -> int:
-        """Admit pending requests, advance chunked prefill by one chunk,
-        decode up to ``n_tokens`` (default ``self.decode_block``) tokens
-        for every active slot in ONE on-device loop.  Returns the number
-        of requests still in flight (active + prefilling + queued).
-
-        Slots that hit EOS or their length cap mid-buffer stop emitting
-        on device (their tail positions read -1) and are retired -- and
-        their slots refilled -- only when the call returns, so one host
-        round-trip covers ``n_tokens`` decode steps.
+        """Stage pending requests, then run ONE on-device superstep of
+        ``n_tokens`` (default ``self.decode_block``) rounds: every slot
+        advances one token per round -- its next prompt token while
+        prefilling, a sampled token while decoding -- and slots that
+        retire mid-call are re-armed from staging in-loop.  Returns the
+        number of requests still in flight (armed + staged + queued).
         """
         k = max(1, int(n_tokens)) if n_tokens is not None \
             else self.decode_block
-        self._admit()
-        self._prefill_step()
-        if self.active:
-            tok = jnp.asarray(self._last_token)
-            controls = self._decode_controls()
-            with self.stats.timed("decode"):
-                buf, self.cache, dstate = self._decode_fn(k)(
-                    self.params, tok, self.cache, controls)
-                self._keys = dstate["keys"]
-                buf_np = np.asarray(buf)            # (B, k), -1 padded
-            self.stats.decode_calls += 1
-            self.stats.decode_steps += k
-            for slot, req in list(self.active.items()):
-                for t in buf_np[slot]:
-                    t = int(t)
-                    if t < 0:
-                        break
-                    req.out.append(t)
-                    self._last_token[slot] = t
-                    self.stats.decode_tokens += 1
-                if (req.eos is not None and req.out
-                        and req.out[-1] == req.eos) or \
+        self._stage()
+        if not any(self.current) and not any(self.staged):
+            return len(self.scheduler)
+        self._upload_staging()
+
+        with self.stats.timed("decode"):
+            toks, rids, self.state, counters = self._superstep_fn(k)(
+                self.params, self.state)
+            toks_np = np.asarray(toks)
+            rids_np = np.asarray(rids)
+            s_valid_np = np.asarray(self.state["s_valid"])
+        base_round = self.stats.decode_steps
+        self.stats.decode_calls += 1
+        self.stats.decode_steps += k
+        self.stats.slot_steps += k * self.max_batch
+        self.stats.prefill_tokens += int(counters["prefill_steps"])
+        self.stats.wasted_slot_steps += int(counters["wasted_slot_steps"])
+
+        now = time.perf_counter()
+        for slot in range(self.max_batch):
+            for j in range(k):
+                rid = int(rids_np[slot, j])
+                if rid < 0:
+                    continue
+                req = self.current[slot]
+                if req is None or req.rid != rid:
+                    req = self._promote(slot)   # armed mid-superstep
+                    assert req.rid == rid, (req.rid, rid)
+                t = int(toks_np[slot, j])
+                if not req.out:
+                    req.first_token_s = now
+                    req.first_round = base_round + j
+                    self.stats.record_first_token(
+                        now - req.submitted_s,
+                        base_round + j + 1 - req.submit_round)
+                req.out.append(t)
+                self.stats.decode_tokens += 1
+                if (req.eos is not None and t == req.eos) or \
                         len(req.out) >= req.max_new:
-                    self._retire(slot)
-        return len(self.active) + len(self._cohort) + len(self.scheduler)
+                    self._finish(req, now, base_round + j)
+            # armed without emitting yet (still prefilling at call end)
+            if self.staged[slot] is not None and not s_valid_np[slot]:
+                self._promote(slot)
+        # re-sync the staging mirror with what the device consumed
+        self._smirror["s_valid"][:] = s_valid_np
+        return (sum(r is not None for r in self.current)
+                + sum(r is not None for r in self.staged)
+                + len(self.scheduler))
 
     # ------------------------------------------------------------------
-    def run_to_completion(self, max_steps: int = 10_000
+    def run_to_completion(self, max_steps: int = 100_000
                           ) -> Dict[int, List[int]]:
         steps = 0
-        while (len(self.scheduler) or self._cohort or self.active) \
-                and steps < max_steps:
+        while (len(self.scheduler) or any(self.current)
+               or any(self.staged)) and steps < max_steps:
             self.step()
             steps += 1
         return {rid: r.out for rid, r in self.finished.items()}
 
 
+def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
+                 submit, max_steps: int = 100_000) -> None:
+    """Drive ``engine`` over an arrival trace until every request
+    completes.  The arrival clock is the engine's device-round counter:
+    request ``i`` is submitted via ``submit(i, trace[i])`` once
+    ``trace[i]["arrival"] <= stats.decode_steps`` -- or immediately when
+    the engine is idle, so a gap in arrivals cannot stall the round
+    clock.  Shared by the arrival-trace bench, the serving example and
+    the scheduler property tests so the replay semantics live in one
+    place."""
+    i, steps = 0, 0
+    while i < len(trace) or engine.stats.completed < i:
+        due = i < len(trace) and \
+            trace[i]["arrival"] <= engine.stats.decode_steps
+        idle = engine.stats.completed == i
+        while i < len(trace) and (due or idle):
+            submit(i, trace[i])
+            i += 1
+            due = i < len(trace) and \
+                trace[i]["arrival"] <= engine.stats.decode_steps
+            idle = False
+        engine.step()
+        steps += 1
+        if steps >= max_steps:
+            raise RuntimeError(
+                f"arrival trace did not drain within {max_steps} steps "
+                f"({engine.stats.completed}/{i} submitted requests done)")
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_step_fn(cfg):
+    """One compiled decode step per config (configs are frozen/hashable);
+    repeated generate_one calls share it instead of re-tracing."""
+    return jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
+
+
 def generate_one(cfg, params, prompt: List[int], max_new: int = 32,
                  max_len: int = 2048) -> List[int]:
-    """Single-request greedy reference path (the engine parity oracle)."""
-    logits, cache = lm.prefill(params, cfg, jnp.asarray([prompt], jnp.int32),
-                               max_len)
+    """Single-request greedy reference path (the engine parity oracle).
+
+    Drives the prompt token-by-token through ``lm.decode_step`` -- the
+    same unified code path the engine superstep uses for prefill and
+    decode -- so engine streams are bit-comparable for every cache kind.
+    (The parallel ``lm.prefill`` scan matches this path to fp32 rounding;
+    the padding-invariance tests in tests/test_serving.py pin that
+    equivalence on the parallel side, and
+    test_generate_one_matches_parallel_prefill pins it here.)
+    """
+    cache = lm.init_cache(cfg, 1, max_len)
+    step = _decode_step_fn(cfg)
+    logits = None
+    for t in prompt:
+        logits, cache = step(params, jnp.asarray([t], jnp.int32), cache)
     out = [int(np.asarray(logits)[0, :cfg.vocab_size].argmax())]
     for _ in range(max_new - 1):
-        logits, cache = lm.decode_step(params, cfg,
-                                       jnp.asarray([out[-1]], jnp.int32),
-                                       cache)
+        logits, cache = step(params, jnp.asarray([out[-1]], jnp.int32),
+                             cache)
         out.append(int(np.asarray(logits)[0, :cfg.vocab_size].argmax()))
     return out

@@ -18,6 +18,12 @@ Semantics (matching the common serving stacks):
 All controls are traced arrays, so one compiled program serves any mix of
 greedy / sampled slots.  Keys advance every call (`jax.random.split` per
 slot), making runs reproducible under a fixed engine seed.
+
+``lm.superstep`` calls this every device round for every slot --
+including teacher-forced (prefilling) rows, whose sample is masked out
+rather than skipped, so the compiled round is branch-free and the
+per-slot key schedule depends only on round count, not on request
+phase.
 """
 
 from __future__ import annotations

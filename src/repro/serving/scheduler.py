@@ -1,46 +1,32 @@
 """Admission scheduling + engine statistics for the serving engine.
 
-The scheduler is deliberately simple (FIFO admission into free slots with a
-per-round prefill token budget); its value is that the policy and the
-accounting live *outside* the engine's jax plumbing, so policy experiments
-(priority queues, length-aware packing) don't touch device code.
+The scheduler is deliberately simple (strict FIFO staging into slot
+staging buffers); its value is that the policy and the accounting live
+*outside* the engine's jax plumbing, so policy experiments (priority
+queues, length-aware packing) don't touch device code.
 
-Shape bucketing: jitted prefill recompiles per (rows, T_pad) shape, so
-``bucket_length`` rounds the padded prompt length up to a power of two
-(min 8) -- the number of distinct compiled prefill programs is then
-O(log max_len) rather than O(#distinct prompt lengths).
+With the superstep engine the scheduler's contract is small but load-
+bearing: ``take`` must pop requests in exact submission order (FIFO
+fairness -- a request is never overtaken while queued) and must
+eventually pop every request as staging capacity frees up (no
+starvation).  ``tests/test_scheduler.py`` property-tests both against
+random arrival traces.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
-
-
-def bucket_length(t: int, minimum: int = 8) -> int:
-    """Round t up to a power of two (>= minimum) to bound recompiles."""
-    b = minimum
-    while b < t:
-        b *= 2
-    return b
+from typing import Dict, List
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
     max_batch: int = 8
-    # prompts longer than this prefill in fixed-size chunks interleaved
-    # with decode rounds -- one chunk per engine step(), i.e. per decode
-    # block of K tokens (None/0 = whole-prompt prefill).  Only effective
-    # for archs whose cache supports resume (lm.supports_chunked_prefill).
-    prefill_chunk: Optional[int] = None
-    # cap on summed prompt tokens admitted per round (None = no cap);
-    # bounds the size of one batched prefill call under bursty arrivals
-    max_prefill_tokens: Optional[int] = None
 
 
 class FifoScheduler:
-    """FIFO admission: fill free slots, respecting the prefill token budget."""
+    """FIFO admission: pop requests in submission order as slots free up."""
 
     def __init__(self, cfg: SchedulerConfig):
         self.cfg = cfg
@@ -52,59 +38,77 @@ class FifoScheduler:
     def __len__(self) -> int:
         return len(self.waiting)
 
-    def take(self, free_slots: int,
-             max_prompt_len: Optional[int] = None) -> List:
-        """Pop the next admission group: at most ``free_slots`` requests,
-        at most ``max_prefill_tokens`` summed prompt tokens (always at
-        least one request, so oversized prompts cannot starve).
-
-        ``max_prompt_len`` stops at the first queue head longer than the
-        limit (FIFO order preserved) -- used to admit short prompts into
-        idle slots while a chunked-prefill cohort is in flight.
-        """
-        budget = self.cfg.max_prefill_tokens
-        group: List = []
-        used = 0
-        while self.waiting and len(group) < free_slots:
-            nxt = len(self.waiting[0].prompt)
-            if max_prompt_len is not None and nxt > max_prompt_len:
-                break
-            if group and budget is not None and used + nxt > budget:
-                break
-            group.append(self.waiting.pop(0))
-            used += nxt
+    def take(self, n: int) -> List:
+        """Pop the next admission group: the first ``n`` waiting requests,
+        in exact submission order."""
+        n = max(0, min(n, len(self.waiting)))
+        group, self.waiting = self.waiting[:n], self.waiting[n:]
         return group
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, int(q * (len(ys) - 1) + 0.5))
+    return float(ys[i])
 
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters + wall-clock for the serving hot paths.
+    """Counters + wall-clock for the serving superstep loop.
 
-    ``prefill_tokens`` counts true prompt tokens (padding excluded);
-    ``decode_tokens`` counts generated tokens.  ``decode_steps`` counts
-    *device* decode iterations while ``decode_calls`` counts host
-    round-trips (one ``lm.decode_many`` dispatch each); with decode
-    block K they differ by ~Kx, and the snapshot's
-    ``host_roundtrips_per_decode_token`` is the serving-efficiency
-    number the multi-token decode loop exists to shrink.  Timers wrap
-    the device calls including host sync, so tokens-per-second is an
-    end-to-end number.
+    ``decode_steps`` counts *device* rounds (K per superstep) while
+    ``decode_calls`` counts host round-trips (one ``lm.superstep``
+    dispatch each); ``slot_steps`` is rounds x batch -- every row is
+    stepped every round to keep shapes static, and ``wasted_slot_steps``
+    counts the rows that were stepped while dead with nothing staged
+    (the idle waste in-loop re-admission exists to eliminate;
+    ``snapshot()['wasted_slot_fraction']`` is the trajectory metric).
+    ``prefill_tokens`` counts prompt tokens consumed on device (one per
+    prefilling row-round).  Timers wrap the device calls including host
+    sync, so tokens-per-second is an end-to-end number.
+
+    Per-request latency: ``ttft_s`` / ``ttft_rounds`` measure submit ->
+    first token (wall clock at host drain granularity, and exact device
+    rounds); ``itl_s`` is the per-request mean inter-token gap in wall
+    seconds (host drain granularity -- the load signal), while
+    ``itl_rounds`` is the same gap in device rounds.  The superstep
+    never stalls an emitting row, so ``itl_rounds`` is 1.0 by
+    construction; it is kept as a regression canary -- any deviation
+    means a scheduler/preemption change started inserting idle rounds
+    into running streams.
     """
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
     prefill_tokens: int = 0
-    padded_prefill_tokens: int = 0
-    prefill_calls: int = 0
     decode_tokens: int = 0
     decode_steps: int = 0
     decode_calls: int = 0
+    slot_steps: int = 0
+    wasted_slot_steps: int = 0
     queue_peak: int = 0
-    prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_rounds: List[int] = dataclasses.field(default_factory=list)
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+    itl_rounds: List[float] = dataclasses.field(default_factory=list)
 
     def observe_queue(self, depth: int) -> None:
         self.queue_peak = max(self.queue_peak, depth)
+
+    def record_first_token(self, wall_s: float, rounds: int) -> None:
+        self.ttft_s.append(wall_s)
+        self.ttft_rounds.append(rounds)
+
+    def record_completion(self, n_tokens: int, first_round: int,
+                          last_round: int, first_s: float = 0.0,
+                          last_s: float = 0.0) -> None:
+        if n_tokens > 1:
+            self.itl_rounds.append(
+                (last_round - first_round) / (n_tokens - 1))
+            self.itl_s.append((last_s - first_s) / (n_tokens - 1))
 
     def timed(self, kind: str):
         """Context manager: adds elapsed wall time to ``<kind>_time_s``."""
@@ -126,22 +130,30 @@ class EngineStats:
     def total_tokens(self) -> int:
         return self.prefill_tokens + self.decode_tokens
 
-    @property
-    def total_time_s(self) -> float:
-        return self.prefill_time_s + self.decode_time_s
-
     def tokens_per_second(self) -> float:
-        return self.total_tokens / max(self.total_time_s, 1e-9)
+        return self.total_tokens / max(self.decode_time_s, 1e-9)
 
     def decode_tokens_per_second(self) -> float:
         return self.decode_tokens / max(self.decode_time_s, 1e-9)
 
     def snapshot(self) -> Dict[str, float]:
-        d = dataclasses.asdict(self)
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)
+             if not isinstance(getattr(self, f.name), list)}
         d["tokens_per_second"] = self.tokens_per_second()
         d["decode_tokens_per_second"] = self.decode_tokens_per_second()
-        d["padding_overhead"] = (
-            self.padded_prefill_tokens / max(self.prefill_tokens, 1))
         d["host_roundtrips_per_decode_token"] = (
             self.decode_calls / max(self.decode_tokens, 1))
+        d["wasted_slot_fraction"] = (
+            self.wasted_slot_steps / max(self.slot_steps, 1))
+        d["ttft_s_mean"] = (sum(self.ttft_s) / len(self.ttft_s)
+                            if self.ttft_s else 0.0)
+        d["ttft_s_p95"] = _percentile(self.ttft_s, 0.95)
+        d["ttft_rounds_mean"] = (
+            sum(self.ttft_rounds) / len(self.ttft_rounds)
+            if self.ttft_rounds else 0.0)
+        d["itl_s_mean"] = (sum(self.itl_s) / len(self.itl_s)
+                           if self.itl_s else 0.0)
+        d["itl_rounds_mean"] = (sum(self.itl_rounds) / len(self.itl_rounds)
+                                if self.itl_rounds else 0.0)
         return d

@@ -1,10 +1,11 @@
-"""Multi-token on-device decode: ``lm.decode_many`` must be bit-exact with
+"""Multi-round on-device decode: ``lm.superstep`` must be bit-exact with
 a host loop of ``decode_step`` + ``sample_tokens`` (greedy and seeded
 sampling, mid-buffer EOS, length caps), the fused Pallas decode-step
-kernel must match the jnp cell step (incl. bf16 and odd d_hidden), and the
-engine's ``step(n_tokens=K>1)`` path must keep the ``generate_one`` parity
-contract across admission orders, mid-stream submits, slot retire/reuse
-across buffer boundaries, and chunked-prefill interleaving."""
+kernel must match the jnp cell step (incl. bf16 and odd d_hidden), and
+the engine's ``step(n_tokens=K>1)`` path must keep the ``generate_one``
+parity contract across admission orders, mid-superstep arrivals, slot
+retire + in-loop re-admission inside a single buffer, odd prompt
+lengths, and long prompts prefilled by the loop itself."""
 
 import jax
 import jax.numpy as jnp
@@ -115,12 +116,29 @@ def test_block_step_fused_matches_sequential_oracle(cell):
 
 
 # ---------------------------------------------------------------------------
-# decode_many vs looped decode_step + sample_tokens
+# superstep vs looped decode_step + sample_tokens (decode-only rows)
 # ---------------------------------------------------------------------------
 
+def _decoding_state(cfg, cache, tok0, keys, controls_np):
+    """Slot state whose rows are already past their prompt (prompt_len=0)
+    -- the superstep then behaves as a pure multi-token decode loop."""
+    bsz = int(tok0.shape[0])
+    state = lm.init_slot_state(cfg, bsz, MAX_LEN)
+    state["cache"] = cache
+    state["tok"] = tok0.astype(jnp.int32)
+    state["keys"] = keys
+    state["alive"] = jnp.asarray(controls_np["alive"])
+    state["remaining"] = jnp.asarray(controls_np["remaining"], jnp.int32)
+    state["eos"] = jnp.asarray(controls_np["eos"], jnp.int32)
+    state["temperature"] = jnp.asarray(controls_np["temperature"])
+    state["top_k"] = jnp.asarray(controls_np["top_k"], jnp.int32)
+    state["top_p"] = jnp.asarray(controls_np["top_p"])
+    return state
+
+
 def _loop_reference(cfg, params, tok, cache, keys, controls_np, n):
-    """Host re-implementation of decode_many's contract: step + sample
-    every iteration, emit only while alive, stop on EOS / length cap."""
+    """Host re-implementation of the superstep's decode contract: step +
+    sample every round, emit only while alive, stop on EOS / length cap."""
     step_fn = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
     alive = controls_np["alive"].copy()
     remaining = controls_np["remaining"].copy()
@@ -150,7 +168,7 @@ def _loop_reference(cfg, params, tok, cache, keys, controls_np, n):
 
 @pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
 @pytest.mark.parametrize("temperature", [0.0, 0.9])
-def test_decode_many_matches_looped_decode_step(arch, temperature):
+def test_superstep_matches_looped_decode_step(arch, temperature):
     cfg, params = _setup(arch)
     toks = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 0], [9, 8, 0, 0]], jnp.int32)
     lengths = jnp.asarray([4, 3, 2], jnp.int32)
@@ -167,47 +185,54 @@ def test_decode_many_matches_looped_decode_step(arch, temperature):
         "remaining": np.asarray([6, 3, 5], np.int32),
     }
     n = 6
-    controls = {k: jnp.asarray(v) for k, v in controls_np.items()}
-    controls["keys"] = keys
-    buf, cache_d, state = jax.jit(
-        lambda p, t, c, ct: lm.decode_many(p, cfg, t, c, n, ct)
-    )(params, tok0, cache, controls)
+    state = _decoding_state(cfg, cache, tok0, keys, controls_np)
+    buf, _, state_out, counters = jax.jit(
+        lambda p, s: lm.superstep(p, cfg, s, n))(params, state)
 
     ref, ref_keys, ref_alive = _loop_reference(
         cfg, params, tok0, cache, keys, controls_np, n)
     np.testing.assert_array_equal(np.asarray(buf), ref)
-    np.testing.assert_array_equal(np.asarray(state["keys"]),
+    np.testing.assert_array_equal(np.asarray(state_out["keys"]),
                                   np.asarray(ref_keys))
-    np.testing.assert_array_equal(np.asarray(state["alive"]), ref_alive)
+    np.testing.assert_array_equal(np.asarray(state_out["alive"]), ref_alive)
     # length caps honoured on device: slot 1 emitted exactly 3 tokens
     assert int((np.asarray(buf)[1] >= 0).sum()) == 3
+    # decode-only rows: nothing prefilling, nothing staged -> dead rows
+    # after the length caps hit are counted as waste
+    assert int(counters["prefill_steps"]) == 0
+    assert int(counters["wasted_slot_steps"]) == \
+        int((np.asarray(buf) == -1).sum())
 
 
-def test_decode_many_mid_buffer_eos_stops_emission():
+def test_superstep_mid_buffer_eos_stops_emission():
     cfg, params = _setup("mingru-lm")
     logits, cache = lm.prefill(params, cfg,
                                jnp.asarray([[1, 2, 3]], jnp.int32), MAX_LEN)
     tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
-    # find what greedy emits second, then rerun with it as the stop token
     controls = {
-        "temperature": jnp.zeros((1,)), "top_k": jnp.zeros((1,), jnp.int32),
-        "top_p": jnp.ones((1,)), "keys": sampling.make_keys(0, 1),
-        "eos": jnp.full((1,), -1, jnp.int32),
-        "alive": jnp.ones((1,), bool),
-        "remaining": jnp.full((1,), 8, jnp.int32),
+        "temperature": np.zeros((1,), np.float32),
+        "top_k": np.zeros((1,), np.int32),
+        "top_p": np.ones((1,), np.float32),
+        "eos": np.full((1,), -1, np.int32),
+        "alive": np.ones((1,), bool),
+        "remaining": np.full((1,), 8, np.int32),
     }
-    buf, _, _ = lm.decode_many(params, cfg, tok0, cache, 8, controls)
+    state = _decoding_state(cfg, cache, tok0, sampling.make_keys(0, 1),
+                            controls)
+    buf, _, _, _ = lm.superstep(params, cfg, state, 8)
     eos = int(np.asarray(buf)[0, 1])
-    controls["eos"] = jnp.full((1,), eos, jnp.int32)
-    buf2, _, state = lm.decode_many(params, cfg, tok0, cache, 8, controls)
+    controls["eos"] = np.full((1,), eos, np.int32)
+    state = _decoding_state(cfg, cache, tok0, sampling.make_keys(0, 1),
+                            controls)
+    buf2, _, state_out, _ = lm.superstep(params, cfg, state, 8)
     b = np.asarray(buf2)[0]
     stop = int(np.argmax(b == eos))
     assert b[stop] == eos
     assert (b[stop + 1:] == -1).all()
-    assert not bool(np.asarray(state["alive"])[0])
+    assert not bool(np.asarray(state_out["alive"])[0])
 
 
-def test_decode_many_dead_slots_do_not_disturb_live_rows():
+def test_superstep_dead_slots_do_not_disturb_live_rows():
     """A dead slot keeps stepping (dense batch) but its garbage must not
     leak into live rows: live-row tokens match a solo run."""
     cfg, params = _setup("mingru-lm")
@@ -216,23 +241,57 @@ def test_decode_many_dead_slots_do_not_disturb_live_rows():
     tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
 
     def controls(bsz, alive):
-        return {"temperature": jnp.zeros((bsz,)),
-                "top_k": jnp.zeros((bsz,), jnp.int32),
-                "top_p": jnp.ones((bsz,)),
-                "keys": sampling.make_keys(0, bsz),
-                "eos": jnp.full((bsz,), -1, jnp.int32),
-                "alive": jnp.asarray(alive),
-                "remaining": jnp.full((bsz,), 5, jnp.int32)}
+        return {"temperature": np.zeros((bsz,), np.float32),
+                "top_k": np.zeros((bsz,), np.int32),
+                "top_p": np.ones((bsz,), np.float32),
+                "eos": np.full((bsz,), -1, np.int32),
+                "alive": np.asarray(alive),
+                "remaining": np.full((bsz,), 5, np.int32)}
 
-    buf, _, _ = lm.decode_many(params, cfg, tok0, cache, 5,
-                               controls(2, [False, True]))
+    state = _decoding_state(cfg, cache, tok0, sampling.make_keys(0, 2),
+                            controls(2, [False, True]))
+    buf, _, _, _ = lm.superstep(params, cfg, state, 5)
     lg1, c1 = lm.prefill(params, cfg, toks[1:], MAX_LEN)
-    buf1, _, _ = lm.decode_many(params, cfg,
-                                jnp.argmax(lg1, -1).astype(jnp.int32),
-                                c1, 5, controls(1, [True]))
+    state1 = _decoding_state(cfg, c1,
+                             jnp.argmax(lg1, -1).astype(jnp.int32),
+                             sampling.make_keys(0, 1),
+                             controls(1, [True]))
+    buf1, _, _, _ = lm.superstep(params, cfg, state1, 5)
     b = np.asarray(buf)
     assert (b[0] == -1).all()
     np.testing.assert_array_equal(b[1], np.asarray(buf1)[0])
+
+
+def test_superstep_teacher_forced_prefill_matches_decode_step_loop():
+    """A staged request's prompt consumed by teacher-forced superstep
+    rounds yields bit-identical state/logits to stepping the prompt by
+    hand through decode_step."""
+    cfg, params = _setup("mingru-lm")
+    prompt = [3, 1, 4, 1, 5, 9, 2]
+    state = lm.init_slot_state(cfg, 1, MAX_LEN)
+    state["s_valid"] = jnp.asarray([True])
+    state["s_prompt"] = state["s_prompt"].at[0, :len(prompt)].set(
+        jnp.asarray(prompt, jnp.int32))
+    state["s_prompt_len"] = jnp.asarray([len(prompt)], jnp.int32)
+    state["s_rid"] = jnp.asarray([0], jnp.int32)
+    state["s_remaining"] = jnp.asarray([4], jnp.int32)
+    n = len(prompt) + 3                     # prompt rounds + 3 emissions
+    buf, rids, _, counters = lm.superstep(params, cfg, state, n)
+    got = [int(t) for t in np.asarray(buf)[0] if t >= 0]
+    assert int(counters["prefill_steps"]) == len(prompt)
+    assert (np.asarray(rids)[0][np.asarray(buf)[0] >= 0] == 0).all()
+
+    cache = lm.init_cache(cfg, 1, MAX_LEN)
+    logits = None
+    for t in prompt:
+        logits, cache = lm.decode_step(params, cfg,
+                                       jnp.asarray([t], jnp.int32), cache)
+    ref = [int(jnp.argmax(logits[0]))]
+    for _ in range(3):
+        logits, cache = lm.decode_step(
+            params, cfg, jnp.asarray([ref[-1]], jnp.int32), cache)
+        ref.append(int(jnp.argmax(logits[0])))
+    assert got == ref[:len(got)] == ref
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +300,7 @@ def test_decode_many_dead_slots_do_not_disturb_live_rows():
 
 @pytest.mark.parametrize("arch", [
     "mingru-lm",
-    # KV/SSD cache kinds ride the same decode_many loop; heavier compiles
+    # KV/SSD cache kinds ride the same superstep loop; heavier compiles
     pytest.param("mamba2-370m", marks=pytest.mark.slow),
     pytest.param("gemma-2b", marks=pytest.mark.slow),
 ])
@@ -257,7 +316,7 @@ def test_engine_block_decode_matches_single_request(arch, k):
     outs = engine.run_to_completion()
     for rid, ref in zip(rids, singles):
         assert outs[rid] == ref, (outs[rid], ref)
-    # max_new=7 with K=3 exercises a partial final buffer
+    # max_new=7 with K=3 exercises partial buffers and mid-buffer retire
     assert engine.stats.decode_calls < engine.stats.decode_steps
 
 
@@ -277,7 +336,9 @@ def test_engine_block_decode_admission_orders(k):
             assert outs[rid] == refs[key], (order, key)
 
 
-def test_engine_block_decode_mid_stream_submit():
+def test_engine_block_decode_mid_superstep_arrivals():
+    """Requests submitted while a batch is mid-flight are staged between
+    supersteps and armed in-loop without disturbing running streams."""
     cfg, params = _setup("mingru-lm")
     first = [[1, 2, 3, 4], [5, 6, 7, 8, 9]]
     late = [[2, 4, 6], [7, 5, 3, 1]]
@@ -294,39 +355,66 @@ def test_engine_block_decode_mid_stream_submit():
         assert outs[rid] == ref, (outs[rid], ref)
 
 
-def test_engine_block_decode_eos_retire_and_reuse_across_buffers():
-    """EOS mid-buffer retires the slot at the buffer boundary; the slot is
-    reused by a queued request whose stream must match a clean engine."""
+def test_engine_block_decode_eos_readmits_in_same_buffer():
+    """EOS mid-buffer retires the request and the staged successor arms
+    on the next device round: both streams can land in ONE (B, K)
+    buffer, demuxed by the rid plane, with zero idle rounds between
+    them."""
     cfg, params = _setup("mingru-lm")
     eos_tok = generate_one(cfg, params, [1, 2, 3], max_new=2,
                            max_len=MAX_LEN)[1]
-    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
-                           decode_block=4)
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN)
     rid = engine.submit([1, 2, 3], max_new=16, eos=eos_tok)
+    engine.step(n_tokens=1)             # arm the first request (round 0)
     ref = generate_one(cfg, params, [4, 5, 6, 7], max_new=6,
                        max_len=MAX_LEN)
-    rid2 = engine.submit([4, 5, 6, 7], max_new=6)
-    outs = engine.run_to_completion()
-    # stopped at EOS well before its 16-token cap (mid-buffer for K=4)
-    assert outs[rid][-1] == eos_tok and len(outs[rid]) < 16
+    rid2 = engine.submit([4, 5, 6, 7], max_new=6)   # staged behind it
+    engine.step(n_tokens=16)
+    outs = engine.run_to_completion()   # already drained: no more calls
+    assert engine.stats.decode_calls == 2
+    n1 = len(outs[rid])
+    assert outs[rid][-1] == eos_tok and n1 <= 2     # eos is token 1 or 2
     assert outs[rid2] == ref
-    # the EOS'd slot's dead-step garbage was overwritten at readmission
     assert engine.stats.completed == 2
+    # round timeline across the 17 rounds: the first request uses 3
+    # prompt rounds with its n1 emissions starting on the last of them
+    # (2 + n1 rounds), the successor arms the very next round and uses
+    # 4 + 6 - 1 = 9 -> waste only at the tail of the buffer, zero idle
+    # rounds between the two requests
+    assert engine.stats.wasted_slot_steps == 17 - (2 + n1) - 9
 
 
-def test_engine_block_decode_with_chunked_prefill_interleaving():
+@pytest.mark.parametrize("k", [4])
+def test_engine_block_decode_odd_prompt_lengths(k):
+    """Prompt lengths straddling the block size (1, K-1, K, K+1, 2K+3):
+    teacher-forced prefill must hand off to sampling at the right round
+    regardless of where the prompt ends relative to buffer boundaries."""
+    cfg, params = _setup("mingru-lm")
+    prompts = [[7], [1, 2, 3], [1, 2, 3, 4], [5, 4, 3, 2, 1],
+               [2, 7, 1, 8, 2, 8, 1, 8, 2, 8, 4]]
+    refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
+            for p in prompts]
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=k)
+    rids = [engine.submit(p, max_new=6) for p in prompts]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
+
+
+def test_engine_block_decode_long_prompts_interleave():
     cfg, params = _setup("mingru-lm")
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(1, 200, size=n)) for n in (19, 7, 26, 3)]
     refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
             for p in prompts]
     engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
-                           prefill_chunk=8, decode_block=4)
+                           decode_block=4)
     rids = [engine.submit(p, max_new=6) for p in prompts]
     outs = engine.run_to_completion()
     for rid, ref in zip(rids, refs):
         assert outs[rid] == ref, (outs[rid], ref)
-    assert engine.stats.prefill_calls > 2       # chunking actually ran
+    assert engine.stats.prefill_tokens == sum(len(p) for p in prompts)
 
 
 def test_engine_block_decode_sampled_streams_reproducible():
@@ -345,8 +433,8 @@ def test_engine_block_decode_sampled_streams_reproducible():
     for out in a:
         assert len(out) == 8
         assert all(0 <= t < cfg.vocab_size for t in out)
-    # K=1 must reproduce the legacy one-token-per-step key schedule
-    # (decode_many advances every slot's key once per device step)
+    # K=1 must be reproducible too (per-slot keys advance once per round
+    # regardless of block size)
     assert run(1) == run(1)
 
 
@@ -358,6 +446,10 @@ def test_engine_per_call_override_and_roundtrip_accounting():
     engine.step(n_tokens=4)
     assert engine.stats.decode_calls == 2
     assert engine.stats.decode_steps == 8
+    # 3 teacher-forced rounds; the first emission rides the round that
+    # consumes the last prompt token, so all 6 tokens fit in 8 rounds
+    assert engine.stats.prefill_tokens == 3
+    assert engine.stats.decode_tokens == 6
     snap = engine.stats.snapshot()
     assert snap["host_roundtrips_per_decode_token"] <= 0.5
     outs = engine.run_to_completion()

@@ -1,0 +1,179 @@
+"""FifoScheduler + superstep-engine admission properties.
+
+Replays random arrival / prompt-length / max_new traces and asserts the
+scheduler contract the superstep engine depends on:
+
+  * **FIFO fairness** -- requests leave the queue in exact submission
+    order (a request is never overtaken while waiting), and the engine
+    stages them in that same order;
+  * **no starvation** -- under continuous admission every request is
+    eventually staged, armed and completed;
+  * **conservation** -- every submitted request completes exactly once
+    with exactly ``max_new`` tokens (no EOS in these traces).
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import archs
+from repro.models import lm
+from repro.serving.engine import ServingEngine, replay_trace
+from repro.serving.scheduler import EngineStats, FifoScheduler, \
+    SchedulerConfig
+
+# ---------------------------------------------------------------------------
+# Scheduler-level FIFO properties (pure host logic, no model)
+# ---------------------------------------------------------------------------
+
+
+class _Tag:
+    def __init__(self, i):
+        self.i = i
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_fifo_take_preserves_submission_order(seed):
+    rng = np.random.default_rng(seed)
+    sched = FifoScheduler(SchedulerConfig(max_batch=4))
+    submitted, taken = 0, []
+    for _ in range(30):
+        for _ in range(int(rng.integers(0, 4))):
+            sched.submit(_Tag(submitted))
+            submitted += 1
+        got = sched.take(int(rng.integers(0, 5)))
+        assert len(got) <= 4 + submitted
+        taken.extend(t.i for t in got)
+    taken.extend(t.i for t in sched.take(len(sched)))
+    assert len(sched) == 0
+    # conservation + exact FIFO order
+    assert taken == list(range(submitted))
+
+
+def test_take_never_exceeds_request_or_queue():
+    sched = FifoScheduler(SchedulerConfig())
+    for i in range(3):
+        sched.submit(_Tag(i))
+    assert [t.i for t in sched.take(2)] == [0, 1]
+    assert [t.i for t in sched.take(5)] == [2]
+    assert sched.take(3) == []
+    assert sched.take(0) == []
+    assert sched.take(-1) == []
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: random arrival traces under continuous admission
+# ---------------------------------------------------------------------------
+
+def _setup():
+    cfg = archs.smoke("mingru-lm")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+_CFG_PARAMS = {}
+
+
+def _cached_setup():
+    if "v" not in _CFG_PARAMS:
+        _CFG_PARAMS["v"] = _setup()
+    return _CFG_PARAMS["v"]
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_engine_random_trace_all_requests_complete_in_fifo_order(seed):
+    """Random arrival trace: every request completes with exactly its
+    max_new tokens, and staging follows submission order exactly."""
+    cfg, params = _cached_setup()
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 7))
+    trace = [dict(arrival=int(rng.integers(0, 12)),
+                  prompt=list(rng.integers(1, 250,
+                                           size=int(rng.integers(1, 9)))),
+                  max_new=int(rng.integers(1, 7)))
+             for _ in range(n)]
+    trace.sort(key=lambda r: r["arrival"])
+
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                           decode_block=3)
+    rids = []
+    # replay_trace raises RuntimeError on starvation (trace not draining)
+    replay_trace(engine, trace,
+                 lambda i, r: rids.append(
+                     engine.submit(r["prompt"], max_new=r["max_new"])),
+                 max_steps=500)
+
+    outs = {rid: engine.finished[rid].out for rid in rids}
+    # conservation: all complete, exact lengths (no EOS in the trace)
+    assert set(outs) == set(rids)
+    for rid, r in zip(rids, trace):
+        assert len(outs[rid]) == r["max_new"], (rid, r)
+    # FIFO fairness: staging order == submission order
+    seqs = [engine.finished[rid].admit_seq for rid in rids]
+    assert seqs == sorted(seqs)
+    assert engine.stats.completed == engine.stats.admitted == len(rids)
+
+
+def test_engine_saturated_queue_drains_without_starvation():
+    """More requests than slots + staging can hold: the backlog drains in
+    strict FIFO staging order and nothing is dropped."""
+    cfg, params = _cached_setup()
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                           decode_block=4)
+    rids = [engine.submit([i + 1, i + 2], max_new=3) for i in range(9)]
+    outs = engine.run_to_completion()
+    assert set(outs) == set(rids)
+    assert all(len(o) == 3 for o in outs.values())
+    seqs = [engine.finished[r].admit_seq for r in rids]
+    assert seqs == list(range(9))
+    assert engine.stats.queue_peak >= 5      # 2 slots + 2 staged absorbed
+
+
+def test_engine_stages_queue_head_behind_soonest_free_row():
+    """Lookahead staging must not strand the queue head behind the
+    longest-running request: with every row busy, the next queued
+    request parks behind the row with the smallest rounds-to-free
+    estimate, so it also starts (and typically finishes) first."""
+    cfg, params = _cached_setup()
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                           decode_block=2)
+    slow = engine.submit([1, 2], max_new=14)
+    fast = engine.submit([3, 4], max_new=6)
+    for _ in range(2):
+        engine.step()                    # 4 rounds: both armed, decoding
+    assert all(r is not None and not r.done for r in engine.current)
+    third = engine.submit([5, 6], max_new=3)
+    fourth = engine.submit([7, 8], max_new=3)
+    engine.step()                        # stages third/fourth by row ETA
+    # the earlier-submitted request is parked behind the sooner-free row
+    fast_slot = next(r.slot for r in engine.current if r and r.rid == fast)
+    assert engine.staged[fast_slot] is not None
+    assert engine.staged[fast_slot].rid == third
+    engine.run_to_completion()
+    assert engine.finished[third].first_round < \
+        engine.finished[fourth].first_round
+    assert len(engine.finished[slow].out) == 14
+
+
+# ---------------------------------------------------------------------------
+# EngineStats latency aggregation
+# ---------------------------------------------------------------------------
+
+def test_stats_latency_aggregates():
+    s = EngineStats()
+    s.record_first_token(0.010, 4)
+    s.record_first_token(0.030, 8)
+    s.record_completion(5, 10, 18, 1.0, 1.8)  # itl = 2 rounds, 0.2s/token
+    s.record_completion(1, 3, 3)              # single token: no itl sample
+    s.slot_steps, s.wasted_slot_steps = 100, 25
+    snap = s.snapshot()
+    assert snap["ttft_s_mean"] == pytest.approx(0.020)
+    assert snap["ttft_rounds_mean"] == pytest.approx(6.0)
+    assert snap["ttft_s_p95"] == pytest.approx(0.030)
+    assert snap["itl_rounds_mean"] == pytest.approx(2.0)
+    assert snap["itl_s_mean"] == pytest.approx(0.2)
+    assert snap["wasted_slot_fraction"] == pytest.approx(0.25)
+    assert "ttft_s" not in snap              # raw lists stay off the wire

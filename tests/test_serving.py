@@ -1,7 +1,11 @@
-"""Serving engine v2: batched prefill + continuous batching must reproduce
-the single-request path exactly (greedy), across cache kinds (RNN state /
-KV / MLA latent / SSD state / hybrid), admission orders, mid-stream
-admissions, slot reuse, and chunked prefill."""
+"""Serving engine v4 (the superstep): continuous batching with in-loop
+prefill, sampling and re-admission must reproduce the single-request path
+exactly (greedy), across cache kinds (RNN state / KV / MLA latent / SSD
+state / hybrid), admission orders, mid-stream admissions, slot reuse and
+long prompts.  ``generate_one`` drives the prompt through the same
+``lm.decode_step`` path the superstep uses, so greedy parity is
+bit-exact; the parallel ``lm.prefill`` keeps its own padding-invariance
+contract (and argmax-matches the sequential path) below."""
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +43,27 @@ def test_engine_matches_single_request(arch):
     outs = engine.run_to_completion()
     for rid, ref in zip(rids, singles):
         assert outs[rid] == ref, (outs[rid], ref)
+
+
+def test_generate_one_matches_parallel_prefill():
+    """The sequential reference (prompt via decode_step) must agree with
+    the parallel-prefill path on greedy streams: the two prompt paths are
+    the same recurrence evaluated in different associativity orders, so
+    logits agree to fp32 rounding and argmax streams coincide."""
+    for arch in ("mingru-lm", "minlstm-lm", "gemma-2b"):
+        cfg, params = _setup(arch)
+        for prompt in ([1, 2, 3, 4], [7, 5, 3], [2] * 9):
+            seq = generate_one(cfg, params, prompt, max_new=6,
+                               max_len=MAX_LEN)
+            logits, cache = lm.prefill(
+                params, cfg, jnp.asarray([prompt], jnp.int32), MAX_LEN)
+            par = [int(np.asarray(logits)[0, :cfg.vocab_size].argmax())]
+            for _ in range(5):
+                logits, cache = lm.decode_step(
+                    params, cfg, jnp.asarray([par[-1]], jnp.int32), cache)
+                par.append(int(np.asarray(logits)[0,
+                                                  :cfg.vocab_size].argmax()))
+            assert seq == par, (arch, prompt, seq, par)
 
 
 @pytest.mark.parametrize("arch", ["mingru-lm", "gemma-2b"])
@@ -86,7 +111,7 @@ def test_engine_queueing_more_requests_than_slots():
     assert set(outs) == set(rids)
     assert all(len(o) == 4 for o in outs.values())
     assert engine.stats.completed == 5
-    assert engine.stats.queue_peak >= 3
+    assert engine.stats.queue_peak >= 1        # staging absorbs 2x batch
 
 
 def test_engine_eos_stops_early_and_slot_is_reused():
@@ -123,35 +148,48 @@ def test_engine_slot_reuse_after_eos_matches_reference():
 
 
 # ---------------------------------------------------------------------------
-# Chunked prefill
+# Long prompts prefill inside the decode loop (no phase, no barrier)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("chunk", [4, 8])
-def test_engine_chunked_prefill_matches_unchunked(chunk):
+def test_engine_long_prompts_prefill_in_loop():
+    """Mixed long/short prompts: every prompt token is consumed by the
+    superstep itself (teacher-forced rounds) and streams still match the
+    single-request reference."""
     cfg, params = _setup("mingru-lm")
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(1, 200, size=n)) for n in (19, 7, 26, 3)]
     refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
             for p in prompts]
     engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
-                           prefill_chunk=chunk)
+                           decode_block=4)
     rids = [engine.submit(p, max_new=6) for p in prompts]
     outs = engine.run_to_completion()
     for rid, ref in zip(rids, refs):
         assert outs[rid] == ref, (outs[rid], ref)
-    # the 26-token prompt must actually have been chunked
-    assert engine.stats.prefill_calls > 2
+    assert engine.stats.prefill_tokens == sum(len(p) for p in prompts)
 
 
-def test_chunked_prefill_rejected_for_kv_archs():
-    cfg, params = _setup("gemma-2b")
-    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
-                           prefill_chunk=4)
-    # falls back to whole-prompt prefill rather than erroring
-    rid = engine.submit([1, 2, 3, 4, 5, 6, 7, 8, 9, 10], max_new=4)
-    ref = generate_one(cfg, params, [1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
-                       max_new=4, max_len=MAX_LEN)
-    assert engine.run_to_completion()[rid] == ref
+def test_engine_long_prompt_does_not_block_short_requests():
+    """A long prompt occupies one row while short requests admitted later
+    decode to completion beside it -- there is no prefill barrier."""
+    cfg, params = _setup("mingru-lm")
+    rng = np.random.default_rng(1)
+    long_p = list(rng.integers(1, 200, size=40))
+    shorts = [[1, 2, 3], [4, 5]]
+    refs = [generate_one(cfg, params, p, max_new=5, max_len=MAX_LEN)
+            for p in [long_p] + shorts]
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN,
+                           decode_block=4)
+    rids = [engine.submit(long_p, max_new=5)]
+    engine.step()
+    rids += [engine.submit(p, max_new=5) for p in shorts]
+    for _ in range(4):
+        engine.step()                       # 5 steps x K=4 = 20 rounds
+    # shorts (len 3+5, 2+5 rounds) are done; the 40-token prompt is not
+    assert engine.finished and rids[0] not in engine.finished
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
 
 
 def test_prefill_resume_raises_for_unsupported_arch():
@@ -162,7 +200,8 @@ def test_prefill_resume_raises_for_unsupported_arch():
 
 
 # ---------------------------------------------------------------------------
-# Batched-prefill padding invariance (the correctness core of v2)
+# Batched-prefill padding invariance (the parallel-path contract; training
+# and batch eval use lm.prefill even though serving now steps the prompt)
 # ---------------------------------------------------------------------------
 
 def _prefill_rows_vs_single(arch, prompts, exact):
@@ -235,40 +274,19 @@ def test_property_padding_invariance_mingru(seed):
 
 
 # ---------------------------------------------------------------------------
-# Sampled decoding through the engine
+# Sampled decoding / limits / stats through the engine
 # ---------------------------------------------------------------------------
 
-def test_engine_non_pow2_max_len_long_prompt():
-    """Prompt longer than the largest pow2 bucket below max_len: the pad
-    bucket must clamp to max_len or KV seeding underflows its pad width."""
+def test_engine_prompt_near_max_len():
+    """A prompt near max_len must fit the per-slot staging buffer and
+    prefill correctly through the superstep (KV arch: cache row writes
+    beyond the prompt must stay invisible)."""
     cfg, params = _setup("gemma-2b")
-    prompt = list(np.arange(1, 66))             # 65 > bucket 64, max_len 100
+    prompt = list(np.arange(1, 66))             # 65 tokens, max_len 100
     ref = generate_one(cfg, params, prompt, max_new=5, max_len=100)
     engine = ServingEngine(cfg, params, max_batch=1, max_len=100)
     rid = engine.submit(prompt, max_new=5)
     assert engine.run_to_completion()[rid] == ref
-
-
-def test_engine_short_requests_admitted_during_long_cohort():
-    """A long chunked prefill must not head-of-line-block short prompts
-    when slots are idle."""
-    cfg, params = _setup("mingru-lm")
-    rng = np.random.default_rng(1)
-    long_p = list(rng.integers(1, 200, size=40))
-    shorts = [[1, 2, 3], [4, 5]]
-    refs = [generate_one(cfg, params, p, max_new=5, max_len=MAX_LEN)
-            for p in [long_p] + shorts]
-    engine = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN,
-                           prefill_chunk=4)
-    rids = [engine.submit(long_p, max_new=5)]
-    engine.step()                               # long prompt becomes cohort
-    rids += [engine.submit(p, max_new=5) for p in shorts]
-    engine.step()
-    # shorts are decoding while the 40-token prompt still prefills
-    assert len(engine.active) == 2 and engine._cohort
-    outs = engine.run_to_completion()
-    for rid, ref in zip(rids, refs):
-        assert outs[rid] == ref, (outs[rid], ref)
 
 
 def test_engine_sampled_requests_reproducible_and_in_vocab():
@@ -299,15 +317,24 @@ def test_engine_rejects_oversized_request():
 
 def test_engine_stats_accounting():
     cfg, params = _setup("mingru-lm")
-    engine = ServingEngine(cfg, params, max_batch=2, max_len=32)
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                           decode_block=2)
     engine.submit([1, 2, 3, 4], max_new=4)
     engine.submit([5, 6], max_new=4)
     outs = engine.run_to_completion()
     s = engine.stats
-    assert s.prefill_tokens == 6                 # true tokens, no padding
-    assert s.padded_prefill_tokens >= s.prefill_tokens
-    assert s.decode_tokens == sum(len(o) for o in outs.values()) - 2
+    assert s.prefill_tokens == 6                 # prompt tokens, in-loop
+    assert s.decode_tokens == sum(len(o) for o in outs.values()) == 8
     assert s.completed == s.submitted == 2
+    # every slot-round is prefill, emission, waste -- or both prefill and
+    # emission in the round that consumes the last prompt token
+    n_first = 2
+    assert s.slot_steps == (s.prefill_tokens + s.decode_tokens - n_first
+                            + s.wasted_slot_steps)
+    assert len(s.ttft_s) == len(s.ttft_rounds) == 2
+    # ttft in rounds = prompt length (one teacher-forced round per token)
+    assert sorted(s.ttft_rounds) == [2, 4]
     snap = s.snapshot()
     assert snap["tokens_per_second"] > 0
-    assert snap["padding_overhead"] >= 1.0
+    assert 0.0 <= snap["wasted_slot_fraction"] < 1.0
+    assert snap["itl_rounds_mean"] == 1.0        # back-to-back rounds
