@@ -25,8 +25,9 @@ bench-train:     ## train-step tokens/s across scan strategies -> BENCH_train.js
 bench-decode:    ## decode tokens/s per decode-block size K -> BENCH_decode.json
 	PYTHONPATH=src python -m benchmarks.engine_throughput --decode
 
-bench-serve:     ## mixed arrival-trace: per-phase vs superstep -> BENCH_serve.json
-	PYTHONPATH=src python -m benchmarks.engine_throughput --mixed
+bench-serve:     ## mixed arrival-trace: per-phase vs superstep, prompt-chunk sweep -> BENCH_serve.json
+	PYTHONPATH=src python -m benchmarks.engine_throughput --mixed \
+		--prompt-chunks 1 4 16
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -14,8 +14,13 @@ Three scenarios:
     the PR 3 *per-phase* engine (admission prefill barrier -> K-token
     decode buffer -> retire at buffer end) and (b) the same trace under
     the superstep loop (prefill rides the decode rounds, dead rows
-    re-arm in-loop), both on the shared structural latency model --
-    plus the REAL superstep engine replaying the trace for wall-clock.
+    re-arm in-loop) swept over ``--prompt-chunks`` C values (packed
+    prefill: a prefilling row consumes up to C prompt tokens per weight
+    stream -- C=1 is the unpacked PR 4 row, the full-config entry is
+    the weight-bound metric packing exists to move past 1.0x), both on
+    the shared structural latency model -- plus the REAL superstep
+    engine replaying the trace at every C for wall-clock, with greedy
+    streams asserted bit-identical across chunk sizes.
     Writes BENCH_serve.json (``--tiny`` -> BENCH_serve.tiny.json).
 
 Structural latency model (shared with the decode bench, mirroring
@@ -366,11 +371,17 @@ def simulate_per_phase(trace, batch: int, k: int, t_step: float, rt: float):
     return emitted, t
 
 
-def simulate_superstep(trace, batch: int, k: int, t_step: float, rt: float):
+def simulate_superstep(trace, batch: int, k: int, t_step: float, rt: float,
+                       prompt_chunk: int = 1):
     """Round-level simulation of the superstep engine: staging between
     calls, in-loop arming, teacher-forced prompt consumption riding the
-    decode rounds (one prompt token per round), immediate re-admission.
-    Returns (generated_tokens, virtual_seconds)."""
+    decode rounds, immediate re-admission.  A prefilling slot consumes
+    ``min(prompt_chunk, prompt_left)`` tokens per round (the packed-
+    prefill branch; 1 = the unpacked PR 4 behaviour); each round still
+    costs one weight stream -- activations are negligible next to the
+    weights at serving batch sizes, which is exactly why packing wins
+    the weight-bound regime.  Returns (generated_tokens,
+    virtual_seconds)."""
     pending = list(trace)
     slots: List[Optional[dict]] = [None] * batch
     staged: List[Optional[dict]] = [None] * batch
@@ -397,10 +408,12 @@ def simulate_superstep(trace, batch: int, k: int, t_step: float, rt: float):
                 s = slots[i]
                 if s is None:
                     continue
-                if s["p"] > 1:
-                    s["p"] -= 1             # teacher-forced prompt round
-                    continue
-                s["p"] = 0                  # last prompt round emits too
+                if s["p"] > 0:
+                    s["p"] -= min(prompt_chunk, s["p"])   # packed prefill
+                    if s["p"] > 0:
+                        continue            # prompt straddles the chunk
+                # reached the last prompt token (or already decoding):
+                # this round emits
                 s["rem"] -= 1
                 emitted += 1
                 if s["rem"] <= 0:
@@ -413,12 +426,13 @@ def _trace_prompt(i: int, n: int):
 
 
 def replay_real_engine(cfg, params, trace, batch: int, k: int,
-                       max_len: int = 160):
+                       max_len: int = 160, prompt_chunk: int = 1):
     """Run the actual superstep engine over the arrival trace (arrival
-    clock = engine device rounds) and return its stats snapshot.  Greedy
-    streams are spot-checked bit-identical to ``generate_one``."""
+    clock = engine device rounds) and return (stats snapshot, greedy
+    streams by trace index).  Greedy streams are spot-checked
+    bit-identical to ``generate_one``."""
     engine = ServingEngine(cfg, params, max_batch=batch, max_len=max_len,
-                           decode_block=k)
+                           decode_block=k, prompt_chunk=prompt_chunk)
     rids = []
     replay_trace(engine, trace, lambda i, r: rids.append(engine.submit(
         _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
@@ -432,67 +446,118 @@ def replay_real_engine(cfg, params, trace, batch: int, k: int,
             max_len=max_len)
         if engine.finished[rids[j]].out != ref:
             raise SystemExit(
-                f"greedy stream mismatch vs generate_one for request {j}")
-    return engine.stats.snapshot()
+                f"greedy stream mismatch vs generate_one for request {j} "
+                f"at prompt_chunk={prompt_chunk}")
+    outs = [engine.finished[rid].out for rid in rids]
+    return engine.stats.snapshot(), outs
+
+
+_REAL_ENGINE_KEYS = (
+    "decode_tokens_per_second", "tokens_per_second", "decode_tokens",
+    "prefill_tokens", "prefill_rounds", "decode_calls", "slot_steps",
+    "wasted_slot_steps", "wasted_slot_fraction",
+    "host_roundtrips_per_decode_token", "ttft_rounds_mean", "ttft_s_mean",
+    "ttft_s_p95", "itl_s_mean", "itl_rounds_mean", "queue_peak",
+    "prompt_chunk")
 
 
 def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
-                out_path: str = "BENCH_serve.json"):
+                chunks=(1, 4, 16), out_path: str = "BENCH_serve.json"):
+    """Arrival-trace scenario with a ``--prompt-chunk`` sweep: for each C
+    the superstep simulator (smoke + full-config weight bytes) runs
+    against the shared per-phase baseline, and the REAL engine replays
+    the trace.  Greedy streams must be bit-identical across every C --
+    packing may only change *when* prompt tokens are consumed, never
+    what gets generated."""
     cfg = archs.smoke(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     trace = make_trace(n_requests, batch)
     t_step = decode_weight_bytes_per_step(cfg) / (NOMINAL_HBM_GBPS * 1e9)
     rt = NOMINAL_ROUNDTRIP_US * 1e-6
+    chunks = sorted({max(1, int(c)) for c in chunks} | {1})
     header(f"mixed arrival-trace serving {arch}: {n_requests} reqs, "
-           f"batch={batch}, K={k}, backend={jax.default_backend()}")
+           f"batch={batch}, K={k}, prompt chunks {chunks}, "
+           f"backend={jax.default_backend()}")
 
-    tok_pp, t_pp = simulate_per_phase(trace, batch, k, t_step, rt)
-    tok_ss, t_ss = simulate_superstep(trace, batch, k, t_step, rt)
-    tps_pp, tps_ss = tok_pp / t_pp, tok_ss / t_ss
-    assert tok_pp == tok_ss == sum(r["max_new"] for r in trace)
-    speedup = tps_ss / tps_pp
-    row(f"serve_per_phase_k{k}", t_pp * 1e6, f"{tps_pp:.0f} tok/s structural")
-    row(f"serve_superstep_k{k}", t_ss * 1e6, f"{tps_ss:.0f} tok/s structural")
-    row(f"serve_speedup_k{k}", 0.0,
-        f"{speedup:.2f}x superstep/per-phase structural")
-
-    # the same structural comparison at the full (non-smoke) config,
-    # where the weight stream dominates the round-trip
     full = archs.get(arch)
     t_step_full = (decode_weight_bytes_per_step(full)
                    / (NOMINAL_HBM_GBPS * 1e9))
-    tok_pp_f, t_pp_f = simulate_per_phase(trace, batch, k, t_step_full, rt)
-    tok_ss_f, t_ss_f = simulate_superstep(trace, batch, k, t_step_full, rt)
-    speedup_full = (tok_ss_f / t_ss_f) / (tok_pp_f / t_pp_f)
-    row(f"serve_speedup_full_k{k}", 0.0,
-        f"{speedup_full:.2f}x at full-config weight bytes")
+    n_expect = sum(r["max_new"] for r in trace)
 
-    snap = replay_real_engine(cfg, params, trace, batch, k)
-    row(f"serve_wallclock_k{k}",
-        snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
-        f"{snap['decode_tokens_per_second']:.1f} decode tok/s wall;"
-        f"waste {snap['wasted_slot_fraction']:.1%};"
-        f"ttft {snap['ttft_rounds_mean']:.1f} rounds")
+    tok_pp, t_pp = simulate_per_phase(trace, batch, k, t_step, rt)
+    tok_pp_f, t_pp_f = simulate_per_phase(trace, batch, k, t_step_full, rt)
+    tps_pp = tok_pp / t_pp
+    tps_pp_f = tok_pp_f / t_pp_f
+    assert tok_pp == tok_pp_f == n_expect
+    row(f"serve_per_phase_k{k}", t_pp * 1e6, f"{tps_pp:.0f} tok/s structural")
+
+    per_chunk = {}
+    outs_by_chunk = {}
+    for c in chunks:
+        tok_ss, t_ss = simulate_superstep(trace, batch, k, t_step, rt,
+                                          prompt_chunk=c)
+        tok_ss_f, t_ss_f = simulate_superstep(trace, batch, k, t_step_full,
+                                              rt, prompt_chunk=c)
+        assert tok_ss == tok_ss_f == n_expect
+        tps_ss = tok_ss / t_ss
+        speedup = tps_ss / tps_pp
+        speedup_full = (tok_ss_f / t_ss_f) / tps_pp_f
+        snap, outs = replay_real_engine(cfg, params, trace, batch, k,
+                                        prompt_chunk=c)
+        outs_by_chunk[c] = outs
+        per_chunk[str(c)] = {
+            "prompt_chunk": c,
+            "superstep_tokens_per_s_structural": tps_ss,
+            "speedup_structural": speedup,
+            "speedup_structural_full_config": speedup_full,
+            "real_engine": {key: snap[key] for key in _REAL_ENGINE_KEYS},
+        }
+        row(f"serve_superstep_k{k}_c{c}", t_ss * 1e6,
+            f"{tps_ss:.0f} tok/s structural;{speedup:.2f}x small;"
+            f"{speedup_full:.2f}x full-config")
+        row(f"serve_wallclock_k{k}_c{c}",
+            snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
+            f"{snap['decode_tokens_per_second']:.1f} decode tok/s wall;"
+            f"waste {snap['wasted_slot_fraction']:.1%};"
+            f"ttft {snap['ttft_rounds_mean']:.1f} rounds")
+
+    # packing must not change WHAT is generated, for any chunk size
+    for c in chunks[1:]:
+        if outs_by_chunk[c] != outs_by_chunk[chunks[0]]:
+            raise SystemExit(
+                f"greedy stream mismatch between prompt_chunk="
+                f"{chunks[0]} and prompt_chunk={c}")
+
+    best_c = max(chunks, key=lambda c: per_chunk[str(c)][
+        "speedup_structural_full_config"])
+    best = per_chunk[str(best_c)]
+    row(f"serve_speedup_k{k}", 0.0,
+        f"{per_chunk['1']['speedup_structural']:.2f}x small-config C=1;"
+        f"{best['speedup_structural_full_config']:.2f}x full-config "
+        f"C={best_c}")
 
     payload = {
         "arch": arch,
         "batch": batch,
         "n_requests": n_requests,
         "decode_block": k,
+        "prompt_chunks": per_chunk,
         "nominal_hbm_gbps": NOMINAL_HBM_GBPS,
         "nominal_roundtrip_us": NOMINAL_ROUNDTRIP_US,
-        "trace_generated_tokens": tok_ss,
+        "trace_generated_tokens": n_expect,
         "per_phase_tokens_per_s_structural": tps_pp,
-        "superstep_tokens_per_s_structural": tps_ss,
-        "speedup_structural": speedup,
-        "speedup_structural_full_config": speedup_full,
-        "real_engine": {key: snap[key] for key in (
-            "decode_tokens_per_second", "tokens_per_second",
-            "decode_tokens", "prefill_tokens", "decode_calls",
-            "slot_steps", "wasted_slot_steps", "wasted_slot_fraction",
-            "host_roundtrips_per_decode_token", "ttft_rounds_mean",
-            "ttft_s_mean", "ttft_s_p95", "itl_s_mean",
-            "itl_rounds_mean", "queue_peak")},
+        # trajectory continuity: the C=1 rows keep their PR 4 meaning
+        "superstep_tokens_per_s_structural":
+            per_chunk["1"]["superstep_tokens_per_s_structural"],
+        "speedup_structural": per_chunk["1"]["speedup_structural"],
+        # the packed headline: best-chunk full-config speedup (the PR 4
+        # regression this sweep exists to erase was 0.91 at C=1)
+        "speedup_structural_full_config":
+            best["speedup_structural_full_config"],
+        "speedup_structural_full_config_unpacked":
+            per_chunk["1"]["speedup_structural_full_config"],
+        "prompt_chunk_best": best_c,
+        "real_engine": per_chunk[str(best_c)]["real_engine"],
     }
     dump_json(out_path, payload)
     return payload
@@ -517,6 +582,10 @@ def main(argv=None):
     ap.add_argument("--decode-blocks", type=int, nargs="*", default=None,
                     help="decode block sizes K; 1 is the per-token "
                          "baseline row (--mixed uses only the largest)")
+    ap.add_argument("--prompt-chunks", type=int, nargs="*", default=None,
+                    help="--mixed: prompt-packing chunk sizes C to sweep "
+                         "(1 is always included as the unpacked baseline "
+                         "row; default 1 4 16, tiny 1 4)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny workload -> BENCH_*.tiny.json "
                          "(never clobbers the tracked trajectory)")
@@ -524,11 +593,13 @@ def main(argv=None):
     if args.mixed:
         n_req = args.n_requests or (32 if args.tiny else 96)
         k = max(args.decode_blocks) if args.decode_blocks else 8
+        chunks = args.prompt_chunks or ([1, 4] if args.tiny else [1, 4, 16])
         if args.tiny:
             args.batches = [min(4, max(args.batches))]
         out = args.out or ("BENCH_serve.tiny.json" if args.tiny
                            else "BENCH_serve.json")
-        bench_mixed(args.arch, max(args.batches), n_req, k, out_path=out)
+        bench_mixed(args.arch, max(args.batches), n_req, k, chunks=chunks,
+                    out_path=out)
         return
     if args.decode:
         n_req = args.n_requests or (4 if args.tiny else 16)

@@ -80,6 +80,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--decode-block", type=int, default=4,
                     help="device rounds per host round-trip (K)")
+    ap.add_argument("--prompt-chunk", type=int, default=1,
+                    help="prompt tokens a prefilling slot consumes per "
+                         "device round (C): packed prefill streams the "
+                         "weights once per C prompt tokens (1 = unpacked)")
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="replay a synthetic N-request arrival trace "
                          "instead of the fixed prompt list")
@@ -88,7 +92,8 @@ def main(argv=None):
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
-                           decode_block=args.decode_block)
+                           decode_block=args.decode_block,
+                           prompt_chunk=args.prompt_chunk)
 
     if args.trace:
         outs, dt = run_trace(engine, args.trace)
@@ -97,7 +102,9 @@ def main(argv=None):
     n = sum(len(o) for o in outs.values())
     print(f"{len(outs)} requests, {n} tokens, {n / dt:.1f} tok/s")
     snap = engine.stats.snapshot()
-    print(f"prefill tokens (in-loop): {snap['prefill_tokens']}, "
+    print(f"prefill tokens (in-loop): {snap['prefill_tokens']} "
+          f"over {snap['prefill_rounds']} rounds "
+          f"(C={args.prompt_chunk}), "
           f"decode rounds: {snap['decode_steps']} in "
           f"{snap['decode_calls']} host round-trips "
           f"(K={args.decode_block}, "

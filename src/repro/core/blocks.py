@@ -187,6 +187,60 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
     return x_t, new_state
 
 
+def _conv_chunk(p, y, window, valid):
+    """Varlen chunked causal conv: a ``lax.scan`` of ``causal_conv_step``
+    over the chunk axis -- the same per-token einsum as single-token
+    decode (bit-exact where ``causal_conv_apply``'s unrolled slide-add
+    schedule is not), with row b's carried window frozen once ``t >=
+    valid[b]``.  y: (B, C, D), window: (B, K-1, D), valid: (B,) int32."""
+
+    def body(win, inp):
+        y_t, t = inp
+        out, win_new = nn.causal_conv_step(p, y_t, win)
+        win = jnp.where((t < valid)[:, None, None], win_new, win)
+        return win, out
+
+    win, outs = jax.lax.scan(
+        body, window, (jnp.moveaxis(y, 1, 0), jnp.arange(y.shape[1])))
+    return jnp.moveaxis(outs, 0, 1), win
+
+
+def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
+               compute_dtype=None, scan_strategy: Optional[str] = None):
+    """Packed varlen decode chunk of one block.  x: (B, C, d_model),
+    valid: (B,) int32 in [1, C] -> ((B, C, d_model), new state).
+
+    The serving superstep's prompt-packing form of :func:`step`: row b
+    consumes its first ``valid[b]`` positions with per-token arithmetic
+    identical to ``valid[b]`` sequential ``step`` calls (norm / conv /
+    down / MLP are causal or positionwise, and the cell rides
+    ``step_chunk``'s masked sequential recurrence -- one weight stream
+    per chunk under the fused strategy), and its carried (conv window,
+    h) state freezes at ``valid[b]``.  Positions >= ``valid[b]`` hold
+    garbage the caller must mask (the superstep reads position
+    ``valid[b]-1`` only)."""
+    if scan_strategy is None:
+        scan_strategy = cfg.scan_strategy
+    cell = _CELLS[cfg.cell]
+    y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
+    new_state = dict(state)
+    if cfg.use_conv:
+        y, new_state["conv"] = _conv_chunk(params["conv"], y,
+                                           state["conv"], valid)
+    hs = cell.step_chunk(params["rnn"], y, state["h"], valid,
+                         mode=cfg.mode, compute_dtype=compute_dtype,
+                         scan_strategy=scan_strategy)
+    new_state["h"] = hs[:, -1]          # frozen rows: == hs[:, valid-1]
+    y = nn.dense_apply(params["down"], hs, compute_dtype)
+    x = x + y
+    if cfg.use_mlp:
+        y = nn.norm_apply(cfg.norm, params["norm_mlp"], x)
+        y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
+        y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
+        x = x + y
+    return x, new_state
+
+
 def _dropout(x, rate, rng, deterministic):
     if deterministic or rate == 0.0 or rng is None:
         return x

@@ -147,15 +147,57 @@ def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
     return (1.0 - z) * h_prev + z * h_tilde
 
 
+def _fused_step_args(params, x: Array, compute_dtype):
+    """Shared fused-path prep: extract wz/bz/wh/bh and apply the
+    compute-dtype cast (to x and every weight/bias) in one place for the
+    step and chunk dispatchers."""
+    wz, wh = params["wz"]["kernel"], params["wh"]["kernel"]
+    bz, bh = params["wz"].get("bias"), params["wh"].get("bias")
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        wz, wh = wz.astype(compute_dtype), wh.astype(compute_dtype)
+        bz = None if bz is None else bz.astype(compute_dtype)
+        bh = None if bh is None else bh.astype(compute_dtype)
+    return x, wz, bz, wh, bh
+
+
 def _fused_step(params, x_t: Array, h_prev: Array, *, mode: str,
                 compute_dtype=None) -> Array:
     """Whole cell step in one Pallas call (kernels/decode_step)."""
     from repro.kernels.decode_step import ops as step_ops
-    wz, wh = params["wz"]["kernel"], params["wh"]["kernel"]
-    bz, bh = params["wz"].get("bias"), params["wh"].get("bias")
-    if compute_dtype is not None:
-        x_t = x_t.astype(compute_dtype)
-        wz, wh = wz.astype(compute_dtype), wh.astype(compute_dtype)
-        bz = None if bz is None else bz.astype(compute_dtype)
-        bh = None if bh is None else bh.astype(compute_dtype)
+    x_t, wz, bz, wh, bh = _fused_step_args(params, x_t, compute_dtype)
     return step_ops.fused_mingru_step(x_t, wz, bz, wh, bh, h_prev, mode=mode)
+
+
+def step_chunk(params, x: Array, h_prev: Array, valid: Array, *,
+               mode: str = "log", compute_dtype=None,
+               scan_strategy: Optional[str] = None) -> Array:
+    """Packed varlen decode chunk: x: (..., C, d_in), h_prev: (...,
+    d_hidden), valid: (...,) int32 in [1, C] -> hs: (..., C, d_hidden).
+
+    Row b advances through its first ``valid[b]`` tokens with the *exact*
+    per-token arithmetic of :func:`step` and freezes after (positions >=
+    ``valid[b]-1`` all hold the final state, so ``hs[..., -1, :]`` is the
+    carry).  ``scan_strategy`` mirrors ``step``'s contract:
+    ``"auto"``/``"fused"`` run the whole chunk in one Pallas call
+    (``kernels/decode_step`` chunk kernels -- the gate weights stream
+    from HBM once for the whole chunk, the serving prompt-packing win);
+    anything else is the pure-jnp masked sequential reference.
+    """
+    if scan_strategy is not None and \
+            scan_lib.resolve_strategy(scan_strategy) == "fused":
+        from repro.kernels.decode_step import ops as step_ops
+        x, wz, bz, wh, bh = _fused_step_args(params, x, compute_dtype)
+        return step_ops.fused_mingru_chunk(x, wz, bz, wh, bh, h_prev,
+                                           valid, mode=mode)
+
+    def body(h, inp):
+        x_t, t = inp
+        h_new = step(params, x_t, h, mode=mode, compute_dtype=compute_dtype)
+        h = jnp.where((t < valid)[..., None], h_new, h).astype(h.dtype)
+        return h, h
+
+    _, hs = jax.lax.scan(
+        body, h_prev,
+        (jnp.moveaxis(x, -2, 0), jnp.arange(x.shape[-2])))
+    return jnp.moveaxis(hs, 0, -2)

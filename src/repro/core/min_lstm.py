@@ -162,17 +162,53 @@ def step(params, x_t: Array, h_prev: Array, *, mode: str = "log",
     return f * h_prev + i * h_tilde
 
 
+def _fused_step_args(params, x: Array, compute_dtype):
+    """Shared fused-path prep: extract wf/bf/wi/bi/wh/bh and apply the
+    compute-dtype cast (to x and every weight/bias) in one place for the
+    step and chunk dispatchers."""
+    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
+    bs = [params[k].get("bias") for k in ("wf", "wi", "wh")]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        ws = [w.astype(compute_dtype) for w in ws]
+        bs = [None if b is None else b.astype(compute_dtype) for b in bs]
+    return (x,) + tuple(ws) + tuple(bs)
+
+
 def _fused_step(params, x_t: Array, h_prev: Array, *, mode: str,
                 normalize: bool, compute_dtype=None) -> Array:
     """Whole cell step in one Pallas call (kernels/decode_step)."""
     from repro.kernels.decode_step import ops as step_ops
-    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
-    bs = [params[k].get("bias") for k in ("wf", "wi", "wh")]
-    if compute_dtype is not None:
-        x_t = x_t.astype(compute_dtype)
-        ws = [w.astype(compute_dtype) for w in ws]
-        bs = [None if b is None else b.astype(compute_dtype) for b in bs]
-    wf, wi, wh = ws
-    bf, bi, bh = bs
+    x_t, wf, wi, wh, bf, bi, bh = _fused_step_args(params, x_t,
+                                                   compute_dtype)
     return step_ops.fused_minlstm_step(x_t, wf, bf, wi, bi, wh, bh, h_prev,
                                        mode=mode, normalize=normalize)
+
+
+def step_chunk(params, x: Array, h_prev: Array, valid: Array, *,
+               mode: str = "log", normalize: bool = True,
+               compute_dtype=None,
+               scan_strategy: Optional[str] = None) -> Array:
+    """Packed varlen decode chunk; contract as ``min_gru.step_chunk``
+    (``"auto"``/``"fused"`` -> one Pallas chunk call with the weights
+    streamed once, else the pure-jnp masked sequential reference)."""
+    if scan_strategy is not None and \
+            scan_lib.resolve_strategy(scan_strategy) == "fused":
+        from repro.kernels.decode_step import ops as step_ops
+        x, wf, wi, wh, bf, bi, bh = _fused_step_args(params, x,
+                                                     compute_dtype)
+        return step_ops.fused_minlstm_chunk(x, wf, bf, wi, bi, wh, bh,
+                                            h_prev, valid, mode=mode,
+                                            normalize=normalize)
+
+    def body(h, inp):
+        x_t, t = inp
+        h_new = step(params, x_t, h, mode=mode, normalize=normalize,
+                     compute_dtype=compute_dtype)
+        h = jnp.where((t < valid)[..., None], h_new, h).astype(h.dtype)
+        return h, h
+
+    _, hs = jax.lax.scan(
+        body, h_prev,
+        (jnp.moveaxis(x, -2, 0), jnp.arange(x.shape[-2])))
+    return jnp.moveaxis(hs, 0, -2)

@@ -97,3 +97,84 @@ def fused_minlstm_step(x: jax.Array, wf: jax.Array, bf: Optional[jax.Array],
         return out[:b, :dh]
 
     return call_with_flat_lead(run, (x, 1), (h_prev, 1))
+
+
+# ---------------------------------------------------------------------------
+# Variable-length packed-prefill chunks (the superstep prompt-packing path)
+# ---------------------------------------------------------------------------
+
+def _chunk_pad(xf, hf, valid):
+    """Shared chunk-wrapper padding: (B, C, Dx) -> time-major (C, B8,
+    Dx128) plus padded h/valid (padded rows get valid=0, freezing them at
+    their zero h0 -- sliced off on the way out)."""
+    xp, b = pad_to(xf, _SUBLANES, 0)
+    xp, _ = pad_to(xp, _LANES, 2)
+    hp, _ = pad_to(hf, _SUBLANES, 0)
+    vp, _ = pad_to(valid.astype(jnp.int32)[:, None], _SUBLANES, 0)
+    return jnp.swapaxes(xp, 0, 1), hp, vp, b
+
+
+def fused_mingru_chunk(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
+                       wh: jax.Array, bh: Optional[jax.Array],
+                       h_prev: jax.Array, valid: jax.Array, *,
+                       mode: str = "log", block_dh: int = 128,
+                       interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """Packed varlen minGRU chunk in one Pallas call: weights stream from
+    HBM once for up to C prompt tokens.  x: (..., C, Dx), h_prev:
+    (..., Dh), valid: (...,) int32 in [1, C] -> hs: (..., C, Dh); row b
+    freezes at ``valid[b]`` so ``hs[..., valid-1, :]`` onward is its final
+    state.  Bit-identical to ``valid[b]`` sequential ``fused_mingru_step``
+    calls (the packed superstep's C=1 parity contract rides on this)."""
+    dh = wz.shape[1]
+    if bz is None:
+        bz = jnp.zeros((dh,), x.dtype)
+    if bh is None:
+        bh = jnp.zeros((dh,), x.dtype)
+
+    def run(xf, hf, vf):
+        chunk = xf.shape[1]
+        xp, hp, vp, b = _chunk_pad(xf, hf, vf)
+        wzp, _ = pad_to(pad_to(wz, _LANES, 0)[0], block_dh, 1)
+        whp, _ = pad_to(pad_to(wh, _LANES, 0)[0], block_dh, 1)
+        bzp, _ = pad_to(bz, block_dh, 0)
+        bhp, _ = pad_to(bh, block_dh, 0)
+        hp, _ = pad_to(hp, block_dh, 1)
+        out = _kernel.mingru_chunk_kernel(xp, wzp, bzp, whp, bhp, hp, vp,
+                                          block_dh=block_dh, mode=mode,
+                                          interpret=interpret)
+        return jnp.swapaxes(out, 0, 1)[:b, :chunk, :dh]
+
+    return call_with_flat_lead(run, (x, 2), (h_prev, 1), (valid, 0))
+
+
+def fused_minlstm_chunk(x: jax.Array, wf: jax.Array, bf: Optional[jax.Array],
+                        wi: jax.Array, bi: Optional[jax.Array],
+                        wh: jax.Array, bh: Optional[jax.Array],
+                        h_prev: jax.Array, valid: jax.Array, *,
+                        mode: str = "log", normalize: bool = True,
+                        block_dh: int = 128,
+                        interpret: bool = DEFAULT_INTERPRET) -> jax.Array:
+    """Packed varlen minLSTM chunk; contract as :func:`fused_mingru_chunk`
+    (bit-identical to sequential ``fused_minlstm_step`` calls)."""
+    dh = wf.shape[1]
+    if bf is None:
+        bf = jnp.zeros((dh,), x.dtype)
+    if bi is None:
+        bi = jnp.zeros((dh,), x.dtype)
+    if bh is None:
+        bh = jnp.zeros((dh,), x.dtype)
+
+    def run(xf, hf, vf):
+        chunk = xf.shape[1]
+        xp, hp, vp, b = _chunk_pad(xf, hf, vf)
+        ws = [pad_to(pad_to(w, _LANES, 0)[0], block_dh, 1)[0]
+              for w in (wf, wi, wh)]
+        bs = [pad_to(b_, block_dh, 0)[0] for b_ in (bf, bi, bh)]
+        hp, _ = pad_to(hp, block_dh, 1)
+        out = _kernel.minlstm_chunk_kernel(
+            xp, ws[0], bs[0], ws[1], bs[1], ws[2], bs[2], hp, vp,
+            block_dh=block_dh, mode=mode, normalize=normalize,
+            interpret=interpret)
+        return jnp.swapaxes(out, 0, 1)[:b, :chunk, :dh]
+
+    return call_with_flat_lead(run, (x, 2), (h_prev, 1), (valid, 0))

@@ -39,3 +39,39 @@ def minlstm_step_ref(x, wf, bf, wi, bi, wh, bh, h_prev, *,
     h_tilde = nn.g(v) if mode == "log" else v
     h = f * h_prev.astype(jnp.float32) + i * h_tilde
     return h.astype(x.dtype)
+
+
+def _chunk_scan(step_one, x, h_prev, valid):
+    """Shared varlen chunk recurrence: apply ``step_one`` per token and
+    freeze row b once ``t >= valid[b]`` (the frozen h is re-emitted, so
+    every position >= valid-1 holds the row's final state)."""
+    chunk = x.shape[1]
+
+    def body(h, inp):
+        x_t, t = inp
+        h_new = step_one(x_t, h)
+        h = jnp.where((t < valid)[:, None], h_new, h).astype(h.dtype)
+        return h, h
+
+    _, hs = jax.lax.scan(
+        body, h_prev, (jnp.moveaxis(x, 1, 0), jnp.arange(chunk)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def mingru_chunk_ref(x, wz, bz, wh, bh, h_prev, valid, *,
+                     mode: str = "log"):
+    """Varlen chunk oracle.  x: (B, C, Dx), h_prev: (B, Dh), valid: (B,)
+    int32 in [1, C] -> hs: (B, C, Dh): ``valid[b]`` masked sequential
+    ``mingru_step_ref`` updates, rows frozen beyond their valid length."""
+    return _chunk_scan(
+        lambda x_t, h: mingru_step_ref(x_t, wz, bz, wh, bh, h, mode=mode),
+        x, h_prev, valid)
+
+
+def minlstm_chunk_ref(x, wf, bf, wi, bi, wh, bh, h_prev, valid, *,
+                      mode: str = "log", normalize: bool = True):
+    """Varlen chunk oracle, minLSTM.  Shapes as :func:`mingru_chunk_ref`."""
+    return _chunk_scan(
+        lambda x_t, h: minlstm_step_ref(x_t, wf, bf, wi, bi, wh, bh, h,
+                                        mode=mode, normalize=normalize),
+        x, h_prev, valid)

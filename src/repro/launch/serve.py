@@ -46,6 +46,11 @@ def main(argv=None):
                     help="device rounds per host round-trip (K): one "
                          "superstep runs K token-select/step/sample/"
                          "re-admit rounds on device per engine.step()")
+    ap.add_argument("--prompt-chunk", type=int, default=1,
+                    help="prompt tokens a prefilling slot consumes per "
+                         "device round (C): packed prefill amortises one "
+                         "weight stream over C prompt tokens (minGRU/"
+                         "minLSTM archs only; 1 = unpacked)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -61,7 +66,8 @@ def main(argv=None):
 
     engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                            max_len=args.max_len, seed=args.seed,
-                           decode_block=args.decode_block)
+                           decode_block=args.decode_block,
+                           prompt_chunk=args.prompt_chunk)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
@@ -78,12 +84,13 @@ def main(argv=None):
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()
-    print(f"superstep K={args.decode_block}: "
+    print(f"superstep K={args.decode_block} C={args.prompt_chunk}: "
           f"{snap['decode_calls']} host round-trips for "
           f"{snap['decode_tokens']} decoded tokens "
           f"({snap['host_roundtrips_per_decode_token']:.3f} "
           f"round-trips/token); "
-          f"{snap['prefill_tokens']} prompt tokens prefilled in-loop; "
+          f"{snap['prefill_tokens']} prompt tokens prefilled in-loop "
+          f"over {snap['prefill_rounds']} packed rounds; "
           f"wasted slot steps: {snap['wasted_slot_steps']} "
           f"({snap['wasted_slot_fraction']:.1%} of slot steps)")
     print(f"latency: ttft mean {snap['ttft_s_mean'] * 1e3:.1f}ms "

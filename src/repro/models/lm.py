@@ -500,6 +500,65 @@ def _minrnn_decode(params, cfg, x, cache):
     return _iterate(cfg, body, x, (params["layers"]["blocks"], scanned))
 
 
+def supports_prompt_packing(cfg) -> bool:
+    """True when the superstep can consume C > 1 prompt tokens per round
+    (``decode_chunk``): requires the whole decode state to be a constant-
+    size recurrence, i.e. the paper's minRNN family -- same condition as
+    chunked prefill."""
+    return supports_chunked_prefill(cfg)
+
+
+def decode_chunk(params, cfg, tokens: Array, valid: Array,
+                 cache: Dict[str, Any]) -> Tuple[Array, Dict[str, Any]]:
+    """Packed varlen step: tokens (B, C), valid (B,) int32 in [1, C] ->
+    (logits (B, V) at each row's position ``valid[b]-1``, new cache).
+
+    The prompt-packing core: row b consumes its first ``valid[b]`` tokens
+    in one device round -- per-token arithmetic identical to ``valid[b]``
+    sequential ``decode_step`` calls (the cell rides the fused Pallas
+    chunk kernels under ``scan_strategy="auto"``, streaming each layer's
+    weights from HBM once per chunk instead of once per token), with the
+    recurrent state frozen per-row at ``valid[b]``.  Logits (final norm +
+    unembed) are computed once per row at its last valid position, not C
+    times.  Only recurrence-cached archs can do this
+    (``supports_prompt_packing``); KV/SSD caches would need per-position
+    cache scatter."""
+    if cfg.block_kind != "minrnn":
+        raise NotImplementedError(
+            f"packed decode_chunk requires a constant-size recurrent "
+            f"state (block_kind='minrnn'), got {cfg.block_kind!r}")
+    bc = _minrnn_block_cfg(cfg)
+    x = params["embed"]["table"].astype(cfg.cdtype)[tokens]   # (B, C, D)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+
+    def body(carry, scanned):
+        p_l, cache_l = scanned
+        state = {"h": cache_l["h"]}
+        if bc.use_conv:
+            state["conv"] = cache_l["conv"]
+        y, state = minrnn_blocks.step_chunk(p_l, bc, carry, state, valid,
+                                            compute_dtype=cfg.cdtype)
+        out_c = {"h": state["h"]}
+        if bc.use_conv:
+            out_c["conv"] = state["conv"]
+        return y, out_c
+
+    scanned = {"h": cache["h"]}
+    if bc.use_conv:
+        scanned["conv"] = cache["conv"]
+    x, outs = _iterate(cfg, body, x, (params["layers"]["blocks"], scanned))
+
+    new_cache = dict(cache)
+    new_cache.update(outs)
+    x_last = nn.gather_last(x, valid)                 # (B, D) at valid-1
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    x_last = nn.norm_apply(cfg.norm, params["final_norm"], x_last, **nk)
+    logits = _logits(params, cfg, x_last)
+    new_cache["pos"] = cache["pos"] + valid.astype(jnp.int32)
+    return logits, new_cache
+
+
 # ===========================================================================
 # Superstep: unified prefill + decode + sampling + re-admission on device
 # ===========================================================================
@@ -529,9 +588,11 @@ def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0
         sampling controls ``temperature`` / ``top_k`` / ``top_p``;
       * ``alive``       -- slot has a request in flight (prefilling or
         decoding);
-      * ``keys``        -- per-*slot* PRNG keys (slot-persistent: they
-        advance every device round, independent of which request
-        occupies the row);
+      * ``keys``        -- per-*slot* PRNG keys (slot-persistent and
+        emission-aligned: a row's key advances only on rounds it emits,
+        so a request's k-th output token uses the k-th key in its
+        slot's chain regardless of ``prompt_chunk`` or how many
+        teacher-forced rounds its prompt took);
       * staging buffer  -- ``s_*`` mirrors of the request fields plus
         ``s_valid``: the host parks the next queued request here and the
         scan body arms it into the row the moment the row goes dead.
@@ -583,7 +644,8 @@ _ARM_FIELDS = ("prompt_len", "rid", "remaining", "eos", "temperature",
                "top_k", "top_p")
 
 
-def superstep(params, cfg, state: Dict[str, Any], n: int):
+def superstep(params, cfg, state: Dict[str, Any], n: int, *,
+              prompt_chunk: int = 1):
     """Run ``n`` rounds of the unified serving loop entirely on device.
 
     ONE ``lax.scan`` whose body is, for every slot simultaneously:
@@ -592,17 +654,27 @@ def superstep(params, cfg, state: Dict[str, Any], n: int):
          recurrent cache rows zeroed, ``pos``/``prompt_pos`` reset,
          request fields swapped in from the ``s_*`` staging buffer;
       2. **token select** -- prefilling rows (``prompt_pos <
-         prompt_len``) consume their next prompt token, decoding rows
-         feed back their last sampled token;
+         prompt_len``) consume their next prompt token (the next *C*
+         prompt tokens when ``prompt_chunk=C > 1``), decoding rows feed
+         back their last sampled token;
       3. **fused block step** -- one ``decode_step`` for the whole
          batch: prefilling and decoding rows ride the same fused Pallas
-         cell kernel in the same round;
-      4. **sample-or-teacher-force** -- every row samples (keys advance
-         every round for every slot), but only rows whose logits are
-         real output logits emit: decoding rows, and prefilling rows
-         that just consumed their *last* prompt token (their sample is
-         the request's first output token).  Teacher-forced rows
-         discard the sample and emit -1;
+         cell kernel in the same round.  Under ``prompt_chunk=C > 1``
+         this is ``decode_chunk`` instead: prefilling rows advance
+         through up to C prompt tokens via the masked varlen chunk
+         kernels (one weight stream amortised over C prompt tokens --
+         the weight-bound-regime packing win) while decoding and dead
+         rows ride the same call with a valid length of 1; emitted
+         greedy and seeded streams are bit-exact with the C=1 path;
+      4. **sample-or-teacher-force** -- every row samples, but only
+         rows whose logits are real output logits emit: decoding rows,
+         and prefilling rows whose round reached their *last* prompt
+         token (their sample is the request's first output token).
+         Keys advance only on rows that emit, so a request's k-th
+         output token uses the k-th key in its slot's chain regardless
+         of ``prompt_chunk`` -- seeded streams are bit-exact across C
+         for a given slot assignment.  Teacher-forced rows discard the
+         sample and emit -1;
       5. **EOS / retire** -- emitting rows that hit their stop token or
          length cap go dead; the next round's step 1 re-arms them from
          staging with zero idle rounds.
@@ -611,20 +683,30 @@ def superstep(params, cfg, state: Dict[str, Any], n: int):
     with -1 at non-emitting positions, ``rids`` (B, n) int32 tagging
     each emitted token with its request id (one row may emit for two
     requests within a single call), the advanced slot state, and
-    ``counters`` with ``prefill_steps`` (prompt tokens consumed) and
+    ``counters`` with ``prefill_steps`` (prompt tokens consumed -- up to
+    C per slot-round when packing), ``prefill_rounds`` (slot-rounds
+    spent prefilling; equals ``prefill_steps`` at C=1) and
     ``wasted_slot_steps`` (rows stepped while dead with nothing staged
     -- the idle waste this loop exists to eliminate; rows keep stepping
     regardless so the batch stays dense and shapes stay static).
 
-    ``n`` must be static (the engine jits one program per block size).
+    ``n`` and ``prompt_chunk`` must be static (the engine jits one
+    program per block size); ``prompt_chunk > 1`` requires
+    ``supports_prompt_packing(cfg)``.
     """
     from repro.serving import sampling
 
+    if prompt_chunk > 1 and not supports_prompt_packing(cfg):
+        raise NotImplementedError(
+            f"prompt_chunk={prompt_chunk} requires a recurrent-state arch "
+            f"(block_kind='minrnn'), got block_kind={cfg.block_kind!r}")
+
     batch = state["tok"].shape[0]
     p_cap = state["prompt"].shape[1]
+    chunk = int(prompt_chunk)
 
     def body(carry, _):
-        st, prefill_ct, waste_ct = carry
+        st, prefill_ct, round_ct, waste_ct = carry
         st = dict(st)
 
         # 1. re-admission from the staging buffer
@@ -641,21 +723,57 @@ def superstep(params, cfg, state: Dict[str, Any], n: int):
         waste_ct = waste_ct + jnp.sum(
             jnp.logical_not(alive).astype(jnp.int32))
         prefilling = alive & (st["prompt_pos"] < st["prompt_len"])
-        prefill_ct = prefill_ct + jnp.sum(prefilling.astype(jnp.int32))
+        round_ct = round_ct + jnp.sum(prefilling.astype(jnp.int32))
 
-        # 2. per-slot token select
-        nxt = st["prompt"][jnp.arange(batch),
-                           jnp.clip(st["prompt_pos"], 0, p_cap - 1)]
-        in_tok = jnp.where(prefilling, nxt, st["tok"])
+        if chunk == 1:
+            take = prefilling.astype(jnp.int32)
+            prefill_ct = prefill_ct + jnp.sum(take)
 
-        # 3. fused block step, all rows in one batch
-        logits, st["cache"] = decode_step(params, cfg, in_tok, st["cache"])
+            # 2. per-slot token select
+            nxt = st["prompt"][jnp.arange(batch),
+                               jnp.clip(st["prompt_pos"], 0, p_cap - 1)]
+            in_tok = jnp.where(prefilling, nxt, st["tok"])
+
+            # 3. fused block step, all rows in one batch
+            logits, st["cache"] = decode_step(params, cfg, in_tok,
+                                              st["cache"])
+        else:
+            # 2. packed token select: up to C prompt tokens per
+            # prefilling row, the fed-back sample for decoding rows
+            left = st["prompt_len"] - st["prompt_pos"]
+            take = jnp.where(prefilling,
+                             jnp.minimum(left, chunk), 0).astype(jnp.int32)
+            prefill_ct = prefill_ct + jnp.sum(take)
+            valid = jnp.maximum(take, 1)        # non-prefilling rows: 1
+
+            # 3. packed varlen block step, all rows in one batch -- but
+            # only when some row is actually prefilling: steady-state
+            # decode-only rounds take the plain single-token step (the
+            # exact C=1 program) instead of paying the C-wide chunk
+            # compute for 1 useful token per row
+            def packed_step(cache):
+                idx = st["prompt_pos"][:, None] + jnp.arange(chunk)[None]
+                gathered = jnp.take_along_axis(
+                    st["prompt"], jnp.clip(idx, 0, p_cap - 1), axis=1)
+                tok_blk = jnp.where(prefilling[:, None], gathered,
+                                    st["tok"][:, None])
+                return decode_chunk(params, cfg, tok_blk, valid, cache)
+
+            def plain_step(cache):
+                # no prefilling rows: valid == 1 everywhere, so this is
+                # bit-identical state-wise (pos + 1, one token per row)
+                return decode_step(params, cfg, st["tok"], cache)
+
+            logits, st["cache"] = lax.cond(jnp.any(prefilling),
+                                           packed_step, plain_step,
+                                           st["cache"])
 
         # 4. sample-or-teacher-force
-        toks, st["keys"] = sampling.sample_tokens(
+        toks, new_keys = sampling.sample_tokens(
             logits, st["keys"], st["temperature"], st["top_k"], st["top_p"])
-        pos_next = st["prompt_pos"] + prefilling.astype(jnp.int32)
+        pos_next = st["prompt_pos"] + take
         emitting = alive & (pos_next >= st["prompt_len"])
+        st["keys"] = jnp.where(emitting[:, None], new_keys, st["keys"])
         emit = jnp.where(emitting, toks, jnp.int32(-1))
         emit_rid = jnp.where(emitting, st["rid"], jnp.int32(-1))
 
@@ -666,12 +784,13 @@ def superstep(params, cfg, state: Dict[str, Any], n: int):
         st["alive"] = alive & jnp.logical_not(died)
         st["tok"] = jnp.where(emitting, toks, st["tok"])
         st["prompt_pos"] = pos_next
-        return (st, prefill_ct, waste_ct), (emit, emit_rid)
+        return (st, prefill_ct, round_ct, waste_ct), (emit, emit_rid)
 
     zero = jnp.zeros((), jnp.int32)
-    (state, prefill_ct, waste_ct), (emitted, rids) = lax.scan(
-        body, (state, zero, zero), None, length=n)
+    (state, prefill_ct, round_ct, waste_ct), (emitted, rids) = lax.scan(
+        body, (state, zero, zero, zero), None, length=n)
     counters = {"prefill_steps": prefill_ct,
+                "prefill_rounds": round_ct,
                 "wasted_slot_steps": waste_ct}
     return (jnp.swapaxes(emitted, 0, 1), jnp.swapaxes(rids, 0, 1),
             state, counters)

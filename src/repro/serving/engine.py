@@ -19,10 +19,15 @@ Per engine ``step()``:
     their next prompt token (teacher forcing) and decoding rows feed
     back their last sample, through the SAME ``lm.decode_step`` -- and
     therefore the same fused Pallas cell kernel (``kernels/decode_step``
-    under the default ``scan_strategy="auto"``) -- in the same round.  A
-    row that hits EOS or its length cap is re-armed from its staging
-    buffer on the *next device round*, with zero idle rounds and no
-    host involvement;
+    under the default ``scan_strategy="auto"``) -- in the same round.
+    With ``prompt_chunk=C > 1`` (recurrent-state archs only) a
+    prefilling row instead consumes up to C prompt tokens per round via
+    the masked varlen chunk kernels (``lm.decode_chunk``): one weight
+    stream per round amortises over C prompt tokens, winning back the
+    weight-bound regime where one-token-per-round sequential prefill
+    loses to the old parallel-prefill engine.  A row that hits EOS or
+    its length cap is re-armed from its staging buffer on the *next
+    device round*, with zero idle rounds and no host involvement;
   * the host drains the returned ``(B, K)`` token + request-id buffers
     (the rid plane demuxes rows that served two requests in one call),
     retires finished requests, and restocks staging.
@@ -85,17 +90,28 @@ _STAGE_FIELDS = ("s_valid", "s_prompt", "s_prompt_len", "s_rid",
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 2048, seed: int = 0,
-                 decode_block: int = 1):
+                 decode_block: int = 1, prompt_chunk: int = 1):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         # K = device rounds per host round-trip (lm.superstep scan length)
         self.decode_block = max(1, int(decode_block))
+        # C = prompt tokens consumed per round by a prefilling row: the
+        # superstep's packed-prefill branch (weight-bound regime win --
+        # one weight stream amortises over C prompt tokens).  Emission
+        # stays <= 1 token per slot-round, so the (B, K) drain buffers
+        # and greedy streams are identical across C.
+        self.prompt_chunk = max(1, int(prompt_chunk))
+        if self.prompt_chunk > 1 and not lm.supports_prompt_packing(cfg):
+            raise ValueError(
+                f"prompt_chunk={self.prompt_chunk} requires a recurrent-"
+                f"state arch (block_kind='minrnn'); "
+                f"{cfg.name} has block_kind={cfg.block_kind!r}")
         self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed)
 
         self.scheduler = FifoScheduler(SchedulerConfig(max_batch=max_batch))
-        self.stats = EngineStats()
+        self.stats = EngineStats(prompt_chunk=self.prompt_chunk)
         self._next_rid = 0
         # host mirrors of slot occupancy: the request currently armed in
         # each row, and the request parked in each row's staging buffer
@@ -143,15 +159,20 @@ class ServingEngine:
         """Upper bound on device rounds until this row frees up (0 for an
         idle row).  Drives staging placement: within one staging round,
         earlier-submitted requests park behind sooner-to-free rows.
-        This is greedy per call, not a global ordering guarantee --
-        arrivals in a *later* round can still land on a row that frees
-        up before an earlier request's row does; strict FIFO holds for
-        staging order (``admit_seq``), not start order."""
+        Prompt consumption is packed ``prompt_chunk`` tokens per round,
+        so the prefill term is ``ceil(prompt_left / C)`` rounds -- the
+        one-round-per-token estimate would mis-rank staging targets by
+        up to C once packing is on.  This is greedy per call, not a
+        global ordering guarantee -- arrivals in a *later* round can
+        still land on a row that frees up before an earlier request's
+        row does; strict FIFO holds for staging order (``admit_seq``),
+        not start order."""
         req = self.current[slot]
         if req is None:
             return 0
         prompt_left = len(req.prompt) if not req.out else 0
-        return prompt_left + req.max_new - len(req.out)
+        prompt_rounds = -(-prompt_left // self.prompt_chunk)
+        return prompt_rounds + req.max_new - len(req.out)
 
     def _stage(self):
         """Park queued requests into empty staging buffers, strict FIFO.
@@ -209,8 +230,9 @@ class ServingEngine:
     def _superstep_fn(self, n: int):
         fn = self._superstep_fns.get(n)
         if fn is None:
-            cfg = self.cfg
-            fn = jax.jit(lambda p, s: lm.superstep(p, cfg, s, n))
+            cfg, chunk = self.cfg, self.prompt_chunk
+            fn = jax.jit(lambda p, s: lm.superstep(p, cfg, s, n,
+                                                   prompt_chunk=chunk))
             self._superstep_fns[n] = fn
         return fn
 
@@ -259,6 +281,7 @@ class ServingEngine:
         self.stats.decode_steps += k
         self.stats.slot_steps += k * self.max_batch
         self.stats.prefill_tokens += int(counters["prefill_steps"])
+        self.stats.prefill_rounds += int(counters["prefill_rounds"])
         self.stats.wasted_slot_steps += int(counters["wasted_slot_steps"])
 
         now = time.perf_counter()

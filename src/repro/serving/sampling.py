@@ -16,14 +16,18 @@ Semantics (matching the common serving stacks):
     reaches ``top_p`` (nucleus sampling); ``top_p >= 1`` disables it.
 
 All controls are traced arrays, so one compiled program serves any mix of
-greedy / sampled slots.  Keys advance every call (`jax.random.split` per
-slot), making runs reproducible under a fixed engine seed.
+greedy / sampled slots.  ``sample_tokens`` returns advanced keys
+(`jax.random.split` per slot), making runs reproducible under a fixed
+engine seed.
 
 ``lm.superstep`` calls this every device round for every slot --
 including teacher-forced (prefilling) rows, whose sample is masked out
-rather than skipped, so the compiled round is branch-free and the
-per-slot key schedule depends only on round count, not on request
-phase.
+rather than skipped, so the compiled round is branch-free.  The
+superstep keeps the returned key only for rows that *emit* that round:
+a request's k-th output token always uses the k-th key in its slot's
+chain, however many teacher-forced (and, under packed prefill,
+multi-token) rounds interleave -- which is what makes seeded streams
+bit-exact across ``prompt_chunk`` values.
 """
 
 from __future__ import annotations

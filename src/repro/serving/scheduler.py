@@ -65,9 +65,14 @@ class EngineStats:
     counts the rows that were stepped while dead with nothing staged
     (the idle waste in-loop re-admission exists to eliminate;
     ``snapshot()['wasted_slot_fraction']`` is the trajectory metric).
-    ``prefill_tokens`` counts prompt tokens consumed on device (one per
-    prefilling row-round).  Timers wrap the device calls including host
-    sync, so tokens-per-second is an end-to-end number.
+    ``prefill_tokens`` counts prompt tokens consumed on device (up to
+    ``prompt_chunk`` per prefilling row-round under packed prefill) and
+    ``prefill_rounds`` the slot-rounds spent prefilling (== tokens at
+    C=1); the exact slot-step identity under any C is ``slot_steps ==
+    prefill_rounds + decode_tokens - first_token_overlaps +
+    wasted_slot_steps`` (a request's first token rides its final prefill
+    round).  Timers wrap the device calls including host sync, so
+    tokens-per-second is an end-to-end number.
 
     Per-request latency: ``ttft_s`` / ``ttft_rounds`` measure submit ->
     first token (wall clock at host drain granularity, and exact device
@@ -79,10 +84,12 @@ class EngineStats:
     means a scheduler/preemption change started inserting idle rounds
     into running streams.
     """
+    prompt_chunk: int = 1
     submitted: int = 0
     admitted: int = 0
     completed: int = 0
     prefill_tokens: int = 0
+    prefill_rounds: int = 0
     decode_tokens: int = 0
     decode_steps: int = 0
     decode_calls: int = 0

@@ -138,7 +138,11 @@ def _decoding_state(cfg, cache, tok0, keys, controls_np):
 
 def _loop_reference(cfg, params, tok, cache, keys, controls_np, n):
     """Host re-implementation of the superstep's decode contract: step +
-    sample every round, emit only while alive, stop on EOS / length cap."""
+    sample every round, emit only while alive, stop on EOS / length cap.
+    Keys are emission-aligned: a slot's key advances only on rounds it
+    emits (here: while alive), so sampled streams are invariant to how
+    many teacher-forced/dead rounds interleave -- the property that makes
+    packed-prefill seeded streams bit-exact across prompt_chunk."""
     step_fn = jax.jit(lambda p, t, c: lm.decode_step(p, cfg, t, c))
     alive = controls_np["alive"].copy()
     remaining = controls_np["remaining"].copy()
@@ -146,10 +150,11 @@ def _loop_reference(cfg, params, tok, cache, keys, controls_np, n):
     tok = jnp.asarray(tok)
     for j in range(n):
         logits, cache = step_fn(params, tok, cache)
-        toks, keys = sampling.sample_tokens(
+        toks, new_keys = sampling.sample_tokens(
             logits, keys, jnp.asarray(controls_np["temperature"]),
             jnp.asarray(controls_np["top_k"]),
             jnp.asarray(controls_np["top_p"]))
+        keys = jnp.where(jnp.asarray(alive)[:, None], new_keys, keys)
         toks_np = np.asarray(toks)
         next_tok = np.asarray(tok).copy()
         for b in range(tok.shape[0]):

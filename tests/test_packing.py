@@ -1,0 +1,477 @@
+"""Prompt packing: C-token chunked prefill inside the superstep.
+
+The packed path (``prompt_chunk=C > 1``) may only change *when* prompt
+tokens are consumed -- never what gets generated.  The contract tested
+here, bottom-up:
+
+  * the varlen chunk kernels (``kernels/decode_step``) are bit-identical
+    to sequential fused step-kernel calls with per-row freezing, and
+    match their jnp oracles (``ref.py``);
+  * ``blocks.step_chunk`` / ``lm.decode_chunk`` are bit-identical to a
+    loop of ``blocks.step`` / ``lm.decode_step``;
+  * the packed superstep is bit-exact with the C=1 superstep -- greedy
+    AND seeded (keys are emission-aligned, so a request's k-th output
+    token uses the k-th key regardless of how many packed rounds its
+    prompt took);
+  * the engine under ``prompt_chunk`` keeps the ``generate_one`` parity
+    contract across odd prompt lengths straddling chunk boundaries,
+    prompts shorter than C, EOS + re-admission inside one packed round,
+    and exact slot-step/TTFT accounting.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.core import blocks, min_gru, min_lstm
+from repro.kernels.decode_step import ops as step_ops
+from repro.kernels.decode_step import ref as step_ref
+from repro.models import lm
+from repro.serving import sampling
+from repro.serving.engine import ServingEngine, generate_one
+
+MAX_LEN = 64
+
+
+def _setup(arch):
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Varlen chunk kernels: vs sequential fused steps (bitwise) and jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dx,dh,b,c", [(16, 32, 4, 4), (12, 13, 3, 5),
+                                       (48, 128, 5, 3)])
+def test_mingru_chunk_bitexact_vs_sequential_fused_steps(dx, dh, b, c):
+    params = min_gru.init(jax.random.PRNGKey(0), dx, dh)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, c, dx))
+    h0 = jax.random.normal(jax.random.PRNGKey(2), (b, dh))
+    valid = jnp.asarray(
+        np.random.default_rng(0).integers(1, c + 1, size=b), jnp.int32)
+    wz, wh = params["wz"]["kernel"], params["wh"]["kernel"]
+    bz, bh = params["wz"]["bias"], params["wh"]["bias"]
+    hs = step_ops.fused_mingru_chunk(x, wz, bz, wh, bh, h0, valid)
+    h = h0
+    for t in range(c):
+        h_new = step_ops.fused_mingru_step(x[:, t], wz, bz, wh, bh, h)
+        h = jnp.where((t < valid)[:, None], h_new, h)
+        np.testing.assert_array_equal(np.asarray(hs[:, t]), np.asarray(h),
+                                      err_msg=f"t={t}")
+    # frozen tail: position valid-1 onward all hold the final state
+    np.testing.assert_array_equal(np.asarray(hs[:, -1]), np.asarray(h))
+
+
+@pytest.mark.parametrize("dx,dh,b,c", [(16, 32, 4, 4), (10, 17, 3, 6)])
+def test_minlstm_chunk_bitexact_vs_sequential_fused_steps(dx, dh, b, c):
+    params = min_lstm.init(jax.random.PRNGKey(3), dx, dh)
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, c, dx))
+    h0 = jax.random.normal(jax.random.PRNGKey(5), (b, dh))
+    valid = jnp.asarray(
+        np.random.default_rng(1).integers(1, c + 1, size=b), jnp.int32)
+    ws = [params[k]["kernel"] for k in ("wf", "wi", "wh")]
+    bs = [params[k]["bias"] for k in ("wf", "wi", "wh")]
+    hs = step_ops.fused_minlstm_chunk(x, ws[0], bs[0], ws[1], bs[1],
+                                      ws[2], bs[2], h0, valid)
+    h = h0
+    for t in range(c):
+        h_new = step_ops.fused_minlstm_step(x[:, t], ws[0], bs[0], ws[1],
+                                            bs[1], ws[2], bs[2], h)
+        h = jnp.where((t < valid)[:, None], h_new, h)
+        np.testing.assert_array_equal(np.asarray(hs[:, t]), np.asarray(h),
+                                      err_msg=f"t={t}")
+
+
+def test_chunk_kernels_match_jnp_oracles():
+    dx, dh, b, c = 20, 50, 5, 4
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, c, dx)) * 0.5
+    h0 = jax.random.normal(jax.random.PRNGKey(7), (b, dh))
+    valid = jnp.asarray([1, 4, 2, 3, 4], jnp.int32)
+    wz = jax.random.normal(jax.random.PRNGKey(8), (dx, dh)) * 0.3
+    wh = jax.random.normal(jax.random.PRNGKey(9), (dx, dh)) * 0.3
+    bz = jax.random.normal(jax.random.PRNGKey(10), (dh,))
+    out = step_ops.fused_mingru_chunk(x, wz, bz, wh, None, h0, valid)
+    ref = step_ref.mingru_chunk_ref(x, wz, bz, wh, jnp.zeros((dh,)), h0,
+                                    valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    wi = jax.random.normal(jax.random.PRNGKey(11), (dx, dh)) * 0.3
+    out = step_ops.fused_minlstm_chunk(x, wz, bz, wi, None, wh, None, h0,
+                                       valid)
+    ref = step_ref.minlstm_chunk_ref(x, wz, bz, wi, jnp.zeros((dh,)), wh,
+                                     jnp.zeros((dh,)), h0, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+def test_cell_step_chunk_jnp_fallback_matches_looped_step(cell):
+    """The non-fused step_chunk path is the masked loop of the jnp step.
+    The scan body compiles once where the python loop compiles per call,
+    so XLA's fusion context differs -- identical arithmetic to ~1 ulp
+    (the fused kernel path, which serving uses, is the bitwise one)."""
+    mod = {"mingru": min_gru, "minlstm": min_lstm}[cell]
+    params = mod.init(jax.random.PRNGKey(12), 16, 24)
+    x = jax.random.normal(jax.random.PRNGKey(13), (3, 4, 16))
+    h0 = jax.random.normal(jax.random.PRNGKey(14), (3, 24))
+    valid = jnp.asarray([2, 4, 1], jnp.int32)
+    hs = mod.step_chunk(params, x, h0, valid, scan_strategy="sequential")
+    h = h0
+    for t in range(4):
+        h_new = mod.step(params, x[:, t], h)
+        h = jnp.where((t < valid)[:, None], h_new, h)
+        np.testing.assert_allclose(np.asarray(hs[:, t]), np.asarray(h),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Block / model level: chunk vs looped single-token step, bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+def test_block_step_chunk_bitexact_vs_looped_step(cell):
+    cfg = blocks.MinRNNBlockConfig(d_model=16, cell=cell, expansion=1.5,
+                                   use_conv=True, use_mlp=True)
+    params = blocks.init(jax.random.PRNGKey(15), cfg)
+    c = 5
+    x = jax.random.normal(jax.random.PRNGKey(16), (3, c, 16))
+    state0 = blocks.init_state(cfg, (3,))
+    valid = jnp.asarray([3, 5, 1], jnp.int32)
+    y_blk, s_blk = blocks.step_chunk(params, cfg, x, state0, valid)
+    # loop the single-token form, freezing each row at its valid length
+    state = state0
+    ys = []
+    for t in range(c):
+        y_t, s_new = blocks.step(params, cfg, x[:, t], state)
+        keep = (t < valid)
+        state = {k: jnp.where(keep.reshape((-1,) + (1,) * (v.ndim - 1)),
+                              s_new[k], state[k]) for k, v in state.items()}
+        ys.append(y_t)
+    np.testing.assert_array_equal(np.asarray(s_blk["h"]),
+                                  np.asarray(state["h"]))
+    np.testing.assert_array_equal(np.asarray(s_blk["conv"]),
+                                  np.asarray(state["conv"]))
+    # per-row outputs at valid positions match the loop bit-exactly
+    for b in range(3):
+        for t in range(int(valid[b])):
+            np.testing.assert_array_equal(np.asarray(y_blk[b, t]),
+                                          np.asarray(ys[t][b]),
+                                          err_msg=f"b={b} t={t}")
+
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+def test_decode_chunk_matches_looped_decode_step(arch):
+    """Full-model chunk vs a loop of ``decode_step``: position counters
+    exact, recurrent state and last-valid-position logits identical to
+    fp32 rounding with exact argmax (the two are the same per-token
+    arithmetic compiled in different fusion contexts -- interpret-mode
+    Pallas inlines into the surrounding jit, so a whole-program diff of
+    ~1 ulp is the compilation artifact, not reassociation; the stream-
+    level bit-exactness contract is pinned by the engine tests below)."""
+    cfg, params = _setup(arch)
+    c, bsz = 4, 3
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(1, 200, size=(bsz, c)), jnp.int32)
+    valid = jnp.asarray([4, 1, 3], jnp.int32)
+    cache0 = lm.init_cache(cfg, bsz, MAX_LEN)
+    logits_c, cache_c = jax.jit(
+        lambda p, t, v, ca: lm.decode_chunk(p, cfg, t, v, ca))(
+            params, tokens, valid, cache0)
+    # loop decode_step per row up to its valid length
+    step = jax.jit(lambda p, t, ca: lm.decode_step(p, cfg, t, ca))
+    cache = cache0
+    last_logits = [None] * bsz
+    for t in range(c):
+        logits_t, cache_new = step(params, tokens[:, t], cache)
+        keep = (t < valid)
+        cache = {k: jnp.where(keep.reshape((1, -1) + (1,) * (v.ndim - 2))
+                              if k != "pos" else keep, cache_new[k],
+                              cache[k])
+                 for k, v in cache.items()}
+        for b in range(bsz):
+            if t == int(valid[b]) - 1:
+                last_logits[b] = logits_t[b]
+    np.testing.assert_array_equal(np.asarray(cache_c["pos"]),
+                                  np.asarray(cache["pos"]))
+    np.testing.assert_allclose(np.asarray(cache_c["h"]),
+                               np.asarray(cache["h"]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cache_c["conv"]),
+                               np.asarray(cache["conv"]),
+                               rtol=1e-6, atol=1e-6)
+    for b in range(bsz):
+        np.testing.assert_allclose(np.asarray(logits_c[b]),
+                                   np.asarray(last_logits[b]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"row {b}")
+        assert int(jnp.argmax(logits_c[b])) == \
+            int(jnp.argmax(last_logits[b]))
+
+
+def test_decode_chunk_rejects_non_recurrent_arch():
+    cfg, params = _setup("gemma-2b")
+    cache = lm.init_cache(cfg, 1, 32)
+    with pytest.raises(NotImplementedError):
+        lm.decode_chunk(params, cfg, jnp.asarray([[1, 2]], jnp.int32),
+                        jnp.asarray([2], jnp.int32), cache)
+    with pytest.raises(NotImplementedError):
+        lm.superstep(params, cfg, lm.init_slot_state(cfg, 1, 32), 2,
+                     prompt_chunk=4)
+    assert not lm.supports_prompt_packing(cfg)
+    assert lm.supports_prompt_packing(archs.smoke("mingru-lm"))
+
+
+# ---------------------------------------------------------------------------
+# Packed superstep vs C=1 superstep: bit-exact, greedy AND seeded
+# ---------------------------------------------------------------------------
+
+def _staged_state(cfg, prompts, max_new, bsz, *, seed=0, temperature=0.0,
+                  top_k=0, top_p=1.0):
+    """Slot state with ``prompts`` parked in the staging buffers."""
+    state = lm.init_slot_state(cfg, bsz, MAX_LEN, seed=seed)
+    for i, p in enumerate(prompts):
+        state["s_valid"] = state["s_valid"].at[i].set(True)
+        state["s_prompt"] = state["s_prompt"].at[i, :len(p)].set(
+            jnp.asarray(p, jnp.int32))
+        state["s_prompt_len"] = state["s_prompt_len"].at[i].set(len(p))
+        state["s_rid"] = state["s_rid"].at[i].set(i)
+        state["s_remaining"] = state["s_remaining"].at[i].set(max_new)
+        state["s_temperature"] = state["s_temperature"].at[i].set(
+            temperature)
+        state["s_top_k"] = state["s_top_k"].at[i].set(top_k)
+        state["s_top_p"] = state["s_top_p"].at[i].set(top_p)
+    return state
+
+
+def _streams(buf, rids):
+    out = {}
+    b, r = np.asarray(buf), np.asarray(rids)
+    for slot in range(b.shape[0]):
+        for j in range(b.shape[1]):
+            if r[slot, j] >= 0:
+                out.setdefault(int(r[slot, j]), []).append(int(b[slot, j]))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_packed_superstep_bitexact_vs_c1(arch, temperature):
+    """Prompts straddling the chunk (1, C-1, C, C+1, 2C+3 with C=4) --
+    every emitted stream, greedy or seeded, is bit-identical between the
+    packed and the unpacked superstep; counters stay consistent."""
+    cfg, params = _setup(arch)
+    prompts = [[7], [1, 2, 3], [1, 2, 3, 4], [5, 4, 3, 2, 1],
+               [2, 7, 1, 8, 2, 8, 1, 8, 2, 8, 4]]
+    max_new = 5
+    kw = dict(seed=3, temperature=temperature, top_k=20, top_p=0.95)
+
+    state1 = _staged_state(cfg, prompts, max_new, len(prompts), **kw)
+    n1 = max(len(p) for p in prompts) + max_new + 2
+    buf1, rid1, st1, ct1 = jax.jit(
+        lambda p, s: lm.superstep(p, cfg, s, n1))(params, state1)
+
+    state4 = _staged_state(cfg, prompts, max_new, len(prompts), **kw)
+    n4 = (max(len(p) for p in prompts) + 3) // 4 + max_new + 2
+    buf4, rid4, st4, ct4 = jax.jit(
+        lambda p, s: lm.superstep(p, cfg, s, n4,
+                                  prompt_chunk=4))(params, state4)
+
+    s1, s4 = _streams(buf1, rid1), _streams(buf4, rid4)
+    assert set(s1) == set(s4) == set(range(len(prompts)))
+    for rid in s1:
+        assert s1[rid] == s4[rid], (rid, s1[rid], s4[rid])
+    assert all(len(s) == max_new for s in s4.values())
+    assert int(ct1["prefill_steps"]) == int(ct4["prefill_steps"]) == \
+        sum(len(p) for p in prompts)
+    assert int(ct4["prefill_rounds"]) == \
+        sum(-(-len(p) // 4) for p in prompts)
+    assert int(ct1["prefill_rounds"]) == int(ct1["prefill_steps"])
+    # emission-aligned keys: final key state matches per slot once both
+    # paths have emitted the same tokens
+    np.testing.assert_array_equal(np.asarray(st1["keys"]),
+                                  np.asarray(st4["keys"]))
+
+
+def test_packed_superstep_prompt_shorter_than_chunk():
+    """A 2-token prompt under C=8 arms, prefills and emits its first
+    token in ONE packed round."""
+    cfg, params = _setup("mingru-lm")
+    state = _staged_state(cfg, [[5, 6]], 3, 1)
+    buf, rids, st, ct = lm.superstep(params, cfg, state, 1, prompt_chunk=8)
+    assert int(ct["prefill_steps"]) == 2
+    assert int(ct["prefill_rounds"]) == 1
+    assert int(np.asarray(rids)[0, 0]) == 0          # emitted round 0
+    ref = generate_one(cfg, params, [5, 6], max_new=1, max_len=MAX_LEN)
+    assert int(np.asarray(buf)[0, 0]) == ref[0]
+
+
+# ---------------------------------------------------------------------------
+# Engine under prompt_chunk: generate_one parity + edge cases + accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+@pytest.mark.parametrize("c", [2, 4])
+def test_engine_packed_matches_single_request(arch, c):
+    """Odd prompt lengths straddling the chunk boundary (1, C-1, C, C+1,
+    2C+3) under queue pressure: packed engine streams == generate_one."""
+    cfg, params = _setup(arch)
+    prompts = [[7], [1, 2, 3], [1, 2, 3, 4], [5, 4, 3, 2, 1],
+               [2, 7, 1, 8, 2, 8, 1, 8, 2, 8, 4]][:5]
+    prompts = [p for p in prompts
+               if len(p) in (1, c - 1, c, c + 1, 2 * c + 3)] or prompts
+    refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
+            for p in prompts]
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=3, prompt_chunk=c)
+    rids = [engine.submit(p, max_new=6) for p in prompts]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
+    assert engine.stats.prefill_tokens == sum(len(p) for p in prompts)
+
+
+def test_engine_packed_greedy_streams_identical_across_chunks():
+    """The acceptance contract: greedy streams are bit-exact across
+    --prompt-chunk values (packing changes when prompt tokens are
+    consumed, never what is generated)."""
+    cfg, params = _setup("mingru-lm")
+    rng = np.random.default_rng(4)
+    prompts = [list(rng.integers(1, 200, size=n))
+               for n in (19, 1, 7, 26, 3, 12)]
+    outs_by_c = {}
+    for c in (1, 2, 4, 16):
+        engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                               decode_block=4, prompt_chunk=c)
+        rids = [engine.submit(p, max_new=6) for p in prompts]
+        outs = engine.run_to_completion()
+        outs_by_c[c] = [outs[r] for r in rids]
+    for c in (2, 4, 16):
+        assert outs_by_c[c] == outs_by_c[1], f"chunk {c} diverged"
+
+
+def test_engine_packed_seeded_streams_identical_across_chunks():
+    """Emission-aligned keys make even SEEDED streams bit-exact across
+    chunk sizes (fixed request->slot assignment: all fit the batch)."""
+    cfg, params = _setup("mingru-lm")
+    prompts = [[1, 2, 3, 4, 5, 6, 7], [9, 8, 7], [2, 4, 6, 8, 10]]
+
+    def run(c):
+        engine = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                               seed=7, decode_block=4, prompt_chunk=c)
+        rids = [engine.submit(p, max_new=8, temperature=0.9, top_k=50,
+                              top_p=0.95) for p in prompts]
+        outs = engine.run_to_completion()
+        return [outs[r] for r in rids]
+
+    assert run(1) == run(2) == run(4)
+    assert run(4) == run(4)                     # and reproducible
+
+
+def test_engine_packed_eos_readmission_same_packed_round_with_waste():
+    """EOS mid-buffer under packing: the staged successor arms the next
+    round and prefills PACKED; slot-step accounting stays exact.  Mirrors
+    test_engine_block_decode_eos_readmits_in_same_buffer at C=4."""
+    cfg, params = _setup("mingru-lm")
+    eos_tok = generate_one(cfg, params, [1, 2, 3], max_new=2,
+                           max_len=MAX_LEN)[1]
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           prompt_chunk=4)
+    rid = engine.submit([1, 2, 3], max_new=16, eos=eos_tok)
+    engine.step(n_tokens=1)     # one packed round: 3 prompt toks + emit
+    assert engine.stats.prefill_tokens == 3
+    assert engine.stats.prefill_rounds == 1
+    ref = generate_one(cfg, params, [4, 5, 6, 7], max_new=6,
+                       max_len=MAX_LEN)
+    rid2 = engine.submit([4, 5, 6, 7], max_new=6)   # staged behind it
+    engine.step(n_tokens=12)
+    outs = engine.run_to_completion()
+    assert engine.stats.decode_calls == 2
+    n1 = len(outs[rid])
+    assert outs[rid][-1] == eos_tok and n1 <= 2
+    assert outs[rid2] == ref
+    # 13 rounds total: req1 = 1 packed prefill round + (n1 - 1) decode
+    # rounds; req2 arms next round = 1 packed prefill round + 5 decode
+    # rounds; the rest is tail waste
+    assert engine.stats.wasted_slot_steps == 13 - (1 + n1 - 1) - (1 + 5)
+    # slot-step identity, exact under C>1
+    s = engine.stats
+    assert s.slot_steps == s.prefill_rounds + s.decode_tokens \
+        - len(s.ttft_rounds) + s.wasted_slot_steps
+
+
+def test_engine_packed_stats_and_ttft_accounting():
+    cfg, params = _setup("mingru-lm")
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=32,
+                           decode_block=2, prompt_chunk=4)
+    engine.submit([1, 2, 3, 4, 5, 6, 7], max_new=4)   # ceil(7/4) = 2 rounds
+    engine.submit([5, 6], max_new=4)                  # ceil(2/4) = 1 round
+    outs = engine.run_to_completion()
+    s = engine.stats
+    assert s.prefill_tokens == 9
+    assert s.prefill_rounds == 3
+    assert s.decode_tokens == sum(len(o) for o in outs.values()) == 8
+    # ttft in rounds = packed prompt rounds, not prompt tokens
+    assert sorted(s.ttft_rounds) == [1, 2]
+    assert s.slot_steps == s.prefill_rounds + s.decode_tokens \
+        - len(s.ttft_rounds) + s.wasted_slot_steps
+    snap = s.snapshot()
+    assert snap["prompt_chunk"] == 4
+    assert snap["prefill_rounds"] == 3
+    assert 0.0 <= snap["wasted_slot_fraction"] < 1.0
+    assert snap["itl_rounds_mean"] == 1.0
+
+
+def test_engine_packed_long_prompt_does_not_block_short_requests():
+    """The no-barrier property survives packing: a long prompt packs its
+    prefill while neighbours decode to completion."""
+    cfg, params = _setup("mingru-lm")
+    rng = np.random.default_rng(5)
+    long_p = list(rng.integers(1, 200, size=40))
+    shorts = [[1, 2, 3], [4, 5]]
+    refs = [generate_one(cfg, params, p, max_new=5, max_len=MAX_LEN)
+            for p in [long_p] + shorts]
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN,
+                           decode_block=4, prompt_chunk=4)
+    rids = [engine.submit(long_p, max_new=5)]
+    engine.step()
+    rids += [engine.submit(p, max_new=5) for p in shorts]
+    outs = engine.run_to_completion()
+    for rid, ref in zip(rids, refs):
+        assert outs[rid] == ref, (outs[rid], ref)
+    # packed: the 40-token prompt took ceil(40/4) = 10 prefill rounds,
+    # not 40 -- visible in the request's TTFT rounds
+    assert min(engine.stats.ttft_rounds) >= 1
+    assert max(engine.stats.ttft_rounds) <= 12
+
+
+def test_engine_rejects_packing_for_unsupported_arch():
+    cfg, params = _setup("gemma-2b")
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, max_batch=1, max_len=32, prompt_chunk=4)
+    # C=1 keeps working for every arch
+    ServingEngine(cfg, params, max_batch=1, max_len=32, prompt_chunk=1)
+
+
+def test_row_eta_accounts_for_packed_prefill():
+    """The staging ETA divides remaining prompt rounds by C -- the
+    unpacked estimate would mis-rank rows by up to C."""
+    cfg, params = _setup("mingru-lm")
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           prompt_chunk=4)
+    engine.submit(list(range(1, 10)), max_new=5)      # 9 prompt tokens
+    engine.submit([1, 2], max_new=5)
+    engine._stage()
+    engine._upload_staging()
+    engine.step(n_tokens=1)     # arm both rows (1 packed round each)
+    # row 0: ceil(9-? ...) -- first round consumed 4 of 9 prompt tokens,
+    # host still sees the full prompt (no out yet): ceil(9/4)=3 + 5
+    assert engine._row_eta(0) == 3 + 5
+    # row 1: 2-token prompt emitted its first token in round 0
+    assert engine._row_eta(1) == 5 - len(engine.current[1].out)
+    # idle rows report 0
+    engine.run_to_completion()
+    assert engine._row_eta(0) == 0 and engine._row_eta(1) == 0
