@@ -4,7 +4,7 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-serving bench-engine bench-train bench-decode \
-	bench-serve example-serve
+	bench-serve bench-spec example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -28,6 +28,10 @@ bench-decode:    ## decode tokens/s per decode-block size K -> BENCH_decode.json
 bench-serve:     ## mixed arrival-trace: per-phase vs superstep, prompt-chunk sweep -> BENCH_serve.json
 	PYTHONPATH=src python -m benchmarks.engine_throughput --mixed \
 		--prompt-chunks 1 4 16
+
+bench-spec:      ## bench-serve + speculative (draft-length x chunk) sweep -> BENCH_serve.json
+	PYTHONPATH=src python -m benchmarks.engine_throughput --speculative \
+		--prompt-chunks 1 4 16 --draft-lens 2 4 8
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -22,6 +22,13 @@ Three scenarios:
     engine replaying the trace at every C for wall-clock, with greedy
     streams asserted bit-identical across chunk sizes.
     Writes BENCH_serve.json (``--tiny`` -> BENCH_serve.tiny.json).
+  * ``--speculative`` (implies ``--mixed``) -- the same trace replayed
+    under n-gram speculative decoding over the (prompt-chunk,
+    draft-length) grid: accept rate, inter-token latency in rounds, and
+    counter-derived structural decode tokens/s per row, greedy streams
+    asserted bit-identical to the non-speculative replays.  Multi-emit
+    shrinks device rounds per token, which is a speedup exactly where
+    rounds are the cost -- the round-trip-bound regime.
 
 Structural latency model (shared with the decode bench, mirroring
 train_throughput.py's convention): decode at serving batch sizes is
@@ -426,13 +433,15 @@ def _trace_prompt(i: int, n: int):
 
 
 def replay_real_engine(cfg, params, trace, batch: int, k: int,
-                       max_len: int = 160, prompt_chunk: int = 1):
+                       max_len: int = 160, prompt_chunk: int = 1,
+                       speculative=None, draft_len: int = 4):
     """Run the actual superstep engine over the arrival trace (arrival
     clock = engine device rounds) and return (stats snapshot, greedy
     streams by trace index).  Greedy streams are spot-checked
     bit-identical to ``generate_one``."""
     engine = ServingEngine(cfg, params, max_batch=batch, max_len=max_len,
-                           decode_block=k, prompt_chunk=prompt_chunk)
+                           decode_block=k, prompt_chunk=prompt_chunk,
+                           speculative=speculative, draft_len=draft_len)
     rids = []
     replay_trace(engine, trace, lambda i, r: rids.append(engine.submit(
         _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
@@ -447,28 +456,52 @@ def replay_real_engine(cfg, params, trace, batch: int, k: int,
         if engine.finished[rids[j]].out != ref:
             raise SystemExit(
                 f"greedy stream mismatch vs generate_one for request {j} "
-                f"at prompt_chunk={prompt_chunk}")
+                f"at prompt_chunk={prompt_chunk} "
+                f"speculative={speculative!r}")
     outs = [engine.finished[rid].out for rid in rids]
     return engine.stats.snapshot(), outs
 
 
+def structural_decode_tps_from_counters(snap, t_step: float,
+                                        rt: float) -> float:
+    """Structural decode tokens/s of a REAL replay: the counted device
+    rounds each stream the weights once (the varlen chunk kernels keep
+    one weight stream per round whatever the verify/prefill width) and
+    each host call pays one round-trip.  Speculation shrinks
+    ``decode_steps`` at fixed ``decode_tokens`` -- multi-emit rounds --
+    which is exactly the round-trip-bound-regime win this metric
+    measures."""
+    t = snap["decode_steps"] * t_step + snap["decode_calls"] * rt
+    return snap["decode_tokens"] / max(t, 1e-12)
+
+
 _REAL_ENGINE_KEYS = (
     "decode_tokens_per_second", "tokens_per_second", "decode_tokens",
-    "prefill_tokens", "prefill_rounds", "decode_calls", "slot_steps",
-    "wasted_slot_steps", "wasted_slot_fraction",
+    "prefill_tokens", "prefill_rounds", "decode_calls", "decode_steps",
+    "slot_steps", "wasted_slot_steps", "wasted_slot_fraction",
     "host_roundtrips_per_decode_token", "ttft_rounds_mean", "ttft_s_mean",
     "ttft_s_p95", "itl_s_mean", "itl_rounds_mean", "queue_peak",
-    "prompt_chunk")
+    "prompt_chunk", "draft_proposed", "draft_accepted", "non_spec_tokens",
+    "accept_rate")
 
 
 def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
-                chunks=(1, 4, 16), out_path: str = "BENCH_serve.json"):
+                chunks=(1, 4, 16), out_path: str = "BENCH_serve.json",
+                spec_drafts=()):
     """Arrival-trace scenario with a ``--prompt-chunk`` sweep: for each C
     the superstep simulator (smoke + full-config weight bytes) runs
     against the shared per-phase baseline, and the REAL engine replays
     the trace.  Greedy streams must be bit-identical across every C --
     packing may only change *when* prompt tokens are consumed, never
-    what gets generated."""
+    what gets generated.
+
+    With ``spec_drafts`` (draft lengths S) the REAL engine additionally
+    replays the trace speculatively (n-gram self-draft) over the
+    (C, S) grid: accept rate, inter-token latency in rounds, and the
+    counter-derived structural decode tokens/s land in the payload's
+    ``speculative`` section, with greedy streams asserted bit-identical
+    to the non-speculative replays -- drafts may only change *when*
+    tokens emit, never what gets generated."""
     cfg = archs.smoke(arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     trace = make_trace(n_requests, batch)
@@ -510,6 +543,14 @@ def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
             "superstep_tokens_per_s_structural": tps_ss,
             "speedup_structural": speedup,
             "speedup_structural_full_config": speedup_full,
+            # counter-derived structural decode tok/s of the REAL replay
+            # (small config = round-trip-bound regime, full config =
+            # weight-bound) -- the non-speculative baselines the
+            # speculative sweep compares against
+            "real_structural_decode_tokens_per_s":
+                structural_decode_tps_from_counters(snap, t_step, rt),
+            "real_structural_decode_tokens_per_s_full_config":
+                structural_decode_tps_from_counters(snap, t_step_full, rt),
             "real_engine": {key: snap[key] for key in _REAL_ENGINE_KEYS},
         }
         row(f"serve_superstep_k{k}_c{c}", t_ss * 1e6,
@@ -527,6 +568,52 @@ def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
             raise SystemExit(
                 f"greedy stream mismatch between prompt_chunk="
                 f"{chunks[0]} and prompt_chunk={c}")
+
+    # ---- speculative sweep: n-gram self-draft over the (C, S) grid ----
+    speculative = {}
+    if spec_drafts:
+        # compare against the strongest NON-spec replay in each regime
+        base_rt = max(per_chunk.values(), key=lambda r: r[
+            "real_structural_decode_tokens_per_s"])
+        base_wb = max(per_chunk.values(), key=lambda r: r[
+            "real_structural_decode_tokens_per_s_full_config"])
+        for c in chunks:
+            for s in sorted({max(1, int(s)) for s in spec_drafts}):
+                snap, outs = replay_real_engine(
+                    cfg, params, trace, batch, k, prompt_chunk=c,
+                    speculative="ngram", draft_len=s)
+                if outs != outs_by_chunk[chunks[0]]:
+                    raise SystemExit(
+                        f"greedy stream mismatch: speculative C={c} S={s} "
+                        f"vs non-speculative")
+                tps_rt = structural_decode_tps_from_counters(snap, t_step,
+                                                             rt)
+                tps_wb = structural_decode_tps_from_counters(
+                    snap, t_step_full, rt)
+                speculative[f"c{c}_s{s}"] = {
+                    "prompt_chunk": c,
+                    "draft_len": s,
+                    "accept_rate": snap["accept_rate"],
+                    "itl_rounds_mean": snap["itl_rounds_mean"],
+                    "itl_s_mean": snap["itl_s_mean"],
+                    "structural_decode_tokens_per_s": tps_rt,
+                    "structural_decode_tokens_per_s_full_config": tps_wb,
+                    "speedup_vs_nonspec_best": tps_rt / base_rt[
+                        "real_structural_decode_tokens_per_s"],
+                    "speedup_vs_nonspec_best_full_config": tps_wb / base_wb[
+                        "real_structural_decode_tokens_per_s_full_config"],
+                    "real_engine": {key: snap[key]
+                                    for key in _REAL_ENGINE_KEYS},
+                }
+                r = speculative[f"c{c}_s{s}"]
+                row(f"serve_spec_k{k}_c{c}_s{s}",
+                    snap["decode_time_s"] * 1e6 / max(
+                        snap["decode_calls"], 1),
+                    f"accept {r['accept_rate']:.2f};"
+                    f"itl {r['itl_rounds_mean']:.2f} rounds;"
+                    f"{r['speedup_vs_nonspec_best']:.2f}x round-trip-bound;"
+                    f"{r['speedup_vs_nonspec_best_full_config']:.2f}x "
+                    f"weight-bound")
 
     best_c = max(chunks, key=lambda c: per_chunk[str(c)][
         "speedup_structural_full_config"])
@@ -559,6 +646,21 @@ def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
         "prompt_chunk_best": best_c,
         "real_engine": per_chunk[str(best_c)]["real_engine"],
     }
+    if speculative:
+        best_spec_key = max(speculative, key=lambda key: speculative[key][
+            "speedup_vs_nonspec_best"])
+        best_spec = speculative[best_spec_key]
+        payload["speculative"] = speculative
+        payload["speculative_best"] = best_spec_key
+        # the speculative headline: best (C, S) vs the best non-spec row
+        # in the round-trip-bound regime (multi-emit shrinks rounds per
+        # token; the weight-bound column rides along for the trajectory)
+        payload["speculative_speedup_structural"] = best_spec[
+            "speedup_vs_nonspec_best"]
+        payload["speculative_accept_rate"] = best_spec["accept_rate"]
+        row(f"serve_spec_speedup_k{k}", 0.0,
+            f"{best_spec['speedup_vs_nonspec_best']:.2f}x round-trip-bound "
+            f"{best_spec_key};accept {best_spec['accept_rate']:.2f}")
     dump_json(out_path, payload)
     return payload
 
@@ -586,20 +688,31 @@ def main(argv=None):
                     help="--mixed: prompt-packing chunk sizes C to sweep "
                          "(1 is always included as the unpacked baseline "
                          "row; default 1 4 16, tiny 1 4)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="with --mixed: also replay the trace under "
+                         "n-gram speculative decoding over the (C, S) "
+                         "grid -- accept rate + ITL + structural "
+                         "decode tok/s rows land in BENCH_serve.json "
+                         "(implies --mixed)")
+    ap.add_argument("--draft-lens", type=int, nargs="*", default=None,
+                    help="--speculative: draft lengths S to sweep "
+                         "(default 2 4 8, tiny 4)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny workload -> BENCH_*.tiny.json "
                          "(never clobbers the tracked trajectory)")
     args = ap.parse_args(argv)
-    if args.mixed:
+    if args.mixed or args.speculative:
         n_req = args.n_requests or (32 if args.tiny else 96)
         k = max(args.decode_blocks) if args.decode_blocks else 8
         chunks = args.prompt_chunks or ([1, 4] if args.tiny else [1, 4, 16])
+        drafts = () if not args.speculative else (
+            args.draft_lens or ([4] if args.tiny else [2, 4, 8]))
         if args.tiny:
             args.batches = [min(4, max(args.batches))]
         out = args.out or ("BENCH_serve.tiny.json" if args.tiny
                            else "BENCH_serve.json")
         bench_mixed(args.arch, max(args.batches), n_req, k, chunks=chunks,
-                    out_path=out)
+                    out_path=out, spec_drafts=drafts)
         return
     if args.decode:
         n_req = args.n_requests or (4 if args.tiny else 16)

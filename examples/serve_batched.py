@@ -87,13 +87,21 @@ def main(argv=None):
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="replay a synthetic N-request arrival trace "
                          "instead of the fixed prompt list")
+    ap.add_argument("--speculative", default=None, choices=["ngram"],
+                    help="speculative decoding: n-gram self-drafts "
+                         "verified in one chunk pass per round (streams "
+                         "bit-identical; watch itl_rounds drop below 1)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="max draft tokens proposed per round (S)")
     args = ap.parse_args(argv)
 
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
                            decode_block=args.decode_block,
-                           prompt_chunk=args.prompt_chunk)
+                           prompt_chunk=args.prompt_chunk,
+                           speculative=args.speculative,
+                           draft_len=args.draft_len)
 
     if args.trace:
         outs, dt = run_trace(engine, args.trace)

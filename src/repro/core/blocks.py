@@ -187,26 +187,35 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
     return x_t, new_state
 
 
-def _conv_chunk(p, y, window, valid):
+def _conv_chunk(p, y, window, valid, *, return_windows: bool = False):
     """Varlen chunked causal conv: a ``lax.scan`` of ``causal_conv_step``
     over the chunk axis -- the same per-token einsum as single-token
     decode (bit-exact where ``causal_conv_apply``'s unrolled slide-add
     schedule is not), with row b's carried window frozen once ``t >=
-    valid[b]``.  y: (B, C, D), window: (B, K-1, D), valid: (B,) int32."""
+    valid[b]``.  y: (B, C, D), window: (B, K-1, D), valid: (B,) int32.
+
+    ``return_windows`` additionally stacks the carried window *after*
+    every position -- (B, C, K-1, D), frozen rows re-emitting their
+    final window -- so speculative verify can roll the conv state back
+    to any committed position with one gather (no recompute)."""
 
     def body(win, inp):
         y_t, t = inp
         out, win_new = nn.causal_conv_step(p, y_t, win)
         win = jnp.where((t < valid)[:, None, None], win_new, win)
-        return win, out
+        return win, (out, win if return_windows else None)
 
-    win, outs = jax.lax.scan(
+    win, (outs, wins) = jax.lax.scan(
         body, window, (jnp.moveaxis(y, 1, 0), jnp.arange(y.shape[1])))
-    return jnp.moveaxis(outs, 0, 1), win
+    outs = jnp.moveaxis(outs, 0, 1)
+    if return_windows:
+        return outs, win, jnp.moveaxis(wins, 0, 1)
+    return outs, win
 
 
 def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
-               compute_dtype=None, scan_strategy: Optional[str] = None):
+               compute_dtype=None, scan_strategy: Optional[str] = None,
+               return_positions: bool = False):
     """Packed varlen decode chunk of one block.  x: (B, C, d_model),
     valid: (B,) int32 in [1, C] -> ((B, C, d_model), new state).
 
@@ -218,19 +227,33 @@ def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
     per chunk under the fused strategy), and its carried (conv window,
     h) state freezes at ``valid[b]``.  Positions >= ``valid[b]`` hold
     garbage the caller must mask (the superstep reads position
-    ``valid[b]-1`` only)."""
+    ``valid[b]-1`` only).
+
+    ``return_positions`` also returns the carried state after EVERY
+    position -- ``{"h": (B, C, d_hidden)[, "conv": (B, C, K-1,
+    d_model)]}`` -- the speculative-decoding rollback primitive: the
+    cell chunk already emits its per-position states (that is what the
+    varlen chunk kernels compute), so restoring the prefix state at the
+    first rejected draft is a single O(d_hidden) gather per slot."""
     if scan_strategy is None:
         scan_strategy = cfg.scan_strategy
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
     new_state = dict(state)
+    pos_states = {}
     if cfg.use_conv:
-        y, new_state["conv"] = _conv_chunk(params["conv"], y,
-                                           state["conv"], valid)
+        if return_positions:
+            y, new_state["conv"], pos_states["conv"] = _conv_chunk(
+                params["conv"], y, state["conv"], valid,
+                return_windows=True)
+        else:
+            y, new_state["conv"] = _conv_chunk(params["conv"], y,
+                                               state["conv"], valid)
     hs = cell.step_chunk(params["rnn"], y, state["h"], valid,
                          mode=cfg.mode, compute_dtype=compute_dtype,
                          scan_strategy=scan_strategy)
     new_state["h"] = hs[:, -1]          # frozen rows: == hs[:, valid-1]
+    pos_states["h"] = hs
     y = nn.dense_apply(params["down"], hs, compute_dtype)
     x = x + y
     if cfg.use_mlp:
@@ -238,6 +261,8 @@ def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
         y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
         y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
         x = x + y
+    if return_positions:
+        return x, new_state, pos_states
     return x, new_state
 
 

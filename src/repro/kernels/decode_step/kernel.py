@@ -37,6 +37,11 @@ while a ``fori_loop`` replays up to C per-token step updates with
 per-row ``valid``-length freezing -- the serving superstep's prompt
 *packing* path (C prompt tokens per weight stream instead of 1 in the
 weight-bound regime), bit-identical to C sequential step-kernel calls.
+The SAME chunk variants are the speculative-decoding *verify* primitive
+(``lm.decode_verify``): they emit the recurrent state after every
+position, so accepting a leading run of drafts and rolling back to the
+first rejection is one O(d_hidden) gather per slot -- no extra kernel,
+no recompute.
 """
 
 from __future__ import annotations

@@ -14,6 +14,12 @@ their ``scan_strategy`` resolves to ``"fused"`` (the config default
 unified device loop drives prefilling (teacher-forced prompt tokens) and
 decoding rows through this same kernel in the same round -- real kernels
 on TPU, interpret-mode parity elsewhere.
+
+The ``*_chunk`` wrappers serve double duty: packed prefill
+(``lm.decode_chunk``) and speculative-decode verification
+(``lm.decode_verify``) are the same masked varlen replay -- the chunk's
+per-position states ARE the rollback table, so both callers share one
+kernel and one parity contract.
 """
 
 from __future__ import annotations

@@ -4,6 +4,11 @@ Same math as kernel.py (fp32 internal compute, output cast to the input
 dtype) with no Pallas machinery -- the parity tests diff the kernel
 against these, and they double as readable documentation of exactly what
 the kernel computes.
+
+The chunk oracles re-emit each row's carried state at every position
+past ``valid`` (frozen rows repeat their final state), which is the
+invariant the speculative verify path leans on: gathering the state at
+any committed position is exact whether or not the row advanced there.
 """
 
 from __future__ import annotations

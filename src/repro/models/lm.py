@@ -559,6 +559,55 @@ def decode_chunk(params, cfg, tokens: Array, valid: Array,
     return logits, new_cache
 
 
+def decode_verify(params, cfg, tokens: Array, valid: Array,
+                  cache: Dict[str, Any]):
+    """Speculative-verify pass: tokens (B, W), valid (B,) int32 in
+    [1, W] -> (logits (B, W, V), per-position states).
+
+    ``decode_chunk``'s sibling for speculative decoding: the same masked
+    varlen replay through the fused chunk kernels (one weight stream per
+    round, per-token arithmetic identical to sequential ``decode_step``
+    calls, rows frozen at ``valid[b]``), but keeping what verification
+    needs and ``decode_chunk`` throws away -- the logits at EVERY
+    position (to judge each draft token) and the carried recurrent
+    state after every position: ``{"h": (L, B, W, d_hidden)[, "conv":
+    (L, B, W, K-1, d_model)]}``.  The caller commits a per-row prefix of
+    ``valid_eff[b] <= valid[b]`` positions by gathering the state at
+    ``valid_eff[b] - 1`` and advancing ``pos`` by ``valid_eff`` -- the
+    recompute-free O(d_hidden)-per-slot rollback the paper's constant-
+    size state makes trivial (a Transformer would instead truncate and
+    re-page its KV cache).  The returned cache is untouched; positions
+    ``>= valid[b]`` re-emit the frozen state so any gather index in
+    ``[valid_eff-1, W)`` is safe."""
+    if cfg.block_kind != "minrnn":
+        raise NotImplementedError(
+            f"decode_verify requires a constant-size recurrent state "
+            f"(block_kind='minrnn'), got {cfg.block_kind!r}")
+    bc = _minrnn_block_cfg(cfg)
+    x = params["embed"]["table"].astype(cfg.cdtype)[tokens]   # (B, W, D)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.cdtype)
+
+    def body(carry, scanned):
+        p_l, cache_l = scanned
+        state = {"h": cache_l["h"]}
+        if bc.use_conv:
+            state["conv"] = cache_l["conv"]
+        y, _, pos_states = minrnn_blocks.step_chunk(
+            p_l, bc, carry, state, valid, compute_dtype=cfg.cdtype,
+            return_positions=True)
+        return y, pos_states
+
+    scanned = {"h": cache["h"]}
+    if bc.use_conv:
+        scanned["conv"] = cache["conv"]
+    x, states = _iterate(cfg, body, x, (params["layers"]["blocks"], scanned))
+
+    nk = dict(zero_centered=True) if cfg.norm_zero_centered else {}
+    x = nn.norm_apply(cfg.norm, params["final_norm"], x, **nk)
+    return _logits(params, cfg, x), states
+
+
 # ===========================================================================
 # Superstep: unified prefill + decode + sampling + re-admission on device
 # ===========================================================================
@@ -572,8 +621,8 @@ def decode_chunk(params, cfg, tokens: Array, valid: Array,
 _RECURRENT_CACHE_KEYS = ("h", "conv", "ssm")
 
 
-def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0
-                    ) -> Dict[str, Any]:
+def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0,
+                    draft=None) -> Dict[str, Any]:
     """Device-resident per-slot serving state for ``superstep``.
 
     One fixed-shape pytree holds everything the device loop needs to run
@@ -596,6 +645,11 @@ def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0
       * staging buffer  -- ``s_*`` mirrors of the request fields plus
         ``s_valid``: the host parks the next queued request here and the
         scan body arms it into the row the moment the row goes dead.
+
+    ``draft`` (a ``serving.draft`` source) adds the speculative-decoding
+    state: ``n_out`` (emitted tokens appended to the prompt buffer as
+    drafting history) plus whatever the source itself carries per slot
+    (``draft.extra_state`` -- e.g. the draft model's decode cache).
     """
     # lazy import: models/ stays importable without the serving package
     # in minimal deployments; sampling itself only depends on jax
@@ -622,6 +676,9 @@ def init_slot_state(cfg, batch: int, max_len: int, *, seed: int = 0
         "s_temperature": jnp.zeros((batch,), jnp.float32),
         "s_top_k": iv(), "s_top_p": jnp.ones((batch,), jnp.float32),
     }
+    if draft is not None:
+        state["n_out"] = iv()
+        state.update(draft.extra_state(batch, max_len))
     return state
 
 
@@ -645,7 +702,7 @@ _ARM_FIELDS = ("prompt_len", "rid", "remaining", "eos", "temperature",
 
 
 def superstep(params, cfg, state: Dict[str, Any], n: int, *,
-              prompt_chunk: int = 1):
+              prompt_chunk: int = 1, draft=None, draft_params=None):
     """Run ``n`` rounds of the unified serving loop entirely on device.
 
     ONE ``lax.scan`` whose body is, for every slot simultaneously:
@@ -693,6 +750,27 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
     ``n`` and ``prompt_chunk`` must be static (the engine jits one
     program per block size); ``prompt_chunk > 1`` requires
     ``supports_prompt_packing(cfg)``.
+
+    ``draft`` (a ``serving.draft`` source, with its weights -- if any --
+    passed as ``draft_params`` so they stay traced) switches the loop to
+    **speculative decoding**: decoding rows propose up to
+    ``draft.draft_len`` draft tokens per round and verify them in ONE
+    pass through the varlen chunk kernels (``decode_verify``), emitting
+    every accepted token plus the verifier's own next token -- up to
+    ``draft_len + 1`` tokens per slot-round, so the emit buffers grow a
+    per-round plane: ``tokens``/``rids`` become (B, n, draft_len + 1).
+    Rejection rolls the slot state back to the last accepted position
+    with one O(d_hidden) gather of the chunk's per-position states (no
+    recompute, no host round-trip).  Emission stays EXACT: every token
+    is computed precisely as the non-speculative path would (greedy
+    argmax, or categorical under the same emission-aligned key chain --
+    position i of a round uses the slot's i-th chained key), so greedy
+    AND seeded streams are bit-identical to ``draft=None`` and drafting
+    only ever changes latency.  ``counters`` gains ``draft_proposed`` /
+    ``draft_accepted`` (sum of drafts offered / accepted on decoding
+    rows) and ``emit_rounds`` (emitting slot-rounds == tokens the non-
+    speculative path contributes: ``decode_tokens == draft_accepted +
+    emit_rounds`` exactly).  Requires ``supports_prompt_packing(cfg)``.
     """
     from repro.serving import sampling
 
@@ -700,6 +778,14 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
         raise NotImplementedError(
             f"prompt_chunk={prompt_chunk} requires a recurrent-state arch "
             f"(block_kind='minrnn'), got block_kind={cfg.block_kind!r}")
+    if draft is not None:
+        if not supports_prompt_packing(cfg):
+            raise NotImplementedError(
+                f"speculative decoding requires a recurrent-state arch "
+                f"(block_kind='minrnn'), got block_kind={cfg.block_kind!r}")
+        return _superstep_spec(params, cfg, state, n,
+                               prompt_chunk=prompt_chunk, draft=draft,
+                               draft_params=draft_params)
 
     batch = state["tok"].shape[0]
     p_cap = state["prompt"].shape[1]
@@ -793,6 +879,199 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
                 "prefill_rounds": round_ct,
                 "wasted_slot_steps": waste_ct}
     return (jnp.swapaxes(emitted, 0, 1), jnp.swapaxes(rids, 0, 1),
+            state, counters)
+
+
+def _superstep_spec(params, cfg, state: Dict[str, Any], n: int, *,
+                    prompt_chunk: int, draft, draft_params):
+    """The speculative form of :func:`superstep` (see its docstring for
+    the contract).  Per round, for every slot simultaneously:
+
+      1. **re-admission** as in the plain loop, additionally resetting
+         the drafting history (``n_out``) and the draft source's own
+         per-slot state;
+      2. **propose** -- the draft source offers up to S continuation
+         tokens per row; only decoding rows keep theirs (capped at
+         ``remaining - 1``: the round's guaranteed token covers the
+         rest);
+      3. **verify** -- ONE ``decode_verify`` chunk pass over
+         ``[tok, d_1..d_S]`` for decoding rows (prefilling rows ride the
+         same call with their next C prompt tokens, dead rows with
+         valid=1), producing per-position logits and per-position
+         states;
+      4. **accept** -- position i's exact token x_i (greedy argmax or
+         categorical under chained key i) is compared to draft d_{i+1}:
+         the committed length is e = (leading run of matches) + 1,
+         truncated at the first emitted EOS.  Tokens x_0..x_{e-1} emit
+         into planes 0..e-1; the slot's key advances e splits, its fed-
+         back token becomes x_{e-1};
+      5. **rollback / commit** -- the recurrent state is gathered at the
+         last committed position (prefilling rows: their packed take;
+         dead rows: 1) and ``pos`` advances by exactly the committed
+         length -- O(d_hidden) per slot, no recompute;
+      6. **EOS / retire** exactly as the plain loop (an EOS can only sit
+         at the last emitted plane, by the truncation in 4).
+    """
+    from repro.serving import sampling
+
+    batch = state["tok"].shape[0]
+    p_cap = state["prompt"].shape[1]
+    chunk = int(prompt_chunk)
+    s_len = int(draft.draft_len)
+    n_emit_planes = s_len + 1                   # E: emit planes per round
+    width = max(chunk, s_len + 1)               # W: verify chunk width
+    b_idx = jnp.arange(batch)
+    i32 = jnp.int32
+
+    def body(carry, _):
+        st, ct = carry
+        st, ct = dict(st), dict(ct)
+
+        # 1. re-admission from the staging buffer
+        arm = jnp.logical_not(st["alive"]) & st["s_valid"]
+        for f in _ARM_FIELDS:
+            st[f] = jnp.where(arm, st["s_" + f], st[f])
+        st["prompt"] = jnp.where(arm[:, None], st["s_prompt"], st["prompt"])
+        st["prompt_pos"] = jnp.where(arm, 0, st["prompt_pos"])
+        st["n_out"] = jnp.where(arm, 0, st["n_out"])
+        st["alive"] = st["alive"] | arm
+        st["s_valid"] = st["s_valid"] & jnp.logical_not(arm)
+        st["cache"] = _reset_slot_rows(st["cache"], arm)
+        if "draft_cache" in st:
+            st["draft_cache"] = _reset_slot_rows(st["draft_cache"], arm)
+
+        alive = st["alive"]
+        ct["wasted_slot_steps"] += jnp.sum(
+            jnp.logical_not(alive).astype(i32))
+        prefilling = alive & (st["prompt_pos"] < st["prompt_len"])
+        decoding = alive & jnp.logical_not(prefilling)
+        ct["prefill_rounds"] += jnp.sum(prefilling.astype(i32))
+
+        left = st["prompt_len"] - st["prompt_pos"]
+        take = jnp.where(prefilling,
+                         jnp.minimum(left, chunk), 0).astype(i32)
+        ct["prefill_steps"] += jnp.sum(take)
+
+        # 2. draft proposal; decoding rows only, capped so the proposal
+        # never overshoots the length budget (the verify round's own
+        # token is always emitted)
+        drafts, n_draft = draft.propose(draft_params, st)
+        n_draft = jnp.where(
+            decoding,
+            jnp.clip(jnp.minimum(n_draft, st["remaining"] - 1), 0, s_len),
+            0).astype(i32)
+        ct["draft_proposed"] += jnp.sum(n_draft)
+
+        # 3. one verify pass for the whole batch: prefilling rows carry
+        # their next C prompt tokens, decoding rows [tok, d_1..d_S]
+        idx = st["prompt_pos"][:, None] + jnp.arange(width)[None]
+        gathered = jnp.take_along_axis(
+            st["prompt"], jnp.clip(idx, 0, p_cap - 1), axis=1)
+        dec_blk = jnp.concatenate([st["tok"][:, None], drafts], axis=1)
+        if width > s_len + 1:
+            dec_blk = jnp.concatenate(
+                [dec_blk, jnp.zeros((batch, width - s_len - 1), i32)],
+                axis=1)
+        tok_blk = jnp.where(prefilling[:, None], gathered, dec_blk)
+        valid_in = jnp.where(prefilling, jnp.maximum(take, 1),
+                             1 + n_draft).astype(i32)
+        logits_all, pstates = decode_verify(params, cfg, tok_blk,
+                                            valid_in, st["cache"])
+
+        # 4a. exact per-position tokens under the chained key schedule
+        # (decoding rows); position i IS what the i-th non-speculative
+        # round would sample, so acceptance never changes content
+        x_toks, keys_chain = sampling.sample_chain(
+            logits_all[:, :n_emit_planes], st["keys"], st["temperature"],
+            st["top_k"], st["top_p"])
+        # prefilling rows emit (at most) their first output token, from
+        # the logits at their LAST consumed prompt position with the
+        # slot's current key -- exactly the plain packed path
+        last_logits = jnp.take_along_axis(
+            logits_all, (valid_in - 1)[:, None, None], axis=1)[:, 0]
+        tok_first, _ = sampling.sample_tokens(
+            last_logits, st["keys"], st["temperature"], st["top_k"],
+            st["top_p"])
+
+        # 4b. acceptance: leading run of drafts matching the exact
+        # tokens, +1 for the verifier's own token, truncated at EOS
+        m = (x_toks[:, :s_len] == tok_blk[:, 1:s_len + 1]) \
+            & (jnp.arange(s_len)[None] < n_draft[:, None])
+        lead = jnp.sum(jnp.cumprod(m.astype(i32), axis=1), axis=1)
+        is_eos = (st["eos"] >= 0)[:, None] & (x_toks == st["eos"][:, None])
+        first_eos = jnp.min(
+            jnp.where(is_eos, jnp.arange(n_emit_planes)[None],
+                      n_emit_planes), axis=1)
+        e = jnp.minimum(lead + 1, first_eos + 1)
+        ct["draft_accepted"] += jnp.sum(jnp.where(decoding, e - 1, 0))
+
+        pos_next = st["prompt_pos"] + take
+        pf_emit = prefilling & (pos_next >= st["prompt_len"])
+        emitting = pf_emit | decoding
+        ct["emit_rounds"] += jnp.sum(emitting.astype(i32))
+        n_emit = jnp.where(decoding, e, pf_emit.astype(i32))
+
+        # 4c. multi-emit planes: -1 beyond each row's committed length
+        plane = jnp.arange(n_emit_planes)[None]
+        emit_tok = jnp.where(decoding[:, None], x_toks,
+                             tok_first[:, None])
+        live_plane = plane < n_emit[:, None]
+        emit = jnp.where(live_plane, emit_tok, jnp.int32(-1))
+        emit_rid = jnp.where(live_plane, st["rid"][:, None],
+                             jnp.int32(-1))
+
+        # keys advance one split per emitted token (keys_chain[:, 0] is
+        # the single-split advance, so pf_emit rows get the plain path's
+        # key); tok becomes the last emitted token
+        kidx = jnp.clip(n_emit - 1, 0, n_emit_planes - 1)
+        keys_adv = jnp.take_along_axis(
+            keys_chain, kidx[:, None, None], axis=1)[:, 0]
+        st["keys"] = jnp.where(emitting[:, None], keys_adv, st["keys"])
+        last_tok = jnp.take_along_axis(emit_tok, kidx[:, None],
+                                       axis=1)[:, 0]
+        st["tok"] = jnp.where(emitting, last_tok, st["tok"])
+
+        # drafting history: append the emitted tokens to the prompt
+        # buffer (the n-gram source self-drafts from it); writes past
+        # the buffer (only ever a request's final token) are dropped
+        hist = st["prompt_len"] + st["n_out"]
+        w_idx = jnp.where(live_plane, hist[:, None] + plane, p_cap)
+        st["prompt"] = st["prompt"].at[b_idx[:, None], w_idx].set(
+            jnp.maximum(emit, 0), mode="drop")
+        st["n_out"] = st["n_out"] + n_emit
+
+        # 5. rollback/commit: gather the recurrent state at each row's
+        # last committed position, advance pos by the committed length
+        valid_eff = jnp.where(prefilling, jnp.maximum(take, 1),
+                              jnp.where(decoding, e, 1)).astype(i32)
+        g_idx = (valid_eff - 1).astype(i32)
+        new_cache = dict(st["cache"])
+        new_cache["h"] = jnp.take_along_axis(
+            pstates["h"], g_idx[None, :, None, None], axis=2)[:, :, 0]
+        if "conv" in pstates:
+            new_cache["conv"] = jnp.take_along_axis(
+                pstates["conv"], g_idx[None, :, None, None, None],
+                axis=2)[:, :, 0]
+        new_cache["pos"] = st["cache"]["pos"] + valid_eff
+        st["cache"] = new_cache
+        st.update(draft.commit(draft_params, st, tok_blk, valid_eff))
+
+        # 6. EOS / length-cap retire (truncation in 4b guarantees an
+        # emitted EOS sits at the last plane)
+        st["remaining"] = st["remaining"] - n_emit
+        hit_eos = emitting & (st["eos"] >= 0) & (last_tok == st["eos"])
+        died = hit_eos | (emitting & (st["remaining"] <= 0))
+        st["alive"] = alive & jnp.logical_not(died)
+        st["prompt_pos"] = pos_next
+        return (st, ct), (emit, emit_rid)
+
+    zero = jnp.zeros((), i32)
+    counters0 = {k: zero for k in (
+        "prefill_steps", "prefill_rounds", "wasted_slot_steps",
+        "draft_proposed", "draft_accepted", "emit_rounds")}
+    (state, counters), (emitted, rids) = lax.scan(
+        body, (state, counters0), None, length=n)
+    return (jnp.moveaxis(emitted, 0, 1), jnp.moveaxis(rids, 0, 1),
             state, counters)
 
 

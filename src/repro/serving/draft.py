@@ -1,0 +1,188 @@
+"""Draft-token sources for speculative decoding in the serving superstep.
+
+Speculative decoding exploits the paper's O(1) recurrent state (Were
+RNNs All We Needed?, section 3): verifying C draft tokens is ONE pass
+through the varlen chunk kernels (the same masked per-token replay
+prompt packing uses, weights streamed from HBM once), and rolling back
+to the first rejected position is an O(d_hidden) per-slot gather of the
+chunk's per-position states -- no paged-KV surgery, no recompute, no
+host round-trip.  The superstep stays exact: every emitted token is the
+token the non-speculative engine would have produced (greedy argmax or
+categorical under the same emission-aligned key chain), so drafts only
+ever change *latency*, never content.
+
+A draft source is a small strategy object the superstep calls inside
+its jitted scan body, so every method must be pure jax on fixed shapes:
+
+  * ``draft_len``                 -- static S, max draft tokens/round;
+  * ``extra_state(batch, max_len)`` -- device state the source carries
+    per slot (e.g. the draft model's own decode cache), merged into the
+    slot state by ``lm.init_slot_state``;
+  * ``propose(params, st)``       -- (drafts (B, S), n_draft (B,)):
+    draft continuations of ``st["tok"]`` for every row (the superstep
+    masks non-decoding rows itself);
+  * ``commit(params, st, tok_blk, valid_eff)`` -- state updates after
+    the round committed ``valid_eff[b]`` tokens of ``tok_blk[b]`` (the
+    model source advances its draft cache here; stateless sources
+    return ``{}``).
+
+Sources:
+
+  * :class:`NGramDraft` -- self-drafting from the request's own prompt
+    + emitted output: match the last ``ngram`` tokens against history
+    and propose the continuation of the most recent earlier occurrence.
+    Free (no extra model), surprisingly strong on repetitive text.
+  * :class:`ModelDraft` -- a tiny minGRU/minLSTM draft model sharing
+    the tokenizer: S sequential greedy draft steps propose, one draft
+    ``decode_chunk`` per round keeps its cache in lockstep with the
+    committed stream.  With the *target* config + params it is an exact
+    oracle (every draft accepted) -- the test fixture for full-
+    acceptance rollback.
+  * :class:`FixedDraft` -- test-only constant-token source exercising
+    the first-token-rejection rollback path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class NGramDraft:
+    """Prompt/output n-gram self-drafting.
+
+    History is the slot's prompt buffer, which the speculative superstep
+    extends in place with every emitted token (``prompt_len + n_out``
+    tokens total).  The proposal: find the most recent occurrence of the
+    last ``ngram`` tokens strictly before the current position and
+    propose the up-to-``draft_len`` tokens that followed it; no match
+    (or too little history) proposes nothing.
+    """
+
+    params = None                 # stateless: no draft weights
+
+    def __init__(self, draft_len: int = 4, ngram: int = 2):
+        if draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+        if ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {ngram}")
+        self.draft_len = int(draft_len)
+        self.ngram = int(ngram)
+
+    def extra_state(self, batch: int, max_len: int) -> Dict[str, Any]:
+        return {}
+
+    def propose(self, params, st) -> Tuple[Array, Array]:
+        hist_buf = st["prompt"]                       # (B, P) history
+        bsz, p_cap = hist_buf.shape
+        g, s = self.ngram, self.draft_len
+        hist = st["prompt_len"] + st["n_out"]         # tokens of history
+
+        # suffix: the last g history tokens (the pattern to re-find)
+        sfx_idx = jnp.clip(hist[:, None] - g + jnp.arange(g)[None],
+                           0, p_cap - 1)
+        suffix = jnp.take_along_axis(hist_buf, sfx_idx, axis=1)   # (B, g)
+
+        # windows H[p : p+g] for every start p, via g static slices
+        n_pos = p_cap - g + 1
+        match = jnp.ones((bsz, n_pos), bool)
+        for j in range(g):
+            match = match & (hist_buf[:, j:j + n_pos] == suffix[:, j:j + 1])
+        pos = jnp.arange(n_pos)[None]
+        # p <= hist-g-1: the window ends strictly before the suffix's own
+        # occurrence AND its continuation token H[p+g] is inside history
+        ok = match & (pos <= (hist - g - 1)[:, None])
+        p_star = jnp.max(jnp.where(ok, pos, -1), axis=1)   # most recent
+        has = (p_star >= 0) & (hist >= g + 1)
+
+        cont = p_star + g                      # continuation start index
+        d_idx = jnp.clip(cont[:, None] + jnp.arange(s)[None], 0, p_cap - 1)
+        drafts = jnp.take_along_axis(hist_buf, d_idx, axis=1)
+        n_draft = jnp.where(has, jnp.minimum(s, hist - cont), 0)
+        return drafts.astype(jnp.int32), n_draft.astype(jnp.int32)
+
+    def commit(self, params, st, tok_blk, valid_eff) -> Dict[str, Any]:
+        return {}
+
+
+class ModelDraft:
+    """Tiny draft model (same tokenizer) proposing greedy continuations.
+
+    ``cfg``/``params`` are the draft model's own; its decode cache rides
+    the slot state (``extra_state``) and is kept in lockstep with the
+    target stream by ``commit`` -- one draft ``decode_chunk`` over the
+    very tokens the target committed, so the draft cache is always
+    conditioned on the accepted history (never on rejected drafts).
+    ``propose`` looks ahead with S sequential greedy draft steps from a
+    throwaway copy of that cache.
+    """
+
+    def __init__(self, cfg, params=None, draft_len: int = 4):
+        if cfg.block_kind != "minrnn":
+            raise ValueError(
+                f"ModelDraft needs a recurrent-state draft model "
+                f"(block_kind='minrnn'), got {cfg.block_kind!r}")
+        if draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {draft_len}")
+        self.cfg = cfg
+        self.params = params
+        self.draft_len = int(draft_len)
+
+    def extra_state(self, batch: int, max_len: int) -> Dict[str, Any]:
+        from repro.models import lm
+        return {"draft_cache": lm.init_cache(self.cfg, batch, max_len)}
+
+    def propose(self, params, st) -> Tuple[Array, Array]:
+        from repro.models import lm
+        cache = st["draft_cache"]           # throwaway lookahead copy
+        tok = st["tok"]
+        drafts = []
+        for _ in range(self.draft_len):
+            logits, cache = lm.decode_step(params, self.cfg, tok, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            drafts.append(tok)
+        drafts = jnp.stack(drafts, axis=1)              # (B, S)
+        n_draft = jnp.full(tok.shape, self.draft_len, jnp.int32)
+        return drafts, n_draft
+
+    def commit(self, params, st, tok_blk, valid_eff) -> Dict[str, Any]:
+        from repro.models import lm
+        _, cache = lm.decode_chunk(params, self.cfg, tok_blk, valid_eff,
+                                   st["draft_cache"])
+        return {"draft_cache": cache}
+
+
+class FixedDraft:
+    """Test-only source proposing a constant token: with a token the
+    target (almost) never emits, every draft is rejected at the first
+    position -- the rollback-to-prefix path under maximal stress."""
+
+    params = None
+
+    def __init__(self, token: int, draft_len: int = 4):
+        self.token = int(token)
+        self.draft_len = int(draft_len)
+
+    def extra_state(self, batch: int, max_len: int) -> Dict[str, Any]:
+        return {}
+
+    def propose(self, params, st) -> Tuple[Array, Array]:
+        bsz = st["tok"].shape[0]
+        drafts = jnp.full((bsz, self.draft_len), self.token, jnp.int32)
+        return drafts, jnp.full((bsz,), self.draft_len, jnp.int32)
+
+    def commit(self, params, st, tok_blk, valid_eff) -> Dict[str, Any]:
+        return {}
+
+
+def make(kind: str, draft_len: int = 4, **kw):
+    """Convenience constructor: ``"ngram"`` -> :class:`NGramDraft`."""
+    if kind == "ngram":
+        return NGramDraft(draft_len=draft_len, **kw)
+    raise ValueError(
+        f"unknown draft source {kind!r}; pass 'ngram' or a draft-source "
+        f"instance (NGramDraft / ModelDraft)")

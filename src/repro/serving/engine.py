@@ -32,6 +32,18 @@ Per engine ``step()``:
     (the rid plane demuxes rows that served two requests in one call),
     retires finished requests, and restocks staging.
 
+With ``speculative`` set (a ``serving.draft`` source -- ``"ngram"``
+self-drafting or a tiny draft model), decoding rows propose up to
+``draft_len`` tokens per device round and the superstep verifies them in
+ONE pass through the same varlen chunk kernels, rolling the O(1)
+recurrent state back to the last accepted position with a single gather
+(no recompute, no paged-KV surgery -- the paper's constant-size state
+makes rollback O(d_hidden) per slot).  The drain buffers grow a plane
+(``(B, K, draft_len + 1)``), a row can emit several tokens per round
+(inter-token latency drops below one round), and streams stay
+bit-identical to the non-speculative engine -- drafts only change
+latency, never content.
+
 There is no separate prefill phase, no chunked-prefill interleave and no
 phase barrier: a long prompt occupies one row while every other row keeps
 decoding.  Dead rows with nothing staged still step (the batch stays
@@ -56,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serving import draft as draft_lib
 from repro.serving.scheduler import (EngineStats, FifoScheduler,
                                      SchedulerConfig)
 
@@ -90,7 +103,9 @@ _STAGE_FIELDS = ("s_valid", "s_prompt", "s_prompt_len", "s_rid",
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 2048, seed: int = 0,
-                 decode_block: int = 1, prompt_chunk: int = 1):
+                 decode_block: int = 1, prompt_chunk: int = 1,
+                 speculative=None, draft_len: int = 4,
+                 draft_params=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -99,16 +114,31 @@ class ServingEngine:
         self.decode_block = max(1, int(decode_block))
         # C = prompt tokens consumed per round by a prefilling row: the
         # superstep's packed-prefill branch (weight-bound regime win --
-        # one weight stream amortises over C prompt tokens).  Emission
-        # stays <= 1 token per slot-round, so the (B, K) drain buffers
-        # and greedy streams are identical across C.
+        # one weight stream amortises over C prompt tokens).  Without
+        # speculation emission stays <= 1 token per slot-round, so the
+        # (B, K) drain buffers and greedy streams are identical across C.
         self.prompt_chunk = max(1, int(prompt_chunk))
         if self.prompt_chunk > 1 and not lm.supports_prompt_packing(cfg):
             raise ValueError(
                 f"prompt_chunk={self.prompt_chunk} requires a recurrent-"
                 f"state arch (block_kind='minrnn'); "
                 f"{cfg.name} has block_kind={cfg.block_kind!r}")
-        self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed)
+        # speculative decoding: a draft source name ("ngram") or instance
+        # (serving.draft).  Decoding rows then emit up to draft_len + 1
+        # tokens per device round -- the drain buffers grow a plane --
+        # with streams still bit-identical to the non-speculative engine.
+        if isinstance(speculative, str):
+            speculative = draft_lib.make(speculative, draft_len)
+        self.draft = speculative
+        self.draft_params = draft_params if draft_params is not None \
+            else getattr(speculative, "params", None)
+        if self.draft is not None and not lm.supports_prompt_packing(cfg):
+            raise ValueError(
+                f"speculative decoding requires a recurrent-state arch "
+                f"(block_kind='minrnn'); "
+                f"{cfg.name} has block_kind={cfg.block_kind!r}")
+        self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed,
+                                        draft=self.draft)
 
         self.scheduler = FifoScheduler(SchedulerConfig(max_batch=max_batch))
         self.stats = EngineStats(prompt_chunk=self.prompt_chunk)
@@ -125,6 +155,12 @@ class ServingEngine:
         self._smirror = {k: np.asarray(self.state[k]) for k in _STAGE_FIELDS}
         self._smirror = {k: v.copy() for k, v in self._smirror.items()}
         self._dirty_slots: List[int] = []
+        # device-progress mirrors (synced after every superstep): how far
+        # each row's prompt has actually been consumed, and which request
+        # the device thinks the row is running -- the staging ETA reads
+        # these instead of assuming the whole prompt is still pending
+        self._prompt_pos = np.zeros((max_batch,), np.int32)
+        self._rid_dev = np.full((max_batch,), -1, np.int32)
 
         # one compiled superstep program per distinct block size
         self._superstep_fns: Dict[int, Any] = {}
@@ -137,9 +173,13 @@ class ServingEngine:
                eos: Optional[int] = None) -> int:
         if not prompt:
             raise ValueError("empty prompt")
-        if len(prompt) + max_new > self.max_len:
+        # a request consumes len(prompt) + max_new - 1 cache positions:
+        # the first output token is sampled at the last prompt position,
+        # and the final output token is emitted without being fed back
+        if len(prompt) + max_new - 1 > self.max_len:
             raise ValueError(
-                f"prompt ({len(prompt)}) + max_new ({max_new}) exceeds "
+                f"prompt ({len(prompt)}) + max_new ({max_new}) needs "
+                f"{len(prompt) + max_new - 1} cache positions, exceeding "
                 f"engine max_len ({self.max_len})")
         rid = self._next_rid
         self._next_rid += 1
@@ -160,17 +200,27 @@ class ServingEngine:
         idle row).  Drives staging placement: within one staging round,
         earlier-submitted requests park behind sooner-to-free rows.
         Prompt consumption is packed ``prompt_chunk`` tokens per round,
-        so the prefill term is ``ceil(prompt_left / C)`` rounds -- the
-        one-round-per-token estimate would mis-rank staging targets by
-        up to C once packing is on.  This is greedy per call, not a
-        global ordering guarantee -- arrivals in a *later* round can
+        so the prefill term is ``ceil(prompt_left / C)`` rounds over the
+        prompt tokens the device has NOT yet consumed -- the synced
+        ``prompt_pos`` mirror, not the full prompt length, which would
+        overestimate a mid-prefill row by up to its whole prompt.  Under
+        speculative decoding the decode term stays an upper bound (every
+        round commits at least one token).  This is greedy per call, not
+        a global ordering guarantee -- arrivals in a *later* round can
         still land on a row that frees up before an earlier request's
         row does; strict FIFO holds for staging order (``admit_seq``),
         not start order."""
         req = self.current[slot]
         if req is None:
             return 0
-        prompt_left = len(req.prompt) if not req.out else 0
+        if req.out:
+            prompt_left = 0
+        else:
+            # trust the device mirror only when the row is actually
+            # running THIS request (it may still be parked in staging)
+            consumed = int(self._prompt_pos[slot]) \
+                if int(self._rid_dev[slot]) == req.rid else 0
+            prompt_left = max(0, len(req.prompt) - consumed)
         prompt_rounds = -(-prompt_left // self.prompt_chunk)
         return prompt_rounds + req.max_new - len(req.out)
 
@@ -230,9 +280,10 @@ class ServingEngine:
     def _superstep_fn(self, n: int):
         fn = self._superstep_fns.get(n)
         if fn is None:
-            cfg, chunk = self.cfg, self.prompt_chunk
-            fn = jax.jit(lambda p, s: lm.superstep(p, cfg, s, n,
-                                                   prompt_chunk=chunk))
+            cfg, chunk, draft = self.cfg, self.prompt_chunk, self.draft
+            fn = jax.jit(lambda p, dp, s: lm.superstep(
+                p, cfg, s, n, prompt_chunk=chunk, draft=draft,
+                draft_params=dp))
             self._superstep_fns[n] = fn
         return fn
 
@@ -272,10 +323,15 @@ class ServingEngine:
 
         with self.stats.timed("decode"):
             toks, rids, self.state, counters = self._superstep_fn(k)(
-                self.params, self.state)
+                self.params, self.draft_params, self.state)
             toks_np = np.asarray(toks)
             rids_np = np.asarray(rids)
             s_valid_np = np.asarray(self.state["s_valid"])
+            self._prompt_pos[:] = np.asarray(self.state["prompt_pos"])
+            self._rid_dev[:] = np.asarray(self.state["rid"])
+        if toks_np.ndim == 2:       # non-speculative: one plane per round
+            toks_np = toks_np[:, :, None]
+            rids_np = rids_np[:, :, None]
         base_round = self.stats.decode_steps
         self.stats.decode_calls += 1
         self.stats.decode_steps += k
@@ -283,32 +339,43 @@ class ServingEngine:
         self.stats.prefill_tokens += int(counters["prefill_steps"])
         self.stats.prefill_rounds += int(counters["prefill_rounds"])
         self.stats.wasted_slot_steps += int(counters["wasted_slot_steps"])
+        self.stats.draft_proposed += int(counters.get("draft_proposed", 0))
+        self.stats.draft_accepted += int(counters.get("draft_accepted", 0))
 
         now = time.perf_counter()
+        drained = 0
         for slot in range(self.max_batch):
             for j in range(k):
-                rid = int(rids_np[slot, j])
-                if rid < 0:
-                    continue
-                req = self.current[slot]
-                if req is None or req.rid != rid:
-                    req = self._promote(slot)   # armed mid-superstep
-                    assert req.rid == rid, (req.rid, rid)
-                t = int(toks_np[slot, j])
-                if not req.out:
-                    req.first_token_s = now
-                    req.first_round = base_round + j
-                    self.stats.record_first_token(
-                        now - req.submitted_s,
-                        base_round + j + 1 - req.submit_round)
-                req.out.append(t)
-                self.stats.decode_tokens += 1
-                if (req.eos is not None and t == req.eos) or \
-                        len(req.out) >= req.max_new:
-                    self._finish(req, now, base_round + j)
+                for c in range(toks_np.shape[2]):
+                    rid = int(rids_np[slot, j, c])
+                    if rid < 0:
+                        continue
+                    req = self.current[slot]
+                    if req is None or req.rid != rid:
+                        req = self._promote(slot)   # armed mid-superstep
+                        assert req.rid == rid, (req.rid, rid)
+                    t = int(toks_np[slot, j, c])
+                    if not req.out:
+                        req.first_token_s = now
+                        req.first_round = base_round + j
+                        self.stats.record_first_token(
+                            now - req.submitted_s,
+                            base_round + j + 1 - req.submit_round)
+                    req.out.append(t)
+                    drained += 1
+                    if (req.eos is not None and t == req.eos) or \
+                            len(req.out) >= req.max_new:
+                        self._finish(req, now, base_round + j)
             # armed without emitting yet (still prefilling at call end)
             if self.staged[slot] is not None and not s_valid_np[slot]:
                 self._promote(slot)
+        self.stats.decode_tokens += drained
+        # non_spec_tokens: tokens the non-speculative path contributes --
+        # one per emitting slot-round.  The device counts those rounds
+        # under speculation; without it every drained token is one.
+        self.stats.non_spec_tokens += int(
+            counters["emit_rounds"]) if "emit_rounds" in counters \
+            else drained
         # re-sync the staging mirror with what the device consumed
         self._smirror["s_valid"][:] = s_valid_np
         return (sum(r is not None for r in self.current)
@@ -374,6 +441,15 @@ def generate_one(cfg, params, prompt: List[int], max_new: int = 32,
     equivalence on the parallel side, and
     test_generate_one_matches_parallel_prefill pins it here.)
     """
+    # same cache-position budget as ServingEngine.submit: the request
+    # consumes len(prompt) + max_new - 1 positions.  KV-cache archs would
+    # otherwise scatter past max_len (silently dropped under jit -- wrong
+    # attention), recurrent archs would just mis-count; both are bugs.
+    if len(prompt) + max_new - 1 > max_len:
+        raise ValueError(
+            f"prompt ({len(prompt)}) + max_new ({max_new}) needs "
+            f"{len(prompt) + max_new - 1} cache positions, exceeding "
+            f"max_len ({max_len})")
     cache = lm.init_cache(cfg, 1, max_len)
     step = _decode_step_fn(cfg)
     logits = None

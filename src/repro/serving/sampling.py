@@ -77,11 +77,11 @@ def _support_mask(logits: Array, top_k: Array, top_p: Array) -> Array:
     return jnp.where(logits >= cutoff, logits, _NEG)
 
 
-@jax.jit
-def sample_tokens(logits: Array, keys: Array, temperature: Array,
-                  top_k: Array, top_p: Array):
-    """logits: (B, V); keys: (B, 2) uint32; temperature/top_p: (B,) f32;
-    top_k: (B,) int32.  Returns (tokens (B,) int32, advanced keys)."""
+def _sample(logits: Array, keys: Array, temperature: Array,
+            top_k: Array, top_p: Array):
+    """One sampling round (the shared core of ``sample_tokens`` and
+    ``sample_chain`` -- both MUST run the exact same ops so a chained
+    position-0 sample is bit-identical to a standalone call)."""
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
@@ -94,3 +94,38 @@ def sample_tokens(logits: Array, keys: Array, temperature: Array,
                                                ).astype(jnp.int32)
     tokens = jnp.where(temperature > 0, sampled, greedy)
     return tokens, new_keys
+
+
+@jax.jit
+def sample_tokens(logits: Array, keys: Array, temperature: Array,
+                  top_k: Array, top_p: Array):
+    """logits: (B, V); keys: (B, 2) uint32; temperature/top_p: (B,) f32;
+    top_k: (B,) int32.  Returns (tokens (B,) int32, advanced keys)."""
+    return _sample(logits, keys, temperature, top_k, top_p)
+
+
+@jax.jit
+def sample_chain(logits: Array, keys: Array, temperature: Array,
+                 top_k: Array, top_p: Array):
+    """Chained per-position sampling for speculative verify.
+
+    logits: (B, W, V) -- per-position verify logits from one chunk pass.
+    Position ``i`` is sampled exactly as the ``i``-th of ``W`` sequential
+    ``sample_tokens`` calls would be: the key chain advances one split
+    per position, so a row that commits ``e`` positions this round lands
+    on the same key state as ``e`` non-speculative rounds -- which is
+    what keeps seeded speculative streams bit-identical to the
+    non-speculative engine (emission-aligned keys, see the module
+    docstring).
+
+    Returns ``(tokens (B, W) int32, keys_after (B, W, 2) uint32)`` where
+    ``keys_after[:, i]`` is the key state after ``i + 1`` samples (the
+    caller gathers the slot's new key at its last committed position;
+    ``keys_after[:, 0]`` equals ``sample_tokens``'s advanced keys).
+    """
+    def body(k, lg):
+        toks, nk = _sample(lg, k, temperature, top_k, top_p)
+        return nk, (toks, nk)
+
+    _, (toks, nks) = jax.lax.scan(body, keys, jnp.moveaxis(logits, 1, 0))
+    return jnp.moveaxis(toks, 0, 1), jnp.moveaxis(nks, 0, 1)

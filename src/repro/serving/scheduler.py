@@ -79,10 +79,21 @@ class EngineStats:
     rounds); ``itl_s`` is the per-request mean inter-token gap in wall
     seconds (host drain granularity -- the load signal), while
     ``itl_rounds`` is the same gap in device rounds.  The superstep
-    never stalls an emitting row, so ``itl_rounds`` is 1.0 by
-    construction; it is kept as a regression canary -- any deviation
-    means a scheduler/preemption change started inserting idle rounds
-    into running streams.
+    never stalls an emitting row, so without speculation ``itl_rounds``
+    is 1.0 by construction; it is kept as a regression canary -- any
+    deviation above 1.0 means a scheduler/preemption change started
+    inserting idle rounds into running streams, while values below 1.0
+    are exactly the speculative multi-emit win.
+
+    Speculative decoding: ``draft_proposed`` / ``draft_accepted`` count
+    draft tokens offered to / accepted by the verifier, and
+    ``non_spec_tokens`` counts the tokens the non-speculative path
+    contributes (one per emitting slot-round -- the verify round's own
+    token).  The exact identities: ``decode_tokens == draft_accepted +
+    non_spec_tokens``, and the slot-step identity above holds with
+    ``decode_tokens`` replaced by ``non_spec_tokens`` (a spec round is
+    still ONE slot-step however many tokens it emits).
+    ``snapshot()['accept_rate']`` is the trajectory metric.
     """
     prompt_chunk: int = 1
     submitted: int = 0
@@ -95,6 +106,9 @@ class EngineStats:
     decode_calls: int = 0
     slot_steps: int = 0
     wasted_slot_steps: int = 0
+    draft_proposed: int = 0
+    draft_accepted: int = 0
+    non_spec_tokens: int = 0
     queue_peak: int = 0
     decode_time_s: float = 0.0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
@@ -153,6 +167,8 @@ class EngineStats:
             self.decode_calls / max(self.decode_tokens, 1))
         d["wasted_slot_fraction"] = (
             self.wasted_slot_steps / max(self.slot_steps, 1))
+        d["accept_rate"] = (
+            self.draft_accepted / max(self.draft_proposed, 1))
         d["ttft_s_mean"] = (sum(self.ttft_s) / len(self.ttft_s)
                             if self.ttft_s else 0.0)
         d["ttft_s_p95"] = _percentile(self.ttft_s, 0.95)

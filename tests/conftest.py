@@ -12,15 +12,37 @@ Two things live here:
    test (seeded from the test name, so runs are reproducible) and always
    includes the boundary values.
 
-2. The ``slow`` marker registration lives in ``pytest.ini``; nothing to do
+2. A module-scoped cache flush: a full tier-1 run jit-compiles hundreds of
+   programs (interpret-mode Pallas kernels dominate), and jaxlib's CPU
+   backend can segfault inside ``backend_compile`` late in the run once
+   that many executables are live (reproducible at ~290 tests in, always
+   while compiling a fresh ``lm.prefill`` shape; any single module passes
+   in isolation).  Dropping the compiled-program caches between modules
+   bounds the live-executable count -- each module re-jits only its own
+   shapes, so the overhead is small next to the interpret-mode tests.
+
+3. The ``slow`` marker registration lives in ``pytest.ini``; nothing to do
    here beyond keeping imports cheap.
 """
 
 from __future__ import annotations
 
+import gc
 import random
 import sys
 import types
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_live_jax_executables():
+    """Flush jit caches after every test module (see module docstring, #2)."""
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()
 
 try:  # pragma: no cover - exercised only when hypothesis is installed
     import hypothesis  # noqa: F401

@@ -467,9 +467,9 @@ def test_row_eta_accounts_for_packed_prefill():
     engine._stage()
     engine._upload_staging()
     engine.step(n_tokens=1)     # arm both rows (1 packed round each)
-    # row 0: ceil(9-? ...) -- first round consumed 4 of 9 prompt tokens,
-    # host still sees the full prompt (no out yet): ceil(9/4)=3 + 5
-    assert engine._row_eta(0) == 3 + 5
+    # row 0: first round consumed 4 of 9 prompt tokens, and the host
+    # mirror of prompt_pos knows it: ceil((9-4)/4)=2 + 5
+    assert engine._row_eta(0) == 2 + 5
     # row 1: 2-token prompt emitted its first token in round 0
     assert engine._row_eta(1) == 5 - len(engine.current[1].out)
     # idle rows report 0

@@ -1,0 +1,242 @@
+"""Speculative decoding: draft -> chunk-verify -> O(d_hidden) rollback.
+
+Speculation may only change *when* tokens are emitted -- never what gets
+generated.  The contract tested here, bottom-up:
+
+  * admission boundary: a request needs ``len(prompt) + max_new - 1``
+    cache positions -- submit/generate_one accept exactly that and
+    reject one more (the off-by-one regression);
+  * every draft source (n-gram self-draft, tiny draft model, the
+    constant-token rejection stressor) streams bit-identical to the
+    non-speculative engine -- greedy AND seeded -- across decode_block,
+    prompt_chunk and draft-length combos, for both cell archs;
+  * rollback is exact at the extremes: first-token rejection (every
+    draft thrown away, state rolls back to the one committed position),
+    full acceptance (target-as-draft oracle: ``draft_accepted ==
+    draft_proposed``), and EOS landing *inside* an accepted draft run
+    (emission truncates at EOS, the slot retires that round);
+  * the stats identities hold exactly: ``decode_tokens ==
+    draft_accepted + non_spec_tokens`` and the slot-step identity with
+    ``non_spec_tokens`` in place of ``decode_tokens`` (a spec round is
+    ONE slot-step however many tokens it emits);
+  * the staging ETA reads device-synced prompt progress, not the full
+    prompt length (the mid-prefill overestimate regression).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.models import lm
+from repro.serving import draft as draft_lib
+from repro.serving.engine import ServingEngine, generate_one
+
+MAX_LEN = 64
+
+
+def _setup(arch):
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(n, seed=0, lo=2, hi=14):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(1, 250, size=int(rng.integers(lo, hi))))
+            for _ in range(n)]
+
+
+def _run_engine(cfg, params, prompts, max_new=10, *, eos=None,
+                temperature=0.0, seed=0, **kw):
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                        seed=seed, **kw)
+    rids = [eng.submit(p, max_new=max_new, temperature=temperature,
+                       top_k=0, top_p=1.0, eos=eos) for p in prompts]
+    outs = eng.run_to_completion()
+    return [outs[r] for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# Admission boundary (the off-by-one regression)
+# ---------------------------------------------------------------------------
+
+def test_submit_accepts_exact_cache_budget():
+    """len(prompt) + max_new - 1 == max_len is admissible: the final
+    output token is emitted without being fed back."""
+    cfg, params = _setup("mingru-lm")
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN)
+    prompt = list(range(1, 11))                        # 10 tokens
+    rid = eng.submit(prompt, max_new=MAX_LEN - len(prompt) + 1)
+    outs = eng.run_to_completion()
+    assert len(outs[rid]) == MAX_LEN - len(prompt) + 1
+
+
+def test_submit_rejects_one_past_cache_budget():
+    cfg, params = _setup("mingru-lm")
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN)
+    prompt = list(range(1, 11))
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(prompt, max_new=MAX_LEN - len(prompt) + 2)
+
+
+def test_generate_one_boundary_matches_submit():
+    cfg, params = _setup("mingru-lm")
+    prompt = list(range(1, 11))
+    out = generate_one(cfg, params, prompt,
+                       max_new=MAX_LEN - len(prompt) + 1, max_len=MAX_LEN)
+    assert len(out) == MAX_LEN - len(prompt) + 1
+    with pytest.raises(ValueError, match="cache positions"):
+        generate_one(cfg, params, prompt,
+                     max_new=MAX_LEN - len(prompt) + 2, max_len=MAX_LEN)
+
+
+# ---------------------------------------------------------------------------
+# Stream parity: speculative == non-speculative, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+@pytest.mark.parametrize("k,c,s", [(1, 1, 1), (4, 2, 3), (3, 4, 4),
+                                   (8, 1, 2)])
+def test_ngram_greedy_streams_bitexact(arch, k, c, s):
+    cfg, params = _setup(arch)
+    prompts = _prompts(5, seed=arch == "minlstm-lm")
+    base, _ = _run_engine(cfg, params, prompts)
+    spec, _ = _run_engine(cfg, params, prompts, speculative="ngram",
+                          draft_len=s, decode_block=k, prompt_chunk=c)
+    assert spec == base
+
+
+@pytest.mark.parametrize("source", ["fixed", "oracle"])
+def test_other_sources_greedy_streams_bitexact(source):
+    cfg, params = _setup("mingru-lm")
+    prompts = _prompts(5, seed=2)
+    base, _ = _run_engine(cfg, params, prompts)
+    if source == "fixed":
+        drf = draft_lib.FixedDraft(251, draft_len=3)
+    else:
+        drf = draft_lib.ModelDraft(cfg, params, draft_len=3)
+    spec, _ = _run_engine(cfg, params, prompts, speculative=drf,
+                          decode_block=4, prompt_chunk=2)
+    assert spec == base
+
+
+@pytest.mark.parametrize("arch", ["mingru-lm", "minlstm-lm"])
+def test_seeded_sampling_unchanged_under_speculation(arch):
+    """Emission-aligned keys: a request's k-th output token uses the
+    k-th key in its slot chain whether it arrived via a spec multi-emit
+    or a plain round, so seeded streams are bit-identical."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(4, seed=3)
+    base, _ = _run_engine(cfg, params, prompts, temperature=0.8, seed=7)
+    for s in (1, 3):
+        spec, _ = _run_engine(cfg, params, prompts, temperature=0.8,
+                              seed=7, speculative="ngram", draft_len=s,
+                              decode_block=3, prompt_chunk=2)
+        assert spec == base, f"draft_len={s}"
+
+
+# ---------------------------------------------------------------------------
+# Rollback extremes
+# ---------------------------------------------------------------------------
+
+def test_first_token_rejection_rolls_back_exactly():
+    """A constant-token draft the target never emits: every proposal is
+    rejected at position 0, so every round commits exactly one token
+    and the stream must still match -- the rollback-to-prefix path
+    under maximal stress."""
+    cfg, params = _setup("mingru-lm")
+    prompts = _prompts(4, seed=4)
+    base, _ = _run_engine(cfg, params, prompts)
+    drf = draft_lib.FixedDraft(251, draft_len=4)
+    spec, eng = _run_engine(cfg, params, prompts, speculative=drf,
+                            decode_block=4)
+    assert spec == base
+    assert eng.stats.draft_proposed > 0
+    assert eng.stats.draft_accepted == 0
+    assert eng.stats.non_spec_tokens == eng.stats.decode_tokens
+
+
+def test_oracle_draft_full_acceptance():
+    """The target model drafting for itself is exact: every proposed
+    token is accepted (greedy verify reproduces greedy propose)."""
+    cfg, params = _setup("mingru-lm")
+    prompts = _prompts(4, seed=5)
+    base, _ = _run_engine(cfg, params, prompts)
+    drf = draft_lib.ModelDraft(cfg, params, draft_len=3)
+    spec, eng = _run_engine(cfg, params, prompts, speculative=drf,
+                            decode_block=4)
+    assert spec == base
+    assert eng.stats.draft_proposed > 0
+    assert eng.stats.draft_accepted == eng.stats.draft_proposed
+    snap = eng.stats.snapshot()
+    assert snap["accept_rate"] == 1.0
+    # multi-emit is real: fewer emitting rounds than tokens
+    assert eng.stats.non_spec_tokens < eng.stats.decode_tokens
+    assert snap["itl_rounds_mean"] < 1.0
+
+
+def test_eos_inside_accepted_draft_truncates():
+    """EOS emitted mid-way through an accepted draft run must truncate
+    the emission at the EOS position and retire the slot that round."""
+    cfg, params = _setup("mingru-lm")
+    prompts = _prompts(3, seed=3)
+    base, _ = _run_engine(cfg, params, prompts, max_new=12)
+    # pick an EOS token whose FIRST occurrence is mid-stream (index >= 2)
+    # in some row, so the oracle's accepted draft run straddles it
+    eos = next((t for o in base for j, t in enumerate(o)
+                if j >= 2 and t not in o[:j]), None)
+    assert eos is not None, "degenerate reference streams"
+    ref, _ = _run_engine(cfg, params, prompts, max_new=12, eos=eos)
+    drf = draft_lib.ModelDraft(cfg, params, draft_len=4)
+    spec, eng = _run_engine(cfg, params, prompts, max_new=12, eos=eos,
+                            speculative=drf, decode_block=4)
+    assert spec == ref
+    # the EOS stream really ends in eos and is shorter than max_new
+    assert any(o and o[-1] == eos and len(o) < 12 for o in spec)
+    assert eng.stats.completed == len(prompts)
+
+
+# ---------------------------------------------------------------------------
+# Stats identities
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_kw", [
+    dict(),
+    dict(speculative="ngram", draft_len=3),
+    dict(speculative="ngram", draft_len=3, prompt_chunk=4),
+])
+def test_stats_identities(spec_kw):
+    cfg, params = _setup("mingru-lm")
+    prompts = _prompts(6, seed=7)
+    outs, eng = _run_engine(cfg, params, prompts, decode_block=4,
+                            **spec_kw)
+    st = eng.stats
+    assert st.decode_tokens == sum(len(o) for o in outs)
+    assert st.decode_tokens == st.draft_accepted + st.non_spec_tokens
+    # a request's first token rides its final prefill round, so each
+    # completed request contributes one prefill/emit overlap round
+    overlaps = len(st.ttft_rounds)
+    assert st.slot_steps == (st.prefill_rounds + st.non_spec_tokens
+                             - overlaps + st.wasted_slot_steps)
+    if spec_kw.get("speculative"):
+        assert st.draft_proposed > 0
+        assert 0 <= st.draft_accepted <= st.draft_proposed
+    else:
+        assert st.draft_proposed == 0 and st.draft_accepted == 0
+
+
+def test_row_eta_uses_device_synced_prompt_progress():
+    """Mid-prefill the ETA must charge only the prompt tokens the device
+    has NOT yet consumed (the synced prompt_pos mirror)."""
+    cfg, params = _setup("mingru-lm")
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                        prompt_chunk=4)
+    eng.submit(list(range(1, 14)), max_new=5)          # 13 prompt tokens
+    eng._stage()
+    eng._upload_staging()
+    eng.step(n_tokens=1)       # device consumed 4 of 13 prompt tokens
+    assert int(eng._prompt_pos[0]) == 4
+    assert eng._row_eta(0) == -(-(13 - 4) // 4) + 5    # ceil(9/4)+5 = 8
+    eng.step(n_tokens=1)
+    assert eng._row_eta(0) == -(-(13 - 8) // 4) + 5    # ceil(5/4)+5 = 7
