@@ -4,7 +4,7 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-serving bench-engine bench-train bench-decode \
-	bench-serve bench-spec example-serve
+	bench-serve bench-spec bench-chaos example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -12,9 +12,9 @@ test:            ## full tier-1 suite (what CI runs)
 test-fast:       ## skip the heavy model-smoke / multi-device tier
 	$(PYTEST) -q -m "not slow"
 
-test-serving:    ## engine + scheduler + sampling + kernel-scan tests only
+test-serving:    ## engine + scheduler + sampling + faults + kernel-scan tests only
 	$(PYTEST) -q tests/test_serving.py tests/test_scheduler.py \
-		tests/test_sampling.py tests/test_scan.py
+		tests/test_sampling.py tests/test_faults.py tests/test_scan.py
 
 bench-engine:    ## superstep-vs-v1 serving throughput sweep
 	PYTHONPATH=src python -m benchmarks.engine_throughput
@@ -32,6 +32,9 @@ bench-serve:     ## mixed arrival-trace: per-phase vs superstep, prompt-chunk sw
 bench-spec:      ## bench-serve + speculative (draft-length x chunk) sweep -> BENCH_serve.json
 	PYTHONPATH=src python -m benchmarks.engine_throughput --speculative \
 		--prompt-chunks 1 4 16 --draft-lens 2 4 8
+
+bench-chaos:     ## chaos + overload replay: fault-rate sweep + bounded-queue shedding -> BENCH_serve.json "robustness"
+	PYTHONPATH=src python -m benchmarks.engine_throughput --faults
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -22,6 +22,14 @@ Three scenarios:
     engine replaying the trace at every C for wall-clock, with greedy
     streams asserted bit-identical across chunk sizes.
     Writes BENCH_serve.json (``--tiny`` -> BENCH_serve.tiny.json).
+  * ``--faults`` -- the robustness scenario: the same mixed trace
+    replayed under a seeded chaos injector sweep (NaN state corruption,
+    dropped staging uploads, stragglers; every request must reach a
+    terminal status with the slot-step identity and terminal accounting
+    exact, and the zero-rate replay bit-identical to a no-injector
+    replay), plus a 2x-arrival overload replay against a bounded queue
+    (the engine must shed/reject instead of growing without bound).
+    Merges a ``robustness`` section into BENCH_serve.json.
   * ``--speculative`` (implies ``--mixed``) -- the same trace replayed
     under n-gram speculative decoding over the (prompt-chunk,
     draft-length) grid: accept rate, inter-token latency in rounds, and
@@ -47,6 +55,8 @@ mode: honest but not the TPU story; the structural column is.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -58,6 +68,7 @@ from benchmarks.bench_utils import dump_json, header, row
 from repro.configs import archs
 from repro.models import lm
 from repro.serving.engine import ServingEngine, generate_one, replay_trace
+from repro.serving.faults import FaultInjector
 
 
 # ---------------------------------------------------------------------------
@@ -665,6 +676,148 @@ def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
     return payload
 
 
+# ---------------------------------------------------------------------------
+# --faults: chaos replay + overload shedding (the robustness scenario)
+# ---------------------------------------------------------------------------
+
+def _identity_ok(snap) -> bool:
+    """Extended slot-step identity of a (non-speculative) replay.  The
+    overlap term is the number of recorded first tokens (one per service
+    epoch that emitted anything); the snapshot drops list fields, so the
+    replay carries the count along as ``_n_first_tokens``."""
+    return snap["slot_steps"] == (
+        snap["prefill_rounds"] + snap["decode_tokens"]
+        - snap["_n_first_tokens"] + snap["wasted_slot_steps"]
+        + snap["nonfinite_decode_rounds"])
+
+
+def _replay_under_faults(cfg, params, trace, batch: int, k: int,
+                         injector, max_len: int = 160, **engine_kw):
+    """Replay the arrival trace on a fresh engine (optionally with a
+    chaos injector) until every request is terminal.  Returns
+    (stats snapshot + derived robustness metrics, streams by index)."""
+    engine = ServingEngine(cfg, params, max_batch=batch, max_len=max_len,
+                           decode_block=k, faults=injector, **engine_kw)
+    rids = []
+    replay_trace(engine, trace, lambda i, r: rids.append(engine.submit(
+        _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
+        temperature=0.0, deadline=r.get("deadline"))))
+    if len(engine.finished) != len(trace):
+        raise SystemExit(
+            f"chaos replay leaked requests: {len(engine.finished)} "
+            f"terminal of {len(trace)} submitted")
+    snap = engine.stats.snapshot()
+    snap["_n_first_tokens"] = len(engine.stats.ttft_rounds)
+    if not _identity_ok(snap):
+        raise SystemExit(
+            f"slot-step identity violated under faults: {snap}")
+    s = engine.stats
+    if s.submitted != (s.completed + s.cancelled + s.timed_out + s.failed
+                       + s.shed + s.rejected):
+        raise SystemExit(f"terminal accounting violated: {snap}")
+    good_toks = sum(len(r.out) for r in engine.finished.values()
+                    if r.status == "COMPLETED")
+    snap["goodput_tokens"] = good_toks
+    snap["goodput_tokens_per_s"] = good_toks / max(s.decode_time_s, 1e-9)
+    if injector is not None:
+        snap["faults_injected"] = injector.counts()
+    return snap, [engine.finished[rid].out for rid in rids]
+
+
+_ROBUST_KEYS = (
+    "submitted", "completed", "completion_rate", "cancelled", "timed_out",
+    "failed", "retried", "shed", "rejected", "quarantined",
+    "nonfinite_decode_rounds", "queue_peak", "goodput_tokens",
+    "goodput_tokens_per_s", "decode_tokens", "wasted_slot_fraction")
+
+
+def bench_robustness(arch: str, batch: int, n_requests: int, k: int,
+                     fault_rates=(0.0, 0.002, 0.01),
+                     out_path: str = "BENCH_serve.json"):
+    """Chaos + overload scenario (the fault-tolerance acceptance run).
+
+    Replays the mixed arrival trace under a seeded ``FaultInjector``
+    sweep (NaN state corruption + dropped staging uploads + stragglers
+    at each rate): every submitted request must reach a terminal status,
+    the extended slot-step identity and terminal accounting must hold
+    exactly, and the rate-0.0 replay must be bit-identical to a
+    no-injector replay (the harness is inert when idle).  Then replays a
+    2x-arrival overload trace against a bounded queue: the engine must
+    shed/reject instead of queueing without bound.  Results land in the
+    ``robustness`` section of BENCH_serve.json, merged into the existing
+    payload when present.
+    """
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(n_requests, batch)
+    header(f"chaos + overload serving {arch}: {n_requests} reqs, "
+           f"batch={batch}, K={k}, fault rates {list(fault_rates)}, "
+           f"backend={jax.default_backend()}")
+
+    base_snap, base_outs = _replay_under_faults(cfg, params, trace, batch,
+                                                k, None)
+    by_rate = {}
+    for rate in sorted({float(r) for r in fault_rates}):
+        inj = FaultInjector(seed=1, nan_rate=rate, drop_rate=rate,
+                            straggler_rate=rate, straggler_s=0.002)
+        snap, outs = _replay_under_faults(cfg, params, trace, batch, k,
+                                          inj, max_retries=2,
+                                          retry_backoff=4)
+        if rate == 0.0 and outs != base_outs:
+            raise SystemExit("zero-rate injector perturbed streams -- "
+                             "the fault harness is not inert")
+        by_rate[f"{rate:g}"] = {key: snap[key] for key in _ROBUST_KEYS}
+        by_rate[f"{rate:g}"]["faults_injected"] = snap["faults_injected"]
+        row(f"serve_chaos_rate{rate:g}",
+            snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
+            f"completion {snap['completion_rate']:.2f};"
+            f"quarantined {snap['quarantined']};"
+            f"retried {snap['retried']};failed {snap['failed']};"
+            f"goodput {snap['goodput_tokens_per_s']:.1f} tok/s")
+
+    # ---- overload: 2x the arrival rate against a bounded queue --------
+    overload = make_trace(n_requests, batch, seed=1, rate=4.0)
+    for i, r in enumerate(overload):    # a deadline slice exercises
+        if i % 4 == 0:                  # SHED_UNMEETABLE at admission
+            r["deadline"] = 2 * (r["prompt_len"] + r["max_new"])
+    max_queue = max(4, 2 * batch)
+    snap, _ = _replay_under_faults(cfg, params, overload, batch, k, None,
+                                   max_queue=max_queue,
+                                   high_watermark=1.0, low_watermark=0.5)
+    if snap["queue_peak"] > max_queue:
+        raise SystemExit(
+            f"bounded queue exceeded its bound: peak "
+            f"{snap['queue_peak']} > {max_queue}")
+    if snap["rejected"] + snap["shed"] + snap["timed_out"] == 0:
+        raise SystemExit("overload replay shed nothing -- backpressure "
+                         "is not engaging")
+    over = {key: snap[key] for key in _ROBUST_KEYS}
+    over["max_queue"] = max_queue
+    row(f"serve_overload_q{max_queue}",
+        snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
+        f"completion {snap['completion_rate']:.2f};"
+        f"rejected {snap['rejected']};shed {snap['shed']};"
+        f"timed_out {snap['timed_out']};queue_peak {snap['queue_peak']}")
+
+    robustness = {
+        "arch": arch, "batch": batch, "n_requests": n_requests,
+        "decode_block": k, "max_retries": 2,
+        "fault_rates": by_rate,
+        "fault_free": {key: base_snap[key] for key in _ROBUST_KEYS},
+        "overload_2x": over,
+    }
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged["robustness"] = robustness
+    dump_json(out_path, merged)
+    return robustness
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mingru-lm")
@@ -697,10 +850,32 @@ def main(argv=None):
     ap.add_argument("--draft-lens", type=int, nargs="*", default=None,
                     help="--speculative: draft lengths S to sweep "
                          "(default 2 4 8, tiny 4)")
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos + overload scenario: replay the mixed "
+                         "trace under a seeded fault-rate sweep (NaN "
+                         "corruption, dropped uploads, stragglers) plus "
+                         "a 2x-arrival overload against a bounded "
+                         "queue; merges a 'robustness' section into "
+                         "BENCH_serve.json")
+    ap.add_argument("--fault-rates", type=float, nargs="*", default=None,
+                    help="--faults: per-opportunity fault rates to sweep "
+                         "(default 0.0 0.002 0.01, tiny 0.0 0.01)")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: tiny workload -> BENCH_*.tiny.json "
                          "(never clobbers the tracked trajectory)")
     args = ap.parse_args(argv)
+    if args.faults:
+        n_req = args.n_requests or (24 if args.tiny else 96)
+        k = max(args.decode_blocks) if args.decode_blocks else 8
+        rates = args.fault_rates if args.fault_rates is not None else (
+            [0.0, 0.01] if args.tiny else [0.0, 0.002, 0.01])
+        if args.tiny:
+            args.batches = [min(4, max(args.batches))]
+        out = args.out or ("BENCH_serve.tiny.json" if args.tiny
+                           else "BENCH_serve.json")
+        bench_robustness(args.arch, max(args.batches), n_req, k,
+                         fault_rates=rates, out_path=out)
+        return
     if args.mixed or args.speculative:
         n_req = args.n_requests or (32 if args.tiny else 96)
         k = max(args.decode_blocks) if args.decode_blocks else 8

@@ -18,6 +18,14 @@ arrival times) and per-request TTFT / inter-token latency is reported --
 the continuous-admission regime the superstep engine is built for.
 
     PYTHONPATH=src python examples/serve_batched.py --trace 12
+
+``--chaos`` arms the deterministic fault injector on top of either mode:
+NaN state corruption, dropped staging uploads and straggler rounds are
+injected at a seeded rate, the non-finite health guard quarantines and
+retries poisoned requests, and the lifecycle summary shows every request
+still reaching a terminal status.
+
+    PYTHONPATH=src python examples/serve_batched.py --trace 12 --chaos
 """
 
 import argparse
@@ -30,6 +38,7 @@ from repro.configs import archs
 from repro.data.lm_corpus import decode_bytes
 from repro.models import lm
 from repro.serving.engine import ServingEngine, replay_trace
+from repro.serving.faults import FaultInjector
 
 
 def run_fixed(engine):
@@ -93,15 +102,24 @@ def main(argv=None):
                          "bit-identical; watch itl_rounds drop below 1)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="max draft tokens proposed per round (S)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject deterministic faults (NaN corruption, "
+                         "dropped uploads, stragglers) and watch the "
+                         "quarantine/retry layer keep every request "
+                         "terminal")
     args = ap.parse_args(argv)
 
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    faults = FaultInjector(seed=2, nan_rate=0.01, drop_rate=0.05,
+                           straggler_rate=0.05, straggler_s=0.002) \
+        if args.chaos else None
     engine = ServingEngine(cfg, params, max_batch=4, max_len=256,
                            decode_block=args.decode_block,
                            prompt_chunk=args.prompt_chunk,
                            speculative=args.speculative,
-                           draft_len=args.draft_len)
+                           draft_len=args.draft_len,
+                           faults=faults, max_retries=2)
 
     if args.trace:
         outs, dt = run_trace(engine, args.trace)
@@ -125,6 +143,12 @@ def main(argv=None):
           f"({snap['ttft_s_mean'] * 1e3:.1f}ms), "
           f"inter-token: {snap['itl_s_mean'] * 1e3:.1f}ms "
           f"({snap['itl_rounds_mean']:.2f} rounds/token)")
+    if args.chaos:
+        print(f"chaos: injected {faults.counts()} -> "
+              f"{snap['completed']}/{snap['submitted']} completed, "
+              f"quarantined {snap['quarantined']}, "
+              f"retried {snap['retried']}, failed {snap['failed']} "
+              f"(every request terminal)")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,14 @@ decode and sampling all happen inside one jitted device loop per
 ``--decode-block K`` rounds (``lm.superstep``), with finished slots
 re-armed from their staging buffers in-loop.  ``--speculative ngram``
 turns on speculative decoding (n-gram self-drafting, verified in one
-chunk pass per round, streams bit-identical).  Prints completions + the
-engine stats snapshot (prefill/decode token counters, wasted slot steps,
-per-request TTFT and inter-token latency, tokens/s, host round-trips per
-decoded token, draft accept rate).
+chunk pass per round, streams bit-identical).  ``--max-queue``,
+``--deadline-rounds``, ``--priority`` and ``--max-retries`` expose the
+fault-tolerance layer (bounded admission, EDF deadlines, NaN-quarantine
+retry -- see README "Failure model").  Prints completions (tagged with
+their terminal status when not COMPLETED) + the engine stats snapshot
+(prefill/decode token counters, wasted slot steps, per-request TTFT and
+inter-token latency, tokens/s, host round-trips per decoded token, draft
+accept rate, lifecycle/failure counters).
 """
 
 from __future__ import annotations
@@ -61,6 +65,24 @@ def main(argv=None):
                          "below one round on accepted drafts")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="max draft tokens proposed per round (S)")
+    ap.add_argument("--priority", type=int, default=1,
+                    help="scheduling class for all submitted prompts "
+                         "(lower = more urgent; EDF-with-aging order)")
+    ap.add_argument("--deadline-rounds", type=int, default=None,
+                    help="per-request deadline in device rounds from "
+                         "submission; overdue requests are TIMED_OUT "
+                         "(partial output kept), and requests whose "
+                         "deadline the capacity estimate cannot meet "
+                         "are SHED at admission")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (0 = unbounded): at "
+                         "the high watermark new requests are REJECTED "
+                         "until the queue drains below the low "
+                         "watermark")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="quarantine retry budget: how many times a "
+                         "request killed by the non-finite health guard "
+                         "is re-enqueued before it is FAILED")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -79,12 +101,16 @@ def main(argv=None):
                            decode_block=args.decode_block,
                            prompt_chunk=args.prompt_chunk,
                            speculative=args.speculative,
-                           draft_len=args.draft_len)
+                           draft_len=args.draft_len,
+                           max_queue=args.max_queue,
+                           max_retries=args.max_retries)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
                             temperature=args.temperature,
-                            top_k=args.top_k, top_p=args.top_p)
+                            top_k=args.top_k, top_p=args.top_p,
+                            priority=args.priority,
+                            deadline=args.deadline_rounds)
         rids[rid] = p
 
     t0 = time.time()
@@ -92,7 +118,9 @@ def main(argv=None):
     dt = time.time() - t0
     n_tokens = sum(len(o) for o in outs.values())
     for rid, toks in sorted(outs.items()):
-        print(f"--- [{rids[rid]!r}] -> {decode_bytes(toks)!r}")
+        req = engine.finished[rid]
+        tag = "" if req.status == "COMPLETED" else f" [{req.status}]"
+        print(f"--- [{rids[rid]!r}]{tag} -> {decode_bytes(toks)!r}")
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()
@@ -116,6 +144,14 @@ def main(argv=None):
               f"accepted ({snap['accept_rate']:.1%}); "
               f"{snap['non_spec_tokens']} of {snap['decode_tokens']} "
               f"tokens from the non-speculative path")
+    print(f"lifecycle: {snap['completed']}/{snap['submitted']} completed "
+          f"({snap['completion_rate']:.0%}), "
+          f"cancelled {snap['cancelled']}, timed_out {snap['timed_out']}, "
+          f"failed {snap['failed']}, shed {snap['shed']}, "
+          f"rejected {snap['rejected']}; "
+          f"quarantined {snap['quarantined']} "
+          f"(retried {snap['retried']}, "
+          f"nonfinite rounds {snap['nonfinite_decode_rounds']})")
     print("engine stats: " + ", ".join(
         f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in sorted(snap.items())))

@@ -747,6 +747,20 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
     -- the idle waste this loop exists to eliminate; rows keep stepping
     regardless so the batch stays dense and shapes stay static).
 
+    **Numerical health guard**: every round, each row's fresh logits
+    (and recurrent state, for recurrent-cache archs) are reduced to a
+    per-slot finite/non-finite bit.  A row that goes non-finite is
+    killed THAT round -- its emission is suppressed so garbage never
+    reaches the output buffers, and the next round's re-admission
+    re-arms it through the same state-zeroing path a normal retirement
+    uses.  ``counters['nonfinite']`` is the per-slot-per-round flag
+    plane (B, n) the host uses to attribute the kill to a request, and
+    ``counters['nonfinite_decode_rounds']`` counts suppressed rounds on
+    non-prefilling rows (the slot-step identity's correction term: such
+    a round is neither a prefill round nor an emitted token).  On a
+    healthy batch the guard is the identity -- every select masks with
+    an all-False flag -- so fault-free streams stay bit-exact.
+
     ``n`` and ``prompt_chunk`` must be static (the engine jits one
     program per block size); ``prompt_chunk > 1`` requires
     ``supports_prompt_packing(cfg)``.
@@ -792,7 +806,7 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
     chunk = int(prompt_chunk)
 
     def body(carry, _):
-        st, prefill_ct, round_ct, waste_ct = carry
+        st, prefill_ct, round_ct, waste_ct, nf_ct = carry
         st = dict(st)
 
         # 1. re-admission from the staging buffer
@@ -854,30 +868,50 @@ def superstep(params, cfg, state: Dict[str, Any], n: int, *,
                                            packed_step, plain_step,
                                            st["cache"])
 
+        # 3b. numerical health guard: reduce this round's logits (and
+        # the recurrent state, when the arch carries one) to a per-slot
+        # finite bit.  Poisoned rows are killed this round with their
+        # emission suppressed; re-admission re-zeroes their state.  On a
+        # healthy batch ``bad`` is all-False and every masked op below
+        # is the identity, so fault-free streams are bit-exact.
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
+        if "h" in st["cache"]:
+            h = st["cache"]["h"]
+            ok = ok & jnp.all(jnp.isfinite(h), axis=tuple(
+                a for a in range(h.ndim) if a != 1))
+        bad = alive & jnp.logical_not(ok)
+        nf_ct = nf_ct + jnp.sum(
+            (bad & jnp.logical_not(prefilling)).astype(jnp.int32))
+
         # 4. sample-or-teacher-force
         toks, new_keys = sampling.sample_tokens(
             logits, st["keys"], st["temperature"], st["top_k"], st["top_p"])
         pos_next = st["prompt_pos"] + take
-        emitting = alive & (pos_next >= st["prompt_len"])
+        emitting = alive & jnp.logical_not(bad) \
+            & (pos_next >= st["prompt_len"])
         st["keys"] = jnp.where(emitting[:, None], new_keys, st["keys"])
         emit = jnp.where(emitting, toks, jnp.int32(-1))
         emit_rid = jnp.where(emitting, st["rid"], jnp.int32(-1))
 
-        # 5. EOS / length-cap retire
+        # 5. EOS / length-cap retire (a non-finite row dies too)
         st["remaining"] = st["remaining"] - emitting.astype(jnp.int32)
         hit_eos = emitting & (st["eos"] >= 0) & (toks == st["eos"])
         died = hit_eos | (emitting & (st["remaining"] <= 0))
-        st["alive"] = alive & jnp.logical_not(died)
+        st["alive"] = alive & jnp.logical_not(died | bad)
         st["tok"] = jnp.where(emitting, toks, st["tok"])
         st["prompt_pos"] = pos_next
-        return (st, prefill_ct, round_ct, waste_ct), (emit, emit_rid)
+        return (st, prefill_ct, round_ct, waste_ct, nf_ct), \
+            (emit, emit_rid, bad)
 
     zero = jnp.zeros((), jnp.int32)
-    (state, prefill_ct, round_ct, waste_ct), (emitted, rids) = lax.scan(
-        body, (state, zero, zero, zero), None, length=n)
+    (state, prefill_ct, round_ct, waste_ct, nf_ct), \
+        (emitted, rids, nonfinite) = lax.scan(
+            body, (state, zero, zero, zero, zero), None, length=n)
     counters = {"prefill_steps": prefill_ct,
                 "prefill_rounds": round_ct,
-                "wasted_slot_steps": waste_ct}
+                "wasted_slot_steps": waste_ct,
+                "nonfinite_decode_rounds": nf_ct,
+                "nonfinite": jnp.swapaxes(nonfinite, 0, 1)}
     return (jnp.swapaxes(emitted, 0, 1), jnp.swapaxes(rids, 0, 1),
             state, counters)
 
@@ -978,6 +1012,19 @@ def _superstep_spec(params, cfg, state: Dict[str, Any], n: int, *,
         logits_all, pstates = decode_verify(params, cfg, tok_blk,
                                             valid_in, st["cache"])
 
+        # 3b. numerical health guard (see the plain loop): per-slot
+        # finite bit over the verify pass's logits and per-position
+        # recurrent states; poisoned rows emit nothing this round and
+        # die, all-False on a healthy batch so streams stay bit-exact
+        ok = jnp.all(jnp.isfinite(logits_all), axis=(1, 2))
+        if "h" in pstates:
+            ph = pstates["h"]
+            ok = ok & jnp.all(jnp.isfinite(ph), axis=tuple(
+                a for a in range(ph.ndim) if a != 1))
+        bad = alive & jnp.logical_not(ok)
+        ct["nonfinite_decode_rounds"] += jnp.sum(
+            (bad & jnp.logical_not(prefilling)).astype(i32))
+
         # 4a. exact per-position tokens under the chained key schedule
         # (decoding rows); position i IS what the i-th non-speculative
         # round would sample, so acceptance never changes content
@@ -1003,13 +1050,15 @@ def _superstep_spec(params, cfg, state: Dict[str, Any], n: int, *,
             jnp.where(is_eos, jnp.arange(n_emit_planes)[None],
                       n_emit_planes), axis=1)
         e = jnp.minimum(lead + 1, first_eos + 1)
-        ct["draft_accepted"] += jnp.sum(jnp.where(decoding, e - 1, 0))
+        ct["draft_accepted"] += jnp.sum(
+            jnp.where(decoding & jnp.logical_not(bad), e - 1, 0))
 
         pos_next = st["prompt_pos"] + take
         pf_emit = prefilling & (pos_next >= st["prompt_len"])
-        emitting = pf_emit | decoding
+        emitting = (pf_emit | decoding) & jnp.logical_not(bad)
         ct["emit_rounds"] += jnp.sum(emitting.astype(i32))
-        n_emit = jnp.where(decoding, e, pf_emit.astype(i32))
+        n_emit = jnp.where(bad, 0,
+                           jnp.where(decoding, e, pf_emit.astype(i32)))
 
         # 4c. multi-emit planes: -1 beyond each row's committed length
         plane = jnp.arange(n_emit_planes)[None]
@@ -1061,16 +1110,18 @@ def _superstep_spec(params, cfg, state: Dict[str, Any], n: int, *,
         st["remaining"] = st["remaining"] - n_emit
         hit_eos = emitting & (st["eos"] >= 0) & (last_tok == st["eos"])
         died = hit_eos | (emitting & (st["remaining"] <= 0))
-        st["alive"] = alive & jnp.logical_not(died)
+        st["alive"] = alive & jnp.logical_not(died | bad)
         st["prompt_pos"] = pos_next
-        return (st, ct), (emit, emit_rid)
+        return (st, ct), (emit, emit_rid, bad)
 
     zero = jnp.zeros((), i32)
     counters0 = {k: zero for k in (
         "prefill_steps", "prefill_rounds", "wasted_slot_steps",
-        "draft_proposed", "draft_accepted", "emit_rounds")}
-    (state, counters), (emitted, rids) = lax.scan(
+        "draft_proposed", "draft_accepted", "emit_rounds",
+        "nonfinite_decode_rounds")}
+    (state, counters), (emitted, rids, nonfinite) = lax.scan(
         body, (state, counters0), None, length=n)
+    counters["nonfinite"] = jnp.swapaxes(nonfinite, 0, 1)
     return (jnp.moveaxis(emitted, 0, 1), jnp.moveaxis(rids, 0, 1),
             state, counters)
 

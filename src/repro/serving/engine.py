@@ -1,4 +1,6 @@
-"""Serving engine v4: continuous batching as ONE on-device superstep.
+"""Serving engine v5: continuous batching as ONE on-device superstep,
+with a fault-tolerance layer (admission control, deadlines, cancellation,
+NaN-quarantine, deterministic chaos injection).
 
 The paper's serving advantage over Transformers is the O(1) recurrent
 state (Were RNNs All We Needed?, section 4.1): a minGRU/minLSTM slot is a
@@ -10,9 +12,12 @@ only jobs are queueing, staging and draining.
 
 Per engine ``step()``:
 
-  * the host stages queued requests into per-slot **staging buffers**
-    (device-resident ``s_*`` arrays in the slot state -- prompt tokens,
-    length cap, stop token, sampling controls, request id);
+  * the host sweeps deadlines (queued, staged and in-flight requests can
+    all time out; in-flight kills retire the slot between supersteps and
+    preserve partial output), then stages queued requests into per-slot
+    **staging buffers** (device-resident ``s_*`` arrays in the slot
+    state -- prompt tokens, length cap, stop token, sampling controls,
+    request id);
   * ONE ``lm.superstep(params, cfg, state, K)`` call lax.scans K rounds
     of *token select -> fused block step -> sample-or-teacher-force ->
     EOS/retire -> re-admission from staging*.  Prefilling rows consume
@@ -22,27 +27,44 @@ Per engine ``step()``:
     under the default ``scan_strategy="auto"``) -- in the same round.
     With ``prompt_chunk=C > 1`` (recurrent-state archs only) a
     prefilling row instead consumes up to C prompt tokens per round via
-    the masked varlen chunk kernels (``lm.decode_chunk``): one weight
-    stream per round amortises over C prompt tokens, winning back the
-    weight-bound regime where one-token-per-round sequential prefill
-    loses to the old parallel-prefill engine.  A row that hits EOS or
-    its length cap is re-armed from its staging buffer on the *next
-    device round*, with zero idle rounds and no host involvement;
+    the masked varlen chunk kernels (``lm.decode_chunk``);
   * the host drains the returned ``(B, K)`` token + request-id buffers
     (the rid plane demuxes rows that served two requests in one call),
-    retires finished requests, and restocks staging.
+    retires finished requests, quarantines rows the in-loop numerical
+    health guard killed (re-enqueueing their request under a bounded
+    retry budget with backoff), and restocks staging.
+
+**Failure model** (see README "Failure model" for the full diagram):
+
+  * ``submit`` returns a request id unconditionally; the *admission
+    verdict* (``scheduler.ADMITTED`` / ``REJECTED_QUEUE_FULL`` /
+    ``SHED_UNMEETABLE_DEADLINE``) lands on ``request.verdict``.  A
+    rejected or shed request is terminal immediately (status SHED) --
+    under a bounded queue the engine sheds load instead of growing
+    without bound.
+  * Every request ends in exactly one terminal status: COMPLETED,
+    CANCELLED (``engine.cancel(rid)``), TIMED_OUT (per-request round
+    deadline), FAILED (non-finite state, retry budget exhausted) or
+    SHED.  ``stats`` counts each.
+  * A row whose activations go non-finite is killed *in-loop* by the
+    superstep's health guard (its emission is suppressed, so garbage
+    never reaches a stream) and re-armed through the same state-zeroing
+    path normal re-admission uses; the host re-enqueues the poisoned
+    request with exponential round backoff until ``max_retries``.
+  * ``faults`` (a ``serving.faults.FaultInjector``) injects NaN state
+    corruption, dropped staging uploads and straggler stalls at named
+    points in ``step`` -- deterministic, seeded, fully inert when None.
+  * Speculative decoding degrades gracefully: a rolling accept-rate
+    floor (``spec_accept_floor``) disables drafting when a hostile
+    input stream makes verify rounds pure overhead.
 
 With ``speculative`` set (a ``serving.draft`` source -- ``"ngram"``
 self-drafting or a tiny draft model), decoding rows propose up to
 ``draft_len`` tokens per device round and the superstep verifies them in
 ONE pass through the same varlen chunk kernels, rolling the O(1)
-recurrent state back to the last accepted position with a single gather
-(no recompute, no paged-KV surgery -- the paper's constant-size state
-makes rollback O(d_hidden) per slot).  The drain buffers grow a plane
-(``(B, K, draft_len + 1)``), a row can emit several tokens per round
-(inter-token latency drops below one round), and streams stay
-bit-identical to the non-speculative engine -- drafts only change
-latency, never content.
+recurrent state back to the last accepted position with a single gather.
+Streams stay bit-identical to the non-speculative engine -- drafts only
+change latency, never content.
 
 There is no separate prefill phase, no chunked-prefill interleave and no
 phase barrier: a long prompt occupies one row while every other row keeps
@@ -53,13 +75,14 @@ inter-token latency.  Greedy engine output is bit-identical to the
 single-request ``generate_one`` reference -- which drives the prompt
 through the same ``decode_step`` path -- for every cache kind and block
 size, under any admission order, mid-superstep arrival and slot reuse
-(tests/test_serving.py, tests/test_decode.py).
+(tests/test_serving.py, tests/test_decode.py, tests/test_faults.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 import time
 from typing import Any, Dict, List, Optional
 
@@ -69,8 +92,25 @@ import numpy as np
 
 from repro.models import lm
 from repro.serving import draft as draft_lib
-from repro.serving.scheduler import (EngineStats, FifoScheduler,
+from repro.serving import sampling
+from repro.serving.scheduler import (ADMITTED, REJECTED_QUEUE_FULL,
+                                     AdmissionScheduler, EngineStats,
                                      SchedulerConfig)
+
+# ---------------------------------------------------------------------------
+# Request lifecycle: QUEUED -> STAGED -> RUNNING -> one terminal status
+# (a quarantine retry moves FAILED-candidate requests back to QUEUED).
+# ---------------------------------------------------------------------------
+QUEUED = "QUEUED"
+STAGED = "STAGED"
+RUNNING = "RUNNING"
+COMPLETED = "COMPLETED"
+CANCELLED = "CANCELLED"
+TIMED_OUT = "TIMED_OUT"
+FAILED = "FAILED"
+SHED = "SHED"
+TERMINAL_STATUSES = frozenset(
+    {COMPLETED, CANCELLED, TIMED_OUT, FAILED, SHED})
 
 
 @dataclasses.dataclass
@@ -85,12 +125,30 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
     done: bool = False
+    # robustness: scheduling class, lifecycle and retry bookkeeping
+    priority: int = 1             # lower = more urgent (EDF tie-break)
+    deadline: Optional[int] = None  # absolute device round, or None
+    status: str = QUEUED
+    verdict: Optional[str] = None   # admission verdict (scheduler.*)
+    retries: int = 0
+    not_before: int = 0           # retry-backoff gate (device round)
     # latency bookkeeping (wall clock + device-round clock)
     submitted_s: float = 0.0
     submit_round: int = 0
     first_token_s: float = 0.0
     first_round: int = 0
     admit_seq: int = -1           # staging order (FIFO fairness witness)
+
+
+class EngineStallError(RuntimeError):
+    """``run_to_completion`` exceeded ``max_steps`` with work still
+    pending.  ``.report`` carries the queue + per-slot occupancy
+    snapshot (``ServingEngine.occupancy_report``) so hangs are
+    diagnosable instead of silent."""
+
+    def __init__(self, message: str, report: Dict[str, Any]):
+        super().__init__(message)
+        self.report = report
 
 
 # staged request fields mirrored host-side as numpy (uploaded on change;
@@ -105,7 +163,13 @@ class ServingEngine:
                  max_len: int = 2048, seed: int = 0,
                  decode_block: int = 1, prompt_chunk: int = 1,
                  speculative=None, draft_len: int = 4,
-                 draft_params=None):
+                 draft_params=None,
+                 max_queue: int = 0, high_watermark: float = 1.0,
+                 low_watermark: float = 0.5, aging_rounds: int = 64,
+                 max_retries: int = 1, retry_backoff: int = 8,
+                 spec_accept_floor: Optional[float] = None,
+                 spec_window: int = 8, spec_cooldown: int = 0,
+                 faults=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -140,14 +204,29 @@ class ServingEngine:
         self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed,
                                         draft=self.draft)
 
-        self.scheduler = FifoScheduler(SchedulerConfig(max_batch=max_batch))
+        self.scheduler = AdmissionScheduler(SchedulerConfig(
+            max_batch=max_batch, max_queue=max_queue,
+            high_watermark=high_watermark, low_watermark=low_watermark,
+            aging_rounds=aging_rounds))
         self.stats = EngineStats(prompt_chunk=self.prompt_chunk)
+        # fault tolerance: quarantine retry budget + backoff (rounds),
+        # chaos injector (None = fully inert), speculative degradation
+        self.max_retries = max(0, int(max_retries))
+        self.retry_backoff = max(0, int(retry_backoff))
+        self.faults = faults
+        self.spec_accept_floor = spec_accept_floor
+        self.spec_window = max(1, int(spec_window))
+        self.spec_cooldown = max(0, int(spec_cooldown))
+        self._spec_active = True
+        self._spec_hist: List = []      # (proposed, accepted) per call
+        self._spec_off_calls = 0
         self._next_rid = 0
         # host mirrors of slot occupancy: the request currently armed in
         # each row, and the request parked in each row's staging buffer
         self.current: List[Optional[Request]] = [None] * max_batch
         self.staged: List[Optional[Request]] = [None] * max_batch
         self.finished: Dict[int, Request] = {}
+        self.requests: Dict[int, Request] = {}   # rid -> every request
 
         # numpy mirrors of the device staging arrays (authoritative on
         # the host side: the device only consumes them, flipping s_valid;
@@ -162,15 +241,51 @@ class ServingEngine:
         self._prompt_pos = np.zeros((max_batch,), np.int32)
         self._rid_dev = np.full((max_batch,), -1, np.int32)
 
-        # one compiled superstep program per distinct block size
-        self._superstep_fns: Dict[int, Any] = {}
+        # one compiled superstep program per (block size, drafting on)
+        self._superstep_fns: Dict[Any, Any] = {}
 
     # ------------------------------------------------------------------
-    # Submission
+    # Submission + admission control
     # ------------------------------------------------------------------
+    def _service_rounds(self, req: Request) -> int:
+        """Rounds a request occupies a row end to end: packed prefill
+        plus decode, minus the first-token/last-prefill overlap."""
+        return -(-len(req.prompt) // self.prompt_chunk) + req.max_new - 1
+
+    def _est_finish_round(self, req: Request) -> int:
+        """Capacity estimate: the absolute device round by which ``req``
+        could plausibly finish, built from the ``_row_eta`` rounds-to-
+        free machinery.  Queued + staged work ahead of it is placed
+        greedily on the earliest-freeing rows; this is an estimate (EDF
+        reordering and speculative multi-emit shift it), used only to
+        shed requests whose deadline even the estimate cannot meet."""
+        etas = [self._row_eta(s) for s in range(self.max_batch)]
+        for slot, parked in enumerate(self.staged):
+            if parked is not None:
+                etas[slot] += self._service_rounds(parked)
+        heapq.heapify(etas)
+        for ahead in self.scheduler.waiting:
+            heapq.heappush(etas,
+                           heapq.heappop(etas) + self._service_rounds(ahead))
+        return (self.stats.decode_steps + min(etas)
+                + self._service_rounds(req))
+
     def submit(self, prompt: List[int], max_new: int = 32,
                temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
-               eos: Optional[int] = None) -> int:
+               eos: Optional[int] = None, priority: int = 1,
+               deadline: Optional[int] = None) -> int:
+        """Submit a request; always returns its rid.  The admission
+        verdict lands on ``engine.requests[rid].verdict``: a request the
+        bounded queue rejects or the deadline shedder refuses is
+        terminal immediately with status SHED (empty output).
+
+        ``priority`` is the scheduling class (lower = more urgent);
+        ``deadline`` is a device-round budget relative to submission --
+        the request is TIMED_OUT (partial output preserved) once the
+        round clock passes ``submit_round + deadline``, whether it is
+        queued, staged or in flight.  Deadline enforcement happens at
+        host round-trip boundaries, so it quantises to ``decode_block``.
+        """
         if not prompt:
             raise ValueError("empty prompt")
         # a request consumes len(prompt) + max_new - 1 cache positions:
@@ -181,16 +296,52 @@ class ServingEngine:
                 f"prompt ({len(prompt)}) + max_new ({max_new}) needs "
                 f"{len(prompt) + max_new - 1} cache positions, exceeding "
                 f"engine max_len ({self.max_len})")
+        sampling.validate_controls(temperature, top_k, top_p)
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be a positive device-round "
+                             f"budget, got {deadline!r}")
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, list(prompt), max_new, temperature, top_k,
-                      top_p, eos)
+                      top_p, eos, priority=priority)
         req.submitted_s = time.perf_counter()
         req.submit_round = self.stats.decode_steps
-        self.scheduler.submit(req)
+        if deadline is not None:
+            req.deadline = req.submit_round + int(deadline)
+        self.requests[rid] = req
         self.stats.submitted += 1
-        self.stats.observe_queue(len(self.scheduler))
+        est = self._est_finish_round(req) if req.deadline is not None \
+            else None
+        req.verdict = self.scheduler.submit(
+            req, now_round=req.submit_round, est_finish=est)
+        if req.verdict == ADMITTED:
+            req.status = QUEUED
+            self.stats.observe_queue(len(self.scheduler))
+        else:
+            self._retire(req, SHED)
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is in the lifecycle.  Queued and
+        staged requests retire with empty output; an in-flight request
+        has its slot killed between supersteps and keeps the tokens
+        already drained (partial output).  Returns True if the request
+        transitioned to CANCELLED, False if it is unknown or already
+        terminal."""
+        req = self.requests.get(rid)
+        if req is None or req.done:
+            return False
+        if self.scheduler.remove(req):
+            self._retire(req, CANCELLED)
+            return True
+        if req.slot is not None and self.staged[req.slot] is req:
+            self._unstage(req.slot)
+            self._retire(req, CANCELLED)
+            return True
+        if req.slot is not None and self.current[req.slot] is req:
+            self._kill_inflight(req, CANCELLED)
+            return True
+        return False
 
     # ------------------------------------------------------------------
     # Staging (host side of admission; the device does the arming)
@@ -225,7 +376,9 @@ class ServingEngine:
         return prompt_rounds + req.max_new - len(req.out)
 
     def _stage(self):
-        """Park queued requests into empty staging buffers, strict FIFO.
+        """Park queued requests into empty staging buffers in scheduler
+        order (aged priority, then earliest deadline, then submission --
+        strict FIFO in the default single-class/no-deadline config).
 
         Rows whose current request is finished (or that never held one)
         are preferred so the device arms the request on the very next
@@ -233,16 +386,26 @@ class ServingEngine:
         the moment its row dies, mid-superstep, with zero idle rounds.
         Busy rows are filled in order of estimated rounds-to-free
         (``_row_eta``), keeping staging placement aligned with
-        submission order.
+        scheduler order.
         """
         empty = [i for i in range(self.max_batch) if self.staged[i] is None]
         empty.sort(key=lambda i: (self._row_eta(i), i))
-        group = self.scheduler.take(len(empty))
+        now = self.stats.decode_steps
+        group = self.scheduler.take(len(empty), now_round=now)
+        if not group and self.scheduler.waiting \
+                and not any(self.current) and not any(self.staged):
+            # every queued request sits in retry backoff but the machine
+            # is idle: the round clock only advances while work runs, so
+            # honouring the backoff would deadlock.  Backoff exists to
+            # let a transient fault clear while OTHER work runs.
+            group = self.scheduler.take(len(empty), now_round=now,
+                                        ignore_backoff=True)
         if not group:
             return
         m = self._smirror
         for req, slot in zip(group, empty):
             req.slot = slot
+            req.status = STAGED
             req.admit_seq = self.stats.admitted
             self.staged[slot] = req
             m["s_prompt"][slot, :] = 0
@@ -258,33 +421,62 @@ class ServingEngine:
             self.stats.admitted += 1
             self._dirty_slots.append(slot)
 
+    def _unstage(self, slot: int):
+        """Withdraw a parked request from its staging buffer (cancel /
+        deadline sweep) before the device can arm it."""
+        req = self.staged[slot]
+        self.staged[slot] = None
+        req.slot = None
+        self._smirror["s_valid"][slot] = False
+        self._dirty_slots.append(slot)
+
     def _upload_staging(self):
         """Push newly staged rows to the device.  The (B,) control
         vectors are re-uploaded whole (a few words); the (B, max_len)
         prompt matrix -- the only leaf whose full upload would scale
         with max_len -- is scattered row-wise for just the dirty slots.
+
+        The ``drop_upload`` chaos injection point intercepts here: a
+        dropped slot's prompt row is NOT uploaded and its ``s_valid`` is
+        masked False for this call (the device must never arm a row
+        whose prompt row it does not have), and the slot stays dirty so
+        the next call retries -- the request arms one superstep late.
         """
         if not self._dirty_slots:
             return
-        rows = jnp.asarray(sorted(set(self._dirty_slots)))
-        self.state["s_prompt"] = self.state["s_prompt"].at[rows].set(
-            jnp.asarray(self._smirror["s_prompt"][np.asarray(rows)]))
+        rows = sorted(set(self._dirty_slots))
+        dropped: List[int] = []
+        if self.faults is not None:
+            rows, dropped = self.faults.drop_upload(
+                self.stats.decode_calls, rows)
+        if rows:
+            r = jnp.asarray(rows)
+            self.state["s_prompt"] = self.state["s_prompt"].at[r].set(
+                jnp.asarray(self._smirror["s_prompt"][np.asarray(r)]))
+        s_valid = self._smirror["s_valid"]
+        if dropped:
+            s_valid = s_valid.copy()
+            s_valid[dropped] = False
         for k in _STAGE_FIELDS:
-            if k != "s_prompt":
-                self.state[k] = jnp.asarray(self._smirror[k])
-        self._dirty_slots = []
+            if k == "s_prompt":
+                continue
+            src = s_valid if k == "s_valid" else self._smirror[k]
+            self.state[k] = jnp.asarray(src)
+        self._dirty_slots = list(dropped)
 
     # ------------------------------------------------------------------
     # The superstep
     # ------------------------------------------------------------------
     def _superstep_fn(self, n: int):
-        fn = self._superstep_fns.get(n)
+        key = (n, self._spec_active and self.draft is not None)
+        fn = self._superstep_fns.get(key)
         if fn is None:
-            cfg, chunk, draft = self.cfg, self.prompt_chunk, self.draft
+            cfg, chunk = self.cfg, self.prompt_chunk
+            draft = self.draft if key[1] else None
             fn = jax.jit(lambda p, dp, s: lm.superstep(
                 p, cfg, s, n, prompt_chunk=chunk, draft=draft,
                 draft_params=dp))
-            self._superstep_fns[n] = fn
+            self._superstep_fns[key] = fn
         return fn
 
     def _promote(self, slot: int) -> Request:
@@ -296,30 +488,177 @@ class ServingEngine:
         assert req is not None
         self.current[slot] = req
         self.staged[slot] = None
+        req.status = RUNNING
         return req
 
-    def _finish(self, req: Request, now: float, last_round: int):
+    def _retire(self, req: Request, status: str):
+        """Move a request to a terminal status and count it."""
         req.done = True
+        req.status = status
+        if req.slot is not None:
+            if self.current[req.slot] is req:
+                self.current[req.slot] = None
+            req.slot = None
         self.finished[req.rid] = req
-        self.current[req.slot] = None
-        self.stats.completed += 1
+        if status == COMPLETED:
+            self.stats.completed += 1
+        elif status == CANCELLED:
+            self.stats.cancelled += 1
+        elif status == TIMED_OUT:
+            self.stats.timed_out += 1
+        elif status == FAILED:
+            self.stats.failed += 1
+        elif status == SHED:
+            if req.verdict == REJECTED_QUEUE_FULL:
+                self.stats.rejected += 1
+            else:
+                self.stats.shed += 1
+
+    def _finish(self, req: Request, now: float, last_round: int):
+        self._retire(req, COMPLETED)
         self.stats.record_completion(len(req.out), req.first_round,
                                      last_round, req.first_token_s, now)
 
+    def _kill_inflight(self, req: Request, status: str):
+        """Retire an in-flight request between supersteps: its device row
+        goes dead (re-armed from staging on the next round like any
+        retirement) and the tokens drained so far are preserved."""
+        slot = req.slot
+        self.state = dict(self.state)
+        self.state["alive"] = self.state["alive"].at[slot].set(False)
+        self._retire(req, status)
+
+    def _sweep_deadlines(self):
+        """Retire every request whose deadline round has passed --
+        queued, staged or in flight (the latter keeping partial
+        output).  Runs at host round-trip boundaries."""
+        now = self.stats.decode_steps
+        overdue = [r for r in self.scheduler.waiting
+                   if r.deadline is not None and now >= r.deadline]
+        for req in overdue:
+            self.scheduler.remove(req)
+            self._retire(req, TIMED_OUT)
+        for slot in range(self.max_batch):
+            req = self.staged[slot]
+            if req is not None and req.deadline is not None \
+                    and now >= req.deadline:
+                self._unstage(slot)
+                self._retire(req, TIMED_OUT)
+            req = self.current[slot]
+            if req is not None and req.deadline is not None \
+                    and now >= req.deadline:
+                self._kill_inflight(req, TIMED_OUT)
+
+    def _corrupt_slots(self, slots: List[int]):
+        """Chaos injection: overwrite the recurrent state rows of
+        ``slots`` with NaN (the ``corrupt_state`` point).  The in-loop
+        health guard detects the poisoned rows on their next round."""
+        cache = dict(self.state["cache"])
+        rows = jnp.asarray(slots, jnp.int32)
+        touched = False
+        for name in lm._RECURRENT_CACHE_KEYS:
+            leaf = cache.get(name)
+            if leaf is not None and jnp.issubdtype(leaf.dtype,
+                                                   jnp.floating):
+                cache[name] = leaf.at[:, rows].set(jnp.nan)
+                touched = True
+        if touched:
+            self.state = dict(self.state)
+            self.state["cache"] = cache
+
+    def _quarantine(self, slot: int, round_: int, s_valid_np, dirty):
+        """The superstep's health guard killed this row at ``round_``:
+        attribute the kill to the occupying request and re-enqueue it
+        under the bounded retry budget (exponential round backoff), or
+        retire it FAILED once the budget is spent.  The slot itself
+        needs no host repair -- the device already marked it dead and
+        the next arm re-zeroes its state through the normal re-admission
+        path."""
+        self.stats.quarantined += 1
+        req = self.current[slot]
+        if req is None or req.done:
+            # the victim armed mid-superstep from staging (it emitted
+            # nothing before the kill, so the drain never promoted it)
+            if self.staged[slot] is not None and not s_valid_np[slot] \
+                    and slot not in dirty:
+                req = self._promote(slot)
+            else:
+                return
+        self.current[slot] = None
+        req.slot = None
+        if req.deadline is not None and round_ >= req.deadline:
+            self._retire(req, TIMED_OUT)
+            return
+        if req.retries >= self.max_retries:
+            self._retire(req, FAILED)
+            return
+        verdict = self.scheduler.submit(req, now_round=round_)
+        req.verdict = verdict
+        if verdict != ADMITTED:
+            self._retire(req, FAILED)   # no queue room for the retry
+            return
+        req.retries += 1
+        req.out = []        # the retry restarts the stream from scratch
+        req.status = QUEUED
+        req.not_before = round_ + self.retry_backoff * (
+            2 ** (req.retries - 1))
+        self.stats.retried += 1
+        self.stats.observe_queue(len(self.scheduler))
+
+    def _adapt_speculation(self, counters):
+        """Rolling accept-rate floor: when a window of verify rounds
+        accepts below ``spec_accept_floor``, drafting is disabled (the
+        engine swaps to the plain superstep program) instead of paying a
+        draft_len-wide verify pass for ~1 token per round.  With
+        ``spec_cooldown > 0`` drafting re-probes after that many calls;
+        streams are bit-identical either way -- only latency changes."""
+        if self.draft is None or self.spec_accept_floor is None:
+            return
+        if not self._spec_active:
+            self._spec_off_calls += 1
+            if self.spec_cooldown and \
+                    self._spec_off_calls >= self.spec_cooldown:
+                self._spec_active = True
+                self._spec_off_calls = 0
+                self._spec_hist = []
+            return
+        proposed = int(counters.get("draft_proposed", 0))
+        if proposed <= 0:
+            return
+        self._spec_hist.append(
+            (proposed, int(counters.get("draft_accepted", 0))))
+        if len(self._spec_hist) > self.spec_window:
+            self._spec_hist.pop(0)
+        if len(self._spec_hist) == self.spec_window:
+            tp = sum(p for p, _ in self._spec_hist)
+            ta = sum(a for _, a in self._spec_hist)
+            if ta < self.spec_accept_floor * tp:
+                self._spec_active = False
+                self._spec_hist = []
+                self.stats.spec_disabled += 1
+
     def step(self, n_tokens: Optional[int] = None) -> int:
-        """Stage pending requests, then run ONE on-device superstep of
-        ``n_tokens`` (default ``self.decode_block``) rounds: every slot
-        advances one token per round -- its next prompt token while
-        prefilling, a sampled token while decoding -- and slots that
-        retire mid-call are re-armed from staging in-loop.  Returns the
-        number of requests still in flight (armed + staged + queued).
-        """
+        """Sweep deadlines, stage pending requests, then run ONE
+        on-device superstep of ``n_tokens`` (default
+        ``self.decode_block``) rounds: every slot advances one token per
+        round -- its next prompt token while prefilling, a sampled token
+        while decoding -- and slots that retire mid-call are re-armed
+        from staging in-loop.  Drains emissions, quarantines rows the
+        numerical health guard killed, and restocks staging.  Returns
+        the number of requests still in flight (armed + staged +
+        queued)."""
         k = max(1, int(n_tokens)) if n_tokens is not None \
             else self.decode_block
+        self._sweep_deadlines()
         self._stage()
         if not any(self.current) and not any(self.staged):
             return len(self.scheduler)
         self._upload_staging()
+        if self.faults is not None:
+            slots = self.faults.corrupt_state(
+                self.stats.decode_steps, k, self.max_batch)
+            if slots:
+                self._corrupt_slots(slots)
 
         with self.stats.timed("decode"):
             toks, rids, self.state, counters = self._superstep_fn(k)(
@@ -327,8 +666,13 @@ class ServingEngine:
             toks_np = np.asarray(toks)
             rids_np = np.asarray(rids)
             s_valid_np = np.asarray(self.state["s_valid"])
+            nf_np = np.asarray(counters["nonfinite"])
             self._prompt_pos[:] = np.asarray(self.state["prompt_pos"])
             self._rid_dev[:] = np.asarray(self.state["rid"])
+            if self.faults is not None:
+                stall = self.faults.straggler(self.stats.decode_calls)
+                if stall > 0:
+                    time.sleep(stall)
         if toks_np.ndim == 2:       # non-speculative: one plane per round
             toks_np = toks_np[:, :, None]
             rids_np = rids_np[:, :, None]
@@ -339,13 +683,20 @@ class ServingEngine:
         self.stats.prefill_tokens += int(counters["prefill_steps"])
         self.stats.prefill_rounds += int(counters["prefill_rounds"])
         self.stats.wasted_slot_steps += int(counters["wasted_slot_steps"])
+        self.stats.nonfinite_decode_rounds += int(
+            counters["nonfinite_decode_rounds"])
         self.stats.draft_proposed += int(counters.get("draft_proposed", 0))
         self.stats.draft_accepted += int(counters.get("draft_accepted", 0))
+        self._adapt_speculation(counters)
 
         now = time.perf_counter()
+        dirty = set(self._dirty_slots)
         drained = 0
         for slot in range(self.max_batch):
             for j in range(k):
+                if nf_np[slot, j]:
+                    self._quarantine(slot, base_round + j, s_valid_np,
+                                     dirty)
                 for c in range(toks_np.shape[2]):
                     rid = int(rids_np[slot, j, c])
                     if rid < 0:
@@ -366,8 +717,10 @@ class ServingEngine:
                     if (req.eos is not None and t == req.eos) or \
                             len(req.out) >= req.max_new:
                         self._finish(req, now, base_round + j)
-            # armed without emitting yet (still prefilling at call end)
-            if self.staged[slot] is not None and not s_valid_np[slot]:
+            # armed without emitting yet (still prefilling at call end);
+            # a slot whose upload was dropped is still parked, not armed
+            if self.staged[slot] is not None and not s_valid_np[slot] \
+                    and slot not in dirty:
                 self._promote(slot)
         self.stats.decode_tokens += drained
         # non_spec_tokens: tokens the non-speculative path contributes --
@@ -376,18 +729,63 @@ class ServingEngine:
         self.stats.non_spec_tokens += int(
             counters["emit_rounds"]) if "emit_rounds" in counters \
             else drained
-        # re-sync the staging mirror with what the device consumed
+        # re-sync the staging mirror with what the device consumed --
+        # except dirty slots (dropped uploads), whose parked requests
+        # the device never saw: their mirror rows stay authoritative
         self._smirror["s_valid"][:] = s_valid_np
+        for slot in dirty:
+            if self.staged[slot] is not None:
+                self._smirror["s_valid"][slot] = True
         return (sum(r is not None for r in self.current)
                 + sum(r is not None for r in self.staged)
                 + len(self.scheduler))
 
     # ------------------------------------------------------------------
+    def occupancy_report(self) -> Dict[str, Any]:
+        """Queue + per-slot occupancy snapshot (stall diagnosis)."""
+        slots = []
+        for i in range(self.max_batch):
+            cur, parked = self.current[i], self.staged[i]
+            slots.append({
+                "slot": i,
+                "current": None if cur is None else {
+                    "rid": cur.rid, "status": cur.status,
+                    "prompt_len": len(cur.prompt),
+                    "prompt_pos": int(self._prompt_pos[i]),
+                    "out_tokens": len(cur.out),
+                    "deadline": cur.deadline, "retries": cur.retries},
+                "staged": None if parked is None else {
+                    "rid": parked.rid, "status": parked.status,
+                    "not_before": parked.not_before},
+            })
+        return {
+            "decode_steps": self.stats.decode_steps,
+            "queue_depth": len(self.scheduler),
+            "queued": [r.rid for r in self.scheduler.waiting],
+            "in_flight": sum(r is not None for r in self.current),
+            "staged": sum(r is not None for r in self.staged),
+            "slots": slots,
+        }
+
     def run_to_completion(self, max_steps: int = 100_000
                           ) -> Dict[int, List[int]]:
+        """Step until every request reaches a terminal status.  Raises
+        :class:`EngineStallError` (occupancy report attached) instead of
+        returning silently if ``max_steps`` is exhausted with work still
+        pending.  Returns ``{rid: output tokens}`` for every terminal
+        request (non-completed requests contribute their partial -- or
+        empty -- output; check ``engine.finished[rid].status``)."""
         steps = 0
         while (len(self.scheduler) or any(self.current)
-               or any(self.staged)) and steps < max_steps:
+               or any(self.staged)):
+            if steps >= max_steps:
+                report = self.occupancy_report()
+                raise EngineStallError(
+                    f"engine did not drain within {max_steps} steps: "
+                    f"{report['queue_depth']} queued, "
+                    f"{report['in_flight']} in flight, "
+                    f"{report['staged']} staged at round "
+                    f"{report['decode_steps']} (see .report)", report)
             self.step()
             steps += 1
         return {rid: r.out for rid, r in self.finished.items()}
@@ -396,18 +794,21 @@ class ServingEngine:
 def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
                  submit, max_steps: int = 100_000) -> None:
     """Drive ``engine`` over an arrival trace until every request
-    completes.  The arrival clock is the engine's device-round counter:
-    request ``i`` is submitted via ``submit(i, trace[i])`` once
-    ``trace[i]["arrival"] <= stats.decode_steps`` -- or immediately when
-    the engine is idle, so a gap in arrivals cannot stall the round
-    clock.  Shared by the arrival-trace bench, the serving example and
-    the scheduler property tests so the replay semantics live in one
-    place."""
+    reaches a terminal status.  The arrival clock is the engine's
+    device-round counter: request ``i`` is submitted via
+    ``submit(i, trace[i])`` once ``trace[i]["arrival"] <=
+    stats.decode_steps`` -- or immediately when the engine is idle, so a
+    gap in arrivals cannot stall the round clock.  Drain is judged on
+    *terminal* requests (``engine.finished``), not completions, so
+    shed / failed / timed-out requests under fault injection or
+    overload cannot hang the replay.  Shared by the arrival-trace
+    bench, the serving example and the scheduler property tests so the
+    replay semantics live in one place."""
     i, steps = 0, 0
-    while i < len(trace) or engine.stats.completed < i:
+    while i < len(trace) or len(engine.finished) < i:
         due = i < len(trace) and \
             trace[i]["arrival"] <= engine.stats.decode_steps
-        idle = engine.stats.completed == i
+        idle = len(engine.finished) == i
         while i < len(trace) and (due or idle):
             submit(i, trace[i])
             i += 1
@@ -419,7 +820,8 @@ def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
         if steps >= max_steps:
             raise RuntimeError(
                 f"arrival trace did not drain within {max_steps} steps "
-                f"({engine.stats.completed}/{i} submitted requests done)")
+                f"({len(engine.finished)}/{i} submitted requests "
+                f"terminal)")
 
 
 @functools.lru_cache(maxsize=32)
@@ -441,6 +843,8 @@ def generate_one(cfg, params, prompt: List[int], max_new: int = 32,
     equivalence on the parallel side, and
     test_generate_one_matches_parallel_prefill pins it here.)
     """
+    if not prompt:
+        raise ValueError("empty prompt")
     # same cache-position budget as ServingEngine.submit: the request
     # consumes len(prompt) + max_new - 1 positions.  KV-cache archs would
     # otherwise scatter past max_len (silently dropped under jit -- wrong

@@ -33,6 +33,7 @@ bit-exact across ``prompt_chunk`` values.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +41,30 @@ import jax.numpy as jnp
 Array = jax.Array
 
 _NEG = jnp.float32(-1e30)     # "removed from support" without -inf NaN risk
+
+
+def validate_controls(temperature: float, top_k: int, top_p: float) -> None:
+    """Reject malformed per-request sampling controls at submission time.
+
+    The device kernels are branch-free and would silently mis-sample on
+    out-of-domain controls (a negative temperature flips the softmax
+    ordering, a non-positive top_p empties the nucleus), so the serving
+    entry points validate here with a clear error instead.  Valid:
+    ``temperature >= 0`` (0 = greedy), ``top_k >= 0`` (0 = off),
+    ``0 < top_p <= 1`` (1 = off); all must be finite.
+    """
+    if not math.isfinite(temperature) or temperature < 0:
+        raise ValueError(
+            f"temperature must be finite and >= 0 (0 = greedy), "
+            f"got {temperature!r}")
+    if int(top_k) != top_k or top_k < 0:
+        raise ValueError(
+            f"top_k must be a non-negative integer (0 disables the "
+            f"filter), got {top_k!r}")
+    if not math.isfinite(top_p) or not 0.0 < top_p <= 1.0:
+        raise ValueError(
+            f"top_p must be in (0, 1] (1 disables nucleus sampling), "
+            f"got {top_p!r}")
 
 
 def make_keys(seed: int, batch: int) -> Array:

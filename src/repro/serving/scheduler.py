@@ -1,49 +1,158 @@
 """Admission scheduling + engine statistics for the serving engine.
 
-The scheduler is deliberately simple (strict FIFO staging into slot
-staging buffers); its value is that the policy and the accounting live
-*outside* the engine's jax plumbing, so policy experiments (priority
-queues, length-aware packing) don't touch device code.
+The policy and the accounting live *outside* the engine's jax plumbing,
+so policy experiments (priority queues, deadline shaping, length-aware
+packing) don't touch device code.
 
-With the superstep engine the scheduler's contract is small but load-
-bearing: ``take`` must pop requests in exact submission order (FIFO
-fairness -- a request is never overtaken while queued) and must
-eventually pop every request as staging capacity frees up (no
-starvation).  ``tests/test_scheduler.py`` property-tests both against
-random arrival traces.
+``AdmissionScheduler`` owns three serving-robustness policies:
+
+  * **admission verdicts** -- ``submit()`` returns :data:`ADMITTED`,
+    :data:`REJECTED_QUEUE_FULL` (bounded queue, high/low watermark
+    hysteresis) or :data:`SHED_UNMEETABLE_DEADLINE` (the caller passes a
+    capacity estimate -- the engine builds it from its ``_row_eta``
+    rounds-to-free machinery -- and a request whose deadline cannot be
+    met even by the estimate is shed at the door instead of wasting a
+    slot);
+  * **priority classes + EDF ordering with aging** -- ``take()`` pops by
+    ``(effective priority, deadline, submission order)`` where a
+    request's effective priority improves by one class for every
+    ``aging_rounds`` device rounds it has waited, so low-priority work
+    cannot starve behind a stream of high-priority arrivals;
+  * **retry backoff** -- requests carry ``not_before`` (a device round);
+    ``take`` skips them until the round clock catches up, which is how
+    the engine's NaN-quarantine retry backoff is enforced.  When the
+    engine is otherwise idle it takes with ``ignore_backoff=True`` --
+    backoff exists to let a transient fault clear while other work runs,
+    not to stall an empty machine.
+
+With the default config (unbounded queue, one priority class, no
+deadlines) the behaviour is exactly the original strict FIFO: ``take``
+pops in submission order and every request is eventually popped
+(``tests/test_scheduler.py`` property-tests both against random arrival
+traces).  ``FifoScheduler`` remains as an alias for that degenerate
+configuration.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+# ---------------------------------------------------------------------------
+# Admission verdicts (returned by AdmissionScheduler.submit)
+# ---------------------------------------------------------------------------
+ADMITTED = "ADMITTED"
+REJECTED_QUEUE_FULL = "REJECTED_QUEUE_FULL"
+SHED_UNMEETABLE_DEADLINE = "SHED_UNMEETABLE_DEADLINE"
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
     max_batch: int = 8
+    # bounded queue: 0 = unbounded (legacy behaviour).  Admission closes
+    # when the queue reaches ceil(high_watermark * max_queue) and stays
+    # closed (hysteresis) until it drains below low_watermark * max_queue,
+    # so a saturated engine sheds bursts instead of oscillating.
+    max_queue: int = 0
+    high_watermark: float = 1.0
+    low_watermark: float = 0.5
+    # EDF aging: waiting this many device rounds improves a request's
+    # effective priority by one class (0 disables aging).
+    aging_rounds: int = 64
 
 
-class FifoScheduler:
-    """FIFO admission: pop requests in submission order as slots free up."""
+class AdmissionScheduler:
+    """Priority + deadline (EDF with aging) admission with a bounded queue.
+
+    Requests are engine-owned objects; the scheduler reads (with safe
+    defaults, so plain tagged objects work in tests) ``priority`` (lower
+    is more urgent), ``deadline`` (absolute device round or None),
+    ``submit_round`` and ``not_before``.
+    """
 
     def __init__(self, cfg: SchedulerConfig):
         self.cfg = cfg
         self.waiting: List = []           # Request objects (engine-owned)
+        self._seq = 0
+        self._order: Dict[int, int] = {}  # id(req) -> submission seq
+        self._saturated = False
 
-    def submit(self, req) -> None:
+    # -- admission ----------------------------------------------------
+    def submit(self, req, now_round: int = 0,
+               est_finish: Optional[int] = None) -> str:
+        """Admit ``req`` or return a rejection verdict.
+
+        ``est_finish`` is the caller's capacity estimate (absolute device
+        round by which the request could plausibly finish); when the
+        request carries a deadline the estimate cannot meet, it is shed
+        immediately rather than admitted to die in the queue.
+        """
+        if self.cfg.max_queue > 0:
+            hi = math.ceil(self.cfg.high_watermark * self.cfg.max_queue)
+            lo = self.cfg.low_watermark * self.cfg.max_queue
+            if self._saturated and len(self.waiting) < lo:
+                self._saturated = False
+            if len(self.waiting) >= min(hi, self.cfg.max_queue):
+                self._saturated = True
+            if self._saturated:
+                return REJECTED_QUEUE_FULL
+        deadline = getattr(req, "deadline", None)
+        if deadline is not None and est_finish is not None \
+                and est_finish > deadline:
+            return SHED_UNMEETABLE_DEADLINE
+        self._order[id(req)] = self._seq
+        self._seq += 1
         self.waiting.append(req)
+        return ADMITTED
+
+    def remove(self, req) -> bool:
+        """Withdraw a queued request (cancellation / deadline sweep)."""
+        try:
+            self.waiting.remove(req)
+        except ValueError:
+            return False
+        self._order.pop(id(req), None)
+        return True
 
     def __len__(self) -> int:
         return len(self.waiting)
 
-    def take(self, n: int) -> List:
-        """Pop the next admission group: the first ``n`` waiting requests,
-        in exact submission order."""
-        n = max(0, min(n, len(self.waiting)))
-        group, self.waiting = self.waiting[:n], self.waiting[n:]
+    # -- ordering -----------------------------------------------------
+    def _key(self, req, now_round: int):
+        pr = getattr(req, "priority", 1)
+        if self.cfg.aging_rounds > 0:
+            waited = max(0, now_round - getattr(req, "submit_round", 0))
+            pr = pr - waited // self.cfg.aging_rounds
+        deadline = getattr(req, "deadline", None)
+        return (pr, math.inf if deadline is None else deadline,
+                self._order[id(req)])
+
+    def take(self, n: int, now_round: int = 0,
+             ignore_backoff: bool = False) -> List:
+        """Pop the next admission group of up to ``n`` requests by
+        (aged priority, earliest deadline, submission order).  Within one
+        priority class with no deadlines this is exact submission order:
+        aging can only *improve* an earlier request's class relative to a
+        later one, never degrade it, so default-config behaviour is
+        strict FIFO.  Requests whose ``not_before`` round is still in the
+        future are skipped unless ``ignore_backoff``.
+        """
+        n = max(0, n)
+        pool = self.waiting if ignore_backoff else \
+            [r for r in self.waiting
+             if getattr(r, "not_before", 0) <= now_round]
+        group = sorted(pool, key=lambda r: self._key(r, now_round))[:n]
+        for req in group:
+            self.waiting.remove(req)
+            self._order.pop(id(req), None)
         return group
+
+
+# Degenerate configuration of AdmissionScheduler (unbounded queue, one
+# priority class, no deadlines) == the original strict-FIFO scheduler.
+FifoScheduler = AdmissionScheduler
 
 
 def _percentile(xs: List[float], q: float) -> float:
@@ -70,8 +179,10 @@ class EngineStats:
     ``prefill_rounds`` the slot-rounds spent prefilling (== tokens at
     C=1); the exact slot-step identity under any C is ``slot_steps ==
     prefill_rounds + decode_tokens - first_token_overlaps +
-    wasted_slot_steps`` (a request's first token rides its final prefill
-    round).  Timers wrap the device calls including host sync, so
+    wasted_slot_steps + nonfinite_decode_rounds`` (a request's first
+    token rides its final prefill round; a round whose emission the
+    non-finite guard suppressed is counted by the last term -- see
+    below).  Timers wrap the device calls including host sync, so
     tokens-per-second is an end-to-end number.
 
     Per-request latency: ``ttft_s`` / ``ttft_rounds`` measure submit ->
@@ -94,6 +205,20 @@ class EngineStats:
     ``decode_tokens`` replaced by ``non_spec_tokens`` (a spec round is
     still ONE slot-step however many tokens it emits).
     ``snapshot()['accept_rate']`` is the trajectory metric.
+    ``spec_disabled`` counts the times the rolling accept-rate floor
+    turned drafting off (graceful degradation under hostile inputs).
+
+    Fault tolerance: ``cancelled`` / ``timed_out`` / ``failed`` /
+    ``shed`` / ``rejected`` count terminal request outcomes other than
+    completion (shed = unmeetable deadline at admission, rejected =
+    bounded-queue backpressure); ``retried`` counts quarantine re-
+    enqueues and ``quarantined`` counts slot kills by the non-finite
+    guard.  ``nonfinite_decode_rounds`` is the guard's slot-step
+    identity term: a round whose emission was suppressed on a decoding
+    row appears in no other counter.  Terminal accounting: ``submitted
+    == completed + cancelled + timed_out + failed + shed + rejected``
+    once the engine drains (retries move a request back to the queue,
+    they are not terminal).
     """
     prompt_chunk: int = 1
     submitted: int = 0
@@ -110,6 +235,16 @@ class EngineStats:
     draft_accepted: int = 0
     non_spec_tokens: int = 0
     queue_peak: int = 0
+    # fault-tolerance counters
+    cancelled: int = 0
+    timed_out: int = 0
+    failed: int = 0
+    retried: int = 0
+    shed: int = 0
+    rejected: int = 0
+    quarantined: int = 0
+    nonfinite_decode_rounds: int = 0
+    spec_disabled: int = 0
     decode_time_s: float = 0.0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     ttft_rounds: List[int] = dataclasses.field(default_factory=list)
@@ -169,6 +304,7 @@ class EngineStats:
             self.wasted_slot_steps / max(self.slot_steps, 1))
         d["accept_rate"] = (
             self.draft_accepted / max(self.draft_proposed, 1))
+        d["completion_rate"] = self.completed / max(self.submitted, 1)
         d["ttft_s_mean"] = (sum(self.ttft_s) / len(self.ttft_s)
                             if self.ttft_s else 0.0)
         d["ttft_s_p95"] = _percentile(self.ttft_s, 0.95)

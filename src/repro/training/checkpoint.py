@@ -8,16 +8,41 @@ changes): arrays are device_put with the *target* NamedShardings.
 
 Trees are flattened to path-keyed entries ("params/layers/blocks/..."), so
 restore does not need a pickled treedef -- robust across code versions.
+
+Integrity: ``save`` records the SHA-256 of ``arrays.npz`` in the
+manifest; ``restore`` re-hashes and raises :class:`CheckpointCorruptError`
+on mismatch (bit rot, truncated copy, torn write on a non-atomic
+filesystem).  ``CheckpointManager.restore_latest`` walks checkpoints
+newest-first and falls back past corrupt ones, so one bad checkpoint
+degrades recovery by ``save_interval`` steps instead of killing it.
+Checkpoints written before this scheme (no ``checksum`` field) restore
+unverified for compatibility.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
 import time
 from typing import Any, Dict, Optional
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """arrays.npz does not match the manifest checksum (or is missing)."""
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +104,8 @@ def save(directory: str, step: int, params, opt_state=None,
             dtypes[k] = str(v.dtype)
     manifest["dtypes"] = dtypes
     np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+    manifest["checksum"] = "sha256:" + _sha256(
+        os.path.join(tmp, "arrays.npz"))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -87,9 +114,34 @@ def save(directory: str, step: int, params, opt_state=None,
     return final
 
 
+def verify(path: str) -> bool:
+    """True iff the checkpoint's content hash matches its manifest.
+    Pre-checksum checkpoints (no ``checksum`` field) verify trivially."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    recorded = manifest.get("checksum")
+    if recorded is None:
+        return os.path.exists(os.path.join(path, "arrays.npz"))
+    try:
+        return recorded == "sha256:" + _sha256(
+            os.path.join(path, "arrays.npz"))
+    except OSError:
+        return False
+
+
 def _load_arrays(path: str) -> Dict[str, np.ndarray]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    recorded = manifest.get("checksum")
+    if recorded is not None:
+        actual = "sha256:" + _sha256(os.path.join(path, "arrays.npz"))
+        if actual != recorded:
+            raise CheckpointCorruptError(
+                f"{path}: arrays.npz hash {actual} != manifest "
+                f"{recorded}")
     raw = np.load(os.path.join(path, "arrays.npz"))
     out = {}
     for k in raw.files:
@@ -128,12 +180,17 @@ def _place(tree, shardings):
                         tree, shardings)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def all_steps(directory: str):
+    """Completed checkpoint steps in ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
 
 
 class CheckpointManager:
@@ -146,6 +203,7 @@ class CheckpointManager:
         self.save_interval = save_interval
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self.corrupt_skipped: list = []   # steps restore_latest fell past
 
     def maybe_save(self, step: int, params, opt_state=None, force=False):
         if not force and (step == 0 or step % self.save_interval != 0):
@@ -178,7 +236,17 @@ class CheckpointManager:
             self._thread = None
 
     def restore_latest(self, **kw):
-        step = latest_step(self.directory)
-        if step is None:
-            return None
-        return restore(os.path.join(self.directory, f"step_{step:08d}"), **kw)
+        """Restore the newest checkpoint that passes integrity
+        verification, falling back past corrupt ones (recorded in
+        ``corrupt_skipped``).  Returns None when no restorable
+        checkpoint exists."""
+        for step in reversed(all_steps(self.directory)):
+            path = os.path.join(self.directory, f"step_{step:08d}")
+            try:
+                return restore(path, **kw)
+            except (CheckpointCorruptError, OSError, ValueError,
+                    KeyError) as e:
+                self.corrupt_skipped.append(step)
+                log.warning("checkpoint %s unrestorable (%s); "
+                            "falling back", path, e)
+        return None

@@ -4,7 +4,9 @@
 
   * crash recovery: any exception in a step triggers restore from the last
     checkpoint and a deterministic data fast-forward (the data pipeline is
-    a pure function of step index -- repro.data: no iterator state to lose);
+    a pure function of step index -- repro.data: no iterator state to lose).
+    Restore verifies the checkpoint's content checksum and falls back past
+    corrupt ones (``SupervisorReport.ckpt_fallbacks`` counts them);
   * straggler watchdog: per-step wall time EMA; steps slower than
     ``straggler_factor`` x EMA are logged and counted (on a real cluster
     the hook re-dispatches the shard -- here it records the event);
@@ -33,6 +35,7 @@ class SupervisorReport:
     steps_run: int = 0
     failures_recovered: int = 0
     straggler_events: int = 0
+    ckpt_fallbacks: int = 0    # corrupt checkpoints skipped on restore
     restarts: List[int] = field(default_factory=list)
     final_metrics: Optional[Dict[str, Any]] = None
 
@@ -74,7 +77,10 @@ class TrainSupervisor:
                 if retries > self.max_retries:
                     raise RuntimeError(
                         f"step {step} failed {retries} times") from e
+                skipped0 = len(getattr(self.ckpt, "corrupt_skipped", ()))
                 restored = self.ckpt.restore_latest()
+                report.ckpt_fallbacks += len(getattr(
+                    self.ckpt, "corrupt_skipped", ())) - skipped0
                 if restored is not None:
                     ckpt_step, params, opt_state = restored
                     step = ckpt_step

@@ -1,0 +1,397 @@
+"""Serving fault-tolerance layer: deterministic chaos injection,
+NaN-quarantine with bounded retry, deadlines, cancellation, bounded-queue
+admission and stall diagnosis.
+
+The contract under test: every submitted request reaches a well-defined
+terminal status whatever faults fire, the terminal accounting identity
+``submitted == completed + cancelled + timed_out + failed + shed +
+rejected`` holds once the engine drains, the extended slot-step identity
+``slot_steps == prefill_rounds + decode_tokens - first_token_overlaps +
+wasted_slot_steps + nonfinite_decode_rounds`` holds under faults, and the
+fault-free path is bit-identical with the injector disabled OR armed at
+rate zero (all guard ops are masks that reduce to identity)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import archs
+from repro.models import lm
+from repro.serving.engine import (
+    CANCELLED, COMPLETED, FAILED, SHED, TERMINAL_STATUSES, TIMED_OUT,
+    EngineStallError, ServingEngine, generate_one)
+from repro.serving.faults import FaultConfig, FaultInjector
+from repro.serving.scheduler import (
+    ADMITTED, REJECTED_QUEUE_FULL, SHED_UNMEETABLE_DEADLINE)
+
+MAX_LEN = 64
+
+_CACHE = {}
+
+
+def _setup():
+    if "v" not in _CACHE:
+        cfg = archs.smoke("mingru-lm")
+        _CACHE["v"] = (cfg, lm.init_params(jax.random.PRNGKey(0), cfg))
+    return _CACHE["v"]
+
+
+def _check_identities(engine):
+    """Extended slot-step identity + terminal accounting (drained)."""
+    s = engine.stats
+    tokens = s.non_spec_tokens if engine.draft is not None \
+        else s.decode_tokens
+    overlaps = len(s.ttft_rounds)   # one per service epoch that emitted
+    assert s.slot_steps == (s.prefill_rounds + tokens - overlaps
+                            + s.wasted_slot_steps
+                            + s.nonfinite_decode_rounds), (
+        s.slot_steps, s.prefill_rounds, tokens, overlaps,
+        s.wasted_slot_steps, s.nonfinite_decode_rounds)
+    assert s.submitted == (s.completed + s.cancelled + s.timed_out
+                           + s.failed + s.shed + s.rejected)
+    for req in engine.requests.values():
+        assert req.status in TERMINAL_STATUSES, (req.rid, req.status)
+
+
+# ---------------------------------------------------------------------------
+# Injector determinism + inertness (pure host logic, no model)
+# ---------------------------------------------------------------------------
+
+def test_injector_same_seed_same_schedule():
+    def drive(inj):
+        out = []
+        for call in range(20):
+            out.append(tuple(inj.corrupt_state(call * 4, 4, 8)))
+            out.append(tuple(inj.drop_upload(call, [0, 3, 5])[1]))
+            out.append(inj.straggler(call) > 0)
+        return out, list(inj.events)
+
+    kw = dict(seed=11, nan_rate=0.05, drop_rate=0.3, straggler_rate=0.2)
+    a, ev_a = drive(FaultInjector(**kw))
+    b, ev_b = drive(FaultInjector(FaultConfig(**kw)))
+    assert a == b and ev_a == ev_b
+    c, _ = drive(FaultInjector(seed=12, nan_rate=0.05, drop_rate=0.3,
+                               straggler_rate=0.2))
+    assert a != c            # seed actually reaches the draws
+    assert any(ev_a)         # the schedule is non-trivial
+
+
+def test_injector_zero_rates_inject_nothing():
+    inj = FaultInjector(seed=0)
+    for call in range(10):
+        assert inj.corrupt_state(call, 4, 8) == []
+        assert inj.drop_upload(call, [1, 2]) == ([1, 2], [])
+        assert inj.straggler(call) == 0.0
+    assert inj.events == []
+    with pytest.raises(ValueError):
+        FaultInjector(FaultConfig(seed=0), nan_rate=0.5)
+
+
+def test_explicit_nan_schedule_targets_round_window():
+    inj = FaultInjector(nan_at=((5, 1), (9, 0), (3, 99)))
+    assert inj.corrupt_state(4, 4, 4) == [1]      # rounds [4, 8)
+    assert inj.corrupt_state(8, 4, 4) == [0]      # rounds [8, 12)
+    assert inj.corrupt_state(0, 2, 4) == []       # slot 99 out of range
+
+
+# ---------------------------------------------------------------------------
+# Fault-free path stays bit-identical (inert injector)
+# ---------------------------------------------------------------------------
+
+def test_zero_rate_injector_is_bit_identical():
+    cfg, params = _setup()
+    prompts = [[1, 2, 3, 4], [5, 6, 7], [2, 4, 6, 8, 10]]
+    refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
+            for p in prompts]
+    outs = {}
+    for faults in (None, FaultInjector(seed=0)):
+        engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                               decode_block=4, faults=faults)
+        rids = [engine.submit(p, max_new=6) for p in prompts]
+        got = engine.run_to_completion()
+        outs[faults is None] = [got[r] for r in rids]
+        assert engine.stats.quarantined == 0
+        assert engine.stats.nonfinite_decode_rounds == 0
+        _check_identities(engine)
+    assert outs[True] == outs[False] == refs
+
+
+def test_drop_upload_faults_keep_streams_exact():
+    """Dropped staging uploads delay arming (the request retries on the
+    next round-trip) but never lose a request or perturb its stream."""
+    cfg, params = _setup()
+    prompts = [[i + 1, i + 2, i + 3] for i in range(6)]
+    refs = [generate_one(cfg, params, p, max_new=5, max_len=MAX_LEN)
+            for p in prompts]
+    inj = FaultInjector(seed=3, drop_rate=0.7)
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=4, faults=inj)
+    rids = [engine.submit(p, max_new=5) for p in prompts]
+    outs = engine.run_to_completion()
+    assert inj.counts()["drop_upload"] > 0    # the fault actually fired
+    assert [outs[r] for r in rids] == refs
+    assert engine.stats.completed == len(prompts)
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine: bounded retry, then FAILED
+# ---------------------------------------------------------------------------
+
+def test_nan_quarantine_retries_and_completes():
+    """A poisoned row is killed in-loop, its request re-enqueued with
+    backoff, and the retry regenerates the exact reference stream."""
+    cfg, params = _setup()
+    prompts = [[1, 2, 3, 4], [5, 6, 7]]
+    refs = [generate_one(cfg, params, p, max_new=6, max_len=MAX_LEN)
+            for p in prompts]
+    inj = FaultInjector(nan_at=((4, 0),))
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=4, faults=inj, max_retries=2,
+                           retry_backoff=2)
+    rids = [engine.submit(p, max_new=6) for p in prompts]
+    outs = engine.run_to_completion()
+    assert engine.stats.quarantined >= 1
+    assert engine.stats.retried >= 1
+    assert engine.stats.nonfinite_decode_rounds >= 1
+    assert engine.stats.failed == 0
+    assert all(engine.finished[r].status == COMPLETED for r in rids)
+    assert [outs[r] for r in rids] == refs   # retry restarts from scratch
+    _check_identities(engine)
+
+
+def test_retry_exhaustion_fails_and_drains():
+    """Under saturating corruption every request burns its retry budget
+    and retires FAILED -- the engine drains instead of spinning."""
+    cfg, params = _setup()
+    inj = FaultInjector(seed=1, nan_rate=1.0)
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=2, faults=inj, max_retries=1,
+                           retry_backoff=1)
+    rids = [engine.submit([1, 2, 3], max_new=6) for _ in range(2)]
+    engine.run_to_completion(max_steps=200)
+    assert all(engine.finished[r].status == FAILED for r in rids)
+    assert engine.stats.failed == 2
+    assert engine.stats.retried == 2         # one retry each, then FAILED
+    assert engine.stats.quarantined >= 4
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# Cancellation across the lifecycle
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_staged_and_inflight():
+    cfg, params = _setup()
+    ref = generate_one(cfg, params, [1, 2], max_new=10, max_len=MAX_LEN)
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=4)
+    r0 = engine.submit([1, 2], max_new=10)
+    r1 = engine.submit([3, 4], max_new=10)
+    r2 = engine.submit([5, 6], max_new=10)
+    engine.step()     # r0 armed in-loop (RUNNING)
+    engine.step()     # staging restocked: r1 parked, r2 still queued
+    assert engine.current[0] is engine.requests[r0]
+    assert engine.staged[0] is engine.requests[r1]
+    assert engine.cancel(r2)                  # queued
+    assert engine.cancel(r1)                  # staged
+    assert engine.cancel(r0)                  # in-flight: keeps partial
+    assert not engine.cancel(r0)              # already terminal
+    assert not engine.cancel(12345)           # unknown rid
+    outs = engine.run_to_completion()
+    assert all(engine.finished[r].status == CANCELLED
+               for r in (r0, r1, r2))
+    assert outs[r1] == outs[r2] == []
+    # partial output is a proper prefix of the reference stream
+    assert 0 < len(outs[r0]) < 10 and outs[r0] == ref[:len(outs[r0])]
+    assert engine.stats.cancelled == 3
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: sweep for queued / staged / in-flight, shed at admission
+# ---------------------------------------------------------------------------
+
+def test_deadline_sweep_times_out_inflight_with_partial_output():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=4)
+    victim = engine.submit([1, 2, 3], max_new=12)
+    other = engine.submit([4, 5, 6], max_new=12)
+    engine.step()
+    # the capacity estimate is accurate enough that a feasible deadline
+    # is met; simulate it having been wrong by tightening post-admission
+    engine.requests[victim].deadline = engine.stats.decode_steps
+    outs = engine.run_to_completion()
+    assert engine.finished[victim].status == TIMED_OUT
+    assert 0 < len(outs[victim]) < 12         # partial output preserved
+    assert engine.finished[other].status == COMPLETED
+    assert len(outs[other]) == 12
+    assert engine.stats.timed_out == 1
+    _check_identities(engine)
+
+
+def test_deadline_sweep_times_out_queued_and_staged():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=4)
+    r0 = engine.submit([1, 2], max_new=16)
+    r1 = engine.submit([3, 4], max_new=16)
+    r2 = engine.submit([5, 6], max_new=16)
+    engine.step()     # r0 running, r1 staged, r2 queued
+    engine.requests[r1].deadline = engine.stats.decode_steps
+    engine.requests[r2].deadline = engine.stats.decode_steps
+    outs = engine.run_to_completion()
+    assert engine.finished[r1].status == TIMED_OUT
+    assert engine.finished[r2].status == TIMED_OUT
+    assert outs[r1] == [] and outs[r2] == []
+    assert engine.finished[r0].status == COMPLETED
+    _check_identities(engine)
+
+
+def test_unmeetable_deadline_shed_at_admission():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=4)
+    r0 = engine.submit([1, 2], max_new=20)
+    # service needs ~21 rounds behind a 21-round occupant: 4 is hopeless
+    r1 = engine.submit([3, 4], max_new=20, deadline=4)
+    assert engine.requests[r1].verdict == SHED_UNMEETABLE_DEADLINE
+    assert engine.requests[r1].status == SHED
+    assert engine.finished[r1].out == []
+    assert engine.stats.shed == 1
+    # a generous deadline admits and completes normally
+    r2 = engine.submit([5, 6], max_new=4, deadline=512)
+    assert engine.requests[r2].verdict == ADMITTED
+    outs = engine.run_to_completion()
+    assert engine.finished[r0].status == COMPLETED
+    assert engine.finished[r2].status == COMPLETED
+    assert len(outs[r2]) == 4
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# Bounded queue: backpressure sheds instead of growing
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_rejects_burst_and_recovers():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=4, max_queue=2, low_watermark=0.5)
+    rids = [engine.submit([i + 1, i + 2], max_new=4) for i in range(8)]
+    rejected = [r for r in rids
+                if engine.requests[r].verdict == REJECTED_QUEUE_FULL]
+    assert rejected                          # the burst hit the watermark
+    assert all(engine.requests[r].status == SHED for r in rejected)
+    assert engine.stats.queue_peak <= 2      # the queue never grew past it
+    assert engine.stats.rejected == len(rejected)
+    engine.run_to_completion()
+    admitted = [r for r in rids if r not in rejected]
+    assert all(engine.finished[r].status == COMPLETED for r in admitted)
+    # hysteresis re-opened admission once the queue drained
+    late = engine.submit([9, 9], max_new=4)
+    assert engine.requests[late].verdict == ADMITTED
+    engine.run_to_completion()
+    assert engine.finished[late].status == COMPLETED
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# Submit-time validation + stall diagnosis
+# ---------------------------------------------------------------------------
+
+def test_submit_validates_controls_and_budget():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=16)
+    with pytest.raises(ValueError):
+        engine.submit([], max_new=4)                     # empty prompt
+    with pytest.raises(ValueError):
+        engine.submit([1, 2], max_new=64)                # exceeds max_len
+    with pytest.raises(ValueError):
+        engine.submit([1], max_new=4, temperature=-0.5)
+    with pytest.raises(ValueError):
+        engine.submit([1], max_new=4, top_k=-1)
+    with pytest.raises(ValueError):
+        engine.submit([1], max_new=4, top_p=0.0)
+    with pytest.raises(ValueError):
+        engine.submit([1], max_new=4, top_p=1.5)
+    with pytest.raises(ValueError):
+        engine.submit([1], max_new=4, deadline=0)
+    with pytest.raises(ValueError):
+        generate_one(cfg, params, [], max_new=4, max_len=16)
+    assert engine.stats.submitted == 0       # rejected before accounting
+
+
+def test_run_to_completion_stall_raises_with_occupancy_report():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_batch=1, max_len=MAX_LEN,
+                           decode_block=1)
+    rid = engine.submit([1, 2, 3], max_new=20)
+    engine.submit([4, 5, 6], max_new=20)
+    with pytest.raises(EngineStallError) as ei:
+        engine.run_to_completion(max_steps=2)
+    rep = ei.value.report
+    assert rep["in_flight"] == 1 and rep["staged"] == 1
+    assert rep["slots"][0]["current"]["rid"] == rid
+    assert rep["decode_steps"] == 2
+    # the stall error is diagnostic, not terminal: stepping on finishes
+    engine.run_to_completion()
+    assert engine.stats.completed == 2
+
+
+# ---------------------------------------------------------------------------
+# Speculative degradation: rolling accept-rate floor
+# ---------------------------------------------------------------------------
+
+def test_spec_accept_floor_disables_drafting_keeps_streams():
+    cfg, params = _setup()
+    prompts = [[1, 2, 3, 4], [5, 6, 7]]
+    refs = [generate_one(cfg, params, p, max_new=10, max_len=MAX_LEN)
+            for p in prompts]
+    # an impossible floor (accept rate can never reach 1.01) trips the
+    # breaker as soon as the window fills; streams must not change
+    engine = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                           decode_block=2, speculative="ngram",
+                           draft_len=4, spec_accept_floor=1.01,
+                           spec_window=1)
+    rids = [engine.submit(p, max_new=10) for p in prompts]
+    outs = engine.run_to_completion()
+    assert engine.stats.spec_disabled >= 1
+    assert not engine._spec_active
+    assert [outs[r] for r in rids] == refs
+    _check_identities(engine)
+
+
+# ---------------------------------------------------------------------------
+# Chaos replay: mixed trace under all fault kinds at once
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_trace_every_request_terminal():
+    """Mixed arrival trace under NaN + drop + straggler faults, deadlines
+    on a slice and a bounded queue: 100% of requests reach a terminal
+    status and both identities hold."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(7)
+    inj = FaultInjector(seed=5, nan_rate=0.01, drop_rate=0.1,
+                        straggler_rate=0.1, straggler_s=0.001)
+    engine = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN,
+                           decode_block=4, faults=inj, max_retries=2,
+                           retry_backoff=2, max_queue=8)
+    rids = []
+    for i in range(24):
+        prompt = list(rng.integers(1, 250, size=int(rng.integers(2, 9))))
+        kw = {}
+        if i % 4 == 0:
+            kw["deadline"] = 2 * (len(prompt) + 12)
+        rids.append(engine.submit(prompt, max_new=int(rng.integers(4, 13)),
+                                  priority=int(rng.integers(0, 3)), **kw))
+        if i % 3 == 2:
+            engine.step()
+    engine.run_to_completion(max_steps=2000)
+    assert sum(v > 0 for v in inj.counts().values()) >= 2
+    assert len(engine.finished) == 24
+    assert all(engine.finished[r].status in TERMINAL_STATUSES
+               for r in rids)
+    assert engine.stats.completed > 0
+    _check_identities(engine)

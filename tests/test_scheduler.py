@@ -20,8 +20,9 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import archs
 from repro.models import lm
 from repro.serving.engine import ServingEngine, replay_trace
-from repro.serving.scheduler import EngineStats, FifoScheduler, \
-    SchedulerConfig
+from repro.serving.scheduler import ADMITTED, REJECTED_QUEUE_FULL, \
+    SHED_UNMEETABLE_DEADLINE, AdmissionScheduler, EngineStats, \
+    FifoScheduler, SchedulerConfig
 
 # ---------------------------------------------------------------------------
 # Scheduler-level FIFO properties (pure host logic, no model)
@@ -61,6 +62,94 @@ def test_take_never_exceeds_request_or_queue():
     assert sched.take(3) == []
     assert sched.take(0) == []
     assert sched.take(-1) == []
+
+
+# ---------------------------------------------------------------------------
+# Admission policies: priority / EDF / aging / watermarks / backoff
+# ---------------------------------------------------------------------------
+
+
+class _Req:
+    """Minimal request stand-in with the scheduling attributes."""
+
+    def __init__(self, i, priority=1, deadline=None, submit_round=0,
+                 not_before=0):
+        self.i = i
+        self.priority = priority
+        self.deadline = deadline
+        self.submit_round = submit_round
+        self.not_before = not_before
+
+
+def test_priority_classes_order_take():
+    sched = AdmissionScheduler(SchedulerConfig(aging_rounds=0))
+    for i, pr in enumerate([2, 0, 1, 0]):
+        sched.submit(_Req(i, priority=pr))
+    # (priority, fifo seq) order: both priority-0 keep submission order
+    assert [r.i for r in sched.take(4)] == [1, 3, 2, 0]
+
+
+def test_edf_orders_within_a_priority_class():
+    sched = AdmissionScheduler(SchedulerConfig(aging_rounds=0))
+    sched.submit(_Req(0))                      # no deadline -> last
+    sched.submit(_Req(1, deadline=90))
+    sched.submit(_Req(2, deadline=30))
+    assert [r.i for r in sched.take(3)] == [2, 1, 0]
+
+
+def test_aging_promotes_old_low_priority_work():
+    sched = AdmissionScheduler(SchedulerConfig(aging_rounds=8))
+    sched.submit(_Req(0, priority=2, submit_round=0))     # low class
+    sched.submit(_Req(1, priority=1, submit_round=0))     # urgent
+    # inside one aging window plain priority order holds ...
+    assert sched.take(1, now_round=7)[0].i == 1
+    sched.submit(_Req(1, priority=1, submit_round=16))    # fresh, urgent
+    # ... but every 8 waited rounds buy one class: by round 16 the old
+    # request (2 - 16//8 = 0) outranks the fresh priority-1 arrival
+    assert sched.take(1, now_round=16)[0].i == 0
+
+
+def test_bounded_queue_watermark_hysteresis():
+    sched = AdmissionScheduler(SchedulerConfig(
+        max_queue=4, high_watermark=1.0, low_watermark=0.5))
+    assert [sched.submit(_Req(i)) for i in range(4)] == [ADMITTED] * 4
+    assert sched.submit(_Req(4)) == REJECTED_QUEUE_FULL
+    sched.take(2)
+    # len == 2 is not yet below low watermark (0.5 * 4): still closed
+    assert sched.submit(_Req(5)) == REJECTED_QUEUE_FULL
+    sched.take(1)
+    # len == 1 < 2: hysteresis re-opens admission
+    assert sched.submit(_Req(6)) == ADMITTED
+
+
+def test_unmeetable_deadline_shed_by_estimate():
+    sched = AdmissionScheduler(SchedulerConfig())
+    assert sched.submit(_Req(0, deadline=10), est_finish=11) == \
+        SHED_UNMEETABLE_DEADLINE
+    assert len(sched) == 0
+    assert sched.submit(_Req(1, deadline=10), est_finish=10) == ADMITTED
+    assert sched.submit(_Req(2), est_finish=10 ** 9) == ADMITTED  # no ddl
+
+
+def test_remove_withdraws_queued_request():
+    sched = AdmissionScheduler(SchedulerConfig())
+    reqs = [_Req(i) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    assert sched.remove(reqs[1]) and len(sched) == 2
+    assert not sched.remove(reqs[1])          # already gone
+    assert [r.i for r in sched.take(3)] == [0, 2]
+
+
+def test_backoff_skips_until_round_or_ignored():
+    sched = AdmissionScheduler(SchedulerConfig())
+    sched.submit(_Req(0, not_before=10))
+    assert sched.take(1, now_round=0) == []
+    assert sched.take(1, now_round=9) == []
+    # an idle engine ignores backoff rather than stalling empty slots
+    assert sched.take(1, now_round=0, ignore_backoff=True)[0].i == 0
+    sched.submit(_Req(1, not_before=10))
+    assert sched.take(1, now_round=10)[0].i == 1
 
 
 # ---------------------------------------------------------------------------

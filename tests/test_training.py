@@ -158,6 +158,118 @@ def test_supervisor_recovers_from_failure(tmp_path):
     assert report.steps_run >= 15 - 10   # resumed from ckpt at 10
 
 
+def test_checkpoint_checksum_detects_corruption(tmp_path):
+    path = ckpt_lib.save(str(tmp_path), 3, {"w": jnp.arange(4.0)})
+    assert ckpt_lib.verify(path)
+    npz = os.path.join(path, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([f.read(1)[0] ^ 0xFF]))       # flip one byte
+    assert not ckpt_lib.verify(path)
+    with pytest.raises(ckpt_lib.CheckpointCorruptError):
+        ckpt_lib.restore(path)
+
+
+def test_restore_latest_falls_back_past_corrupt(tmp_path):
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path), keep=5)
+    for step in (1, 2):
+        ckpt_lib.save(str(tmp_path), step, {"w": jnp.full((2,),
+                                                          float(step))})
+    with open(os.path.join(tmp_path, "step_00000002", "arrays.npz"),
+              "r+b") as f:
+        f.write(b"\x00" * 16)                       # corrupt the newest
+    step, params, _ = mgr.restore_latest()
+    assert step == 1                                # fell back one save
+    np.testing.assert_array_equal(np.asarray(params["w"]), [1.0, 1.0])
+    assert mgr.corrupt_skipped == [2]
+    # with every checkpoint corrupt, restore_latest reports None
+    with open(os.path.join(tmp_path, "step_00000001", "arrays.npz"),
+              "r+b") as f:
+        f.write(b"\x00" * 16)
+    assert mgr.restore_latest() is None
+    assert mgr.corrupt_skipped == [2, 2, 1]
+
+
+def test_supervisor_falls_back_past_corrupt_checkpoint(tmp_path):
+    """A failure whose newest checkpoint is corrupt recovers from the
+    previous good one; ``report.ckpt_fallbacks`` records the skip."""
+    for step in (5, 10):
+        ckpt_lib.save(str(tmp_path), step, {"w": jnp.full((1,),
+                                                          float(step))})
+    with open(os.path.join(tmp_path, "step_00000010", "arrays.npz"),
+              "r+b") as f:
+        f.write(b"\x00" * 16)
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path), keep=5,
+                                     save_interval=10 ** 6)
+    sup = TrainSupervisor(lambda p, o, b: (p, o, {}), lambda s: s, mgr)
+    fired = []
+
+    def hook(step):
+        if step == 12 and not fired:
+            fired.append(step)
+            raise RuntimeError("injected fault")
+
+    sup.failure_hook = hook
+    params, _, report = sup.run({"w": jnp.zeros((1,))}, None, 14,
+                                start_step=11)
+    assert report.failures_recovered == 1
+    assert report.restarts == [12]
+    assert report.ckpt_fallbacks == 1        # skipped the corrupt step-10
+    np.testing.assert_array_equal(np.asarray(params["w"]), [5.0])
+
+
+def test_supervisor_restore_fast_forward_reproduces_trajectory(tmp_path):
+    """The data pipeline is a pure function of step index, so a crash +
+    restore + fast-forward must reproduce the exact no-failure metric
+    trajectory from the restore point on."""
+    def step_fn(params, opt_state, batch):
+        w = params["w"] + batch
+        return {"w": w}, opt_state, {"loss": float(w)}
+
+    def run(d, hook):
+        mgr = ckpt_lib.CheckpointManager(d, keep=5, save_interval=3)
+        sup = TrainSupervisor(step_fn, lambda s: s, mgr)
+        seen = []
+
+        def wrapped(step):
+            seen.append(step)
+            if hook is not None:
+                hook(step)
+
+        sup.failure_hook = wrapped
+        params, _, report = sup.run({"w": jnp.zeros(())}, None, 10)
+        return float(params["w"]), seen, report
+
+    ref, ref_steps, _ = run(str(tmp_path / "a"), None)
+    fired = []
+
+    def hook(step):
+        if step == 7 and not fired:
+            fired.append(step)
+            raise RuntimeError("crash")
+
+    got, steps, report = run(str(tmp_path / "b"), hook)
+    assert report.failures_recovered == 1
+    assert got == ref                        # identical final state
+    assert steps[-4:] == ref_steps[-4:]      # replayed 6..9 after restore
+    assert steps.count(7) == 2               # the failed step was re-run
+
+
+def test_supervisor_straggler_watchdog_counts_slow_steps(tmp_path):
+    import time as _time
+
+    def step_fn(params, opt_state, batch):
+        _time.sleep(0.2 if batch == 4 else 0.02)
+        return params, opt_state, {}
+
+    mgr = ckpt_lib.CheckpointManager(str(tmp_path),
+                                     save_interval=10 ** 6)
+    sup = TrainSupervisor(step_fn, lambda s: s, mgr, straggler_factor=4.0)
+    _, _, report = sup.run({}, None, 6)
+    assert report.straggler_events >= 1      # step 4 blew the EMA budget
+    assert report.steps_run == 6
+
+
 def test_supervisor_gives_up_after_max_retries(tmp_path):
     mgr = ckpt_lib.CheckpointManager(str(tmp_path))
     sup = TrainSupervisor(lambda p, o, b: (p, o, {}), lambda s: None, mgr,
