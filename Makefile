@@ -3,8 +3,9 @@
 
 PYTEST = PYTHONPATH=src python -m pytest
 
-.PHONY: test test-fast test-serving bench-engine bench-train bench-decode \
-	bench-serve bench-spec bench-chaos example-serve
+.PHONY: test test-fast test-serving test-mesh bench-engine bench-train \
+	bench-decode bench-serve bench-spec bench-chaos bench-mesh \
+	example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -15,6 +16,9 @@ test-fast:       ## skip the heavy model-smoke / multi-device tier
 test-serving:    ## engine + scheduler + sampling + faults + kernel-scan tests only
 	$(PYTEST) -q tests/test_serving.py tests/test_scheduler.py \
 		tests/test_sampling.py tests/test_faults.py tests/test_scan.py
+
+test-mesh:       ## mesh-sharded serving parity + distributed-context tests (8 virtual devices via conftest)
+	$(PYTEST) -q tests/test_mesh_serving.py tests/test_distributed_context.py
 
 bench-engine:    ## superstep-vs-v1 serving throughput sweep
 	PYTHONPATH=src python -m benchmarks.engine_throughput
@@ -35,6 +39,10 @@ bench-spec:      ## bench-serve + speculative (draft-length x chunk) sweep -> BE
 
 bench-chaos:     ## chaos + overload replay: fault-rate sweep + bounded-queue shedding -> BENCH_serve.json "robustness"
 	PYTHONPATH=src python -m benchmarks.engine_throughput --faults
+
+bench-mesh:      ## DP/TP mesh sweep (forces virtual CPU devices) -> BENCH_serve.json "mesh"
+	PYTHONPATH=src python -m benchmarks.engine_throughput \
+		--mesh-shapes 1x1 2x1 4x1 1x2 2x2
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

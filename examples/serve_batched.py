@@ -31,11 +31,18 @@ still reaching a terminal status.
 import argparse
 import time
 
+# must precede the jax/model imports: --mesh forces virtual CPU devices,
+# and the device count is pinned the moment the backend initialises
+from repro.distributed import devcount
+
+devcount.force_host_devices_from_argv()
+
 import jax
 import numpy as np
 
 from repro.configs import archs
 from repro.data.lm_corpus import decode_bytes
+from repro.distributed import serve_mesh
 from repro.models import lm
 from repro.serving.engine import ServingEngine, replay_trace
 from repro.serving.faults import FaultInjector
@@ -107,7 +114,16 @@ def main(argv=None):
                          "dropped uploads, stragglers) and watch the "
                          "quarantine/retry layer keep every request "
                          "terminal")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serving mesh, e.g. 2x1 (slot pool over 2 data "
+                         "shards) or 2x2 (+ d_hidden over 2 model "
+                         "shards); forces virtual CPU devices before jax "
+                         "initialises")
     args = ap.parse_args(argv)
+
+    mesh_plan = serve_mesh.MeshPlan.parse(args.mesh)
+    if mesh_plan is not None:
+        serve_mesh.ensure_host_devices(mesh_plan.size)
 
     cfg = archs.smoke("mingru-lm")
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
@@ -119,7 +135,8 @@ def main(argv=None):
                            prompt_chunk=args.prompt_chunk,
                            speculative=args.speculative,
                            draft_len=args.draft_len,
-                           faults=faults, max_retries=2)
+                           faults=faults, max_retries=2,
+                           mesh=mesh_plan)
 
     if args.trace:
         outs, dt = run_trace(engine, args.trace)
@@ -143,6 +160,13 @@ def main(argv=None):
           f"({snap['ttft_s_mean'] * 1e3:.1f}ms), "
           f"inter-token: {snap['itl_s_mean'] * 1e3:.1f}ms "
           f"({snap['itl_rounds_mean']:.2f} rounds/token)")
+    if mesh_plan is not None:
+        per = " | ".join(
+            f"shard {i}: {s['decode_tokens']} tok, "
+            f"{s['wasted_slot_steps']} wasted"
+            for i, s in enumerate(snap["shards"]))
+        print(f"mesh {mesh_plan}: {per} "
+              f"(identities ok: {snap['shard_identities_ok']})")
     if args.chaos:
         print(f"chaos: injected {faults.counts()} -> "
               f"{snap['completed']}/{snap['submitted']} completed, "

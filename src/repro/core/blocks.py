@@ -19,8 +19,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import min_gru, min_lstm, nn
+from repro.distributed import context as mesh_ctx
 
 Array = jax.Array
+
+
+def _row_parallel_apply(p, x: Array, compute_dtype, full_in_dim: int
+                        ) -> Array:
+    """``dense_apply`` that understands tensor-parallel serving.
+
+    Inside a ``serving_tp`` shard_map the col-parallel projections
+    (gates, ``mlp_in``) hand each model shard a ``d_hidden/model`` (resp.
+    ``d_ff/model``) column block, so the row-parallel projections that
+    contract over that dim (``down``, ``mlp_out``) see a *sliced* kernel:
+    ``kernel.shape[0] < full_in_dim``.  Their local product is then a
+    partial sum that must be ``psum``'d over the model axis BEFORE the
+    (replicated) bias is added -- ``dense_apply`` would add the bias into
+    every partial.  Outside a shard_map, or when the kernel is unsliced
+    (pure DP; a replicated draft model riding a TP trace; non-divisible
+    dims that ``sharding.spec_for_param`` left replicated), this is
+    exactly ``dense_apply`` -- the shape check keeps partially sharded
+    layouts self-consistent without any configuration plumbing."""
+    axis = mesh_ctx.serving_tp_axis()
+    k = p["kernel"]
+    if axis is None or k.shape[0] == full_in_dim:
+        return nn.dense_apply(p, x, compute_dtype)
+    if compute_dtype is not None:
+        k = k.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = jax.lax.psum(x @ k, axis)
+    if "bias" in p:
+        b = p["bias"]
+        if compute_dtype is not None:
+            b = b.astype(compute_dtype)
+        y = y + b
+    return y
 
 
 @dataclass(frozen=True)
@@ -177,12 +210,13 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
     h = cell.step(params["rnn"], y, state["h"], mode=cfg.mode,
                   compute_dtype=compute_dtype, scan_strategy=scan_strategy)
     new_state["h"] = h
-    y = nn.dense_apply(params["down"], h, compute_dtype)
+    y = _row_parallel_apply(params["down"], h, compute_dtype, cfg.d_hidden)
     x_t = x_t + y
     if cfg.use_mlp:
         y = nn.norm_apply(cfg.norm, params["norm_mlp"], x_t)
         y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
-        y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
+        y = _row_parallel_apply(params["mlp_out"], y, compute_dtype,
+                                cfg.d_mlp)
         x_t = x_t + y
     return x_t, new_state
 
@@ -254,12 +288,13 @@ def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
                          scan_strategy=scan_strategy)
     new_state["h"] = hs[:, -1]          # frozen rows: == hs[:, valid-1]
     pos_states["h"] = hs
-    y = nn.dense_apply(params["down"], hs, compute_dtype)
+    y = _row_parallel_apply(params["down"], hs, compute_dtype, cfg.d_hidden)
     x = x + y
     if cfg.use_mlp:
         y = nn.norm_apply(cfg.norm, params["norm_mlp"], x)
         y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
-        y = nn.dense_apply(params["mlp_out"], y, compute_dtype)
+        y = _row_parallel_apply(params["mlp_out"], y, compute_dtype,
+                                cfg.d_mlp)
         x = x + y
     if return_positions:
         return x, new_state, pos_states

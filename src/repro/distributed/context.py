@@ -11,6 +11,7 @@ from jax.sharding import Mesh
 
 _ACTIVE_MESH: Optional[Mesh] = None
 _PURE_DP: bool = False
+_SERVING_TP_AXIS: Optional[str] = None
 
 
 @contextlib.contextmanager
@@ -22,6 +23,27 @@ def use_mesh(mesh: Optional[Mesh], pure_dp: bool = False):
         yield mesh
     finally:
         _ACTIVE_MESH, _PURE_DP = prev, prev_dp
+
+
+@contextlib.contextmanager
+def serving_tp(axis: Optional[str]):
+    """Mark the enclosed trace as running INSIDE a shard_map whose
+    ``axis`` shards ``d_hidden``/``d_ff`` weight blocks (tensor-parallel
+    serving).  Row-parallel projections (``blocks._row_parallel_apply``)
+    consult :func:`serving_tp_axis` at trace time to decide whether their
+    partial products need a ``psum`` over that axis.  ``None`` is inert
+    (pure data parallelism / single device)."""
+    global _SERVING_TP_AXIS
+    prev = _SERVING_TP_AXIS
+    _SERVING_TP_AXIS = axis
+    try:
+        yield axis
+    finally:
+        _SERVING_TP_AXIS = prev
+
+
+def serving_tp_axis() -> Optional[str]:
+    return _SERVING_TP_AXIS
 
 
 def current_mesh() -> Optional[Mesh]:

@@ -1,0 +1,87 @@
+"""Pre-jax device-count bootstrap for the serving launchers.
+
+XLA pins the host-platform device count the moment its backend
+initialises, and merely importing the repro model stack triggers that
+(the Pallas kernel modules consult ``jax.default_backend()`` at import
+time).  So a launcher that wants an N-device CPU mesh must set
+``XLA_FLAGS`` BEFORE its own imports run -- too early for
+``serve_mesh.ensure_host_devices``, whose module imports jax.  This
+module is deliberately jax-free: entry points import it first, scan
+their argv for ``--mesh DxM`` and export the flag, then proceed with
+normal imports.  ``ensure_host_devices`` still runs later as the
+validating backstop (it raises actionably if the count did not take).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def mesh_size_from_argv(argv: List[str]) -> Optional[int]:
+    """Device count implied by a ``--mesh DxM`` / ``--mesh=DxM`` arg, or
+    None.  Malformed specs are left for argparse/MeshPlan to reject."""
+    spec = None
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+        elif a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+    if spec is None:
+        return None
+    m = re.fullmatch(r"(\d+)x(\d+)", spec.strip())
+    return int(m.group(1)) * int(m.group(2)) if m else None
+
+
+def max_mesh_size_from_shapes_argv(argv: List[str]) -> Optional[int]:
+    """Largest device count implied by ``--mesh-shapes DxM [DxM ...]``
+    (the bench sweep flag), or None when absent/malformed."""
+    sizes = []
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        vals: List[str] = []
+        if a == "--mesh-shapes":
+            i += 1
+            while i < len(argv) and not argv[i].startswith("-"):
+                vals.append(argv[i])
+                i += 1
+        elif a.startswith("--mesh-shapes="):
+            vals = a.split("=", 1)[1].split()
+            i += 1
+        else:
+            i += 1
+            continue
+        for v in vals:
+            m = re.fullmatch(r"(\d+)x(\d+)", v.strip())
+            if m:
+                sizes.append(int(m.group(1)) * int(m.group(2)))
+    return max(sizes) if sizes else None
+
+
+def force_host_devices(n: Optional[int]) -> None:
+    """Export the virtual-device flag for ``n`` devices (no-op for
+    None / <=1 / an XLA_FLAGS that already forces a count)."""
+    if n is None or n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + " " if flags else "") + f"{_FORCE_FLAG}={n}"
+
+
+def force_host_devices_from_argv(argv: Optional[List[str]] = None) -> None:
+    """Export ``--xla_force_host_platform_device_count=N`` for a
+    ``--mesh`` found in ``argv`` (default ``sys.argv[1:]``).  Must run
+    before anything imports the model stack.  A count already forced in
+    ``XLA_FLAGS`` is respected untouched."""
+    if argv is None:
+        import sys
+        argv = sys.argv[1:]
+    sizes = [n for n in (mesh_size_from_argv(argv),
+                         max_mesh_size_from_shapes_argv(argv))
+             if n is not None]
+    force_host_devices(max(sizes) if sizes else None)

@@ -24,10 +24,18 @@ from __future__ import annotations
 import argparse
 import time
 
+# --mesh needs the virtual-device flag exported BEFORE the model stack
+# imports below touch jax (kernel modules initialise the backend);
+# jax-free by construction, safe as the very first repro import
+from repro.distributed import devcount
+
+devcount.force_host_devices_from_argv()
+
 import jax
 
 from repro.configs import archs
 from repro.data.lm_corpus import decode_bytes
+from repro.distributed import serve_mesh
 from repro.models import lm
 from repro.serving.engine import ServingEngine
 from repro.training import checkpoint as ckpt_lib
@@ -83,8 +91,23 @@ def main(argv=None):
                     help="quarantine retry budget: how many times a "
                          "request killed by the non-finite health guard "
                          "is re-enqueued before it is FAILED")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serving mesh shape, e.g. 4x1 (data-parallel "
+                         "slot shards) or 2x2 (+ tensor-parallel gate "
+                         "projections).  On CPU the launcher forces DxM "
+                         "virtual devices -- this must happen before jax "
+                         "initialises, so pass --mesh rather than "
+                         "constructing the engine yourself, or set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N in the environment")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # device count is fixed at backend init: force it before ANY jax
+    # device use (init_params below is the first), or fail actionably
+    mesh_plan = serve_mesh.MeshPlan.parse(args.mesh)
+    if mesh_plan is not None:
+        serve_mesh.ensure_host_devices(mesh_plan.size)
 
     cfg = archs.smoke(args.arch) if args.smoke else archs.get(args.arch)
     if cfg.vocab_size != 256:
@@ -103,7 +126,8 @@ def main(argv=None):
                            speculative=args.speculative,
                            draft_len=args.draft_len,
                            max_queue=args.max_queue,
-                           max_retries=args.max_retries)
+                           max_retries=args.max_retries,
+                           mesh=mesh_plan)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
@@ -144,6 +168,14 @@ def main(argv=None):
               f"accepted ({snap['accept_rate']:.1%}); "
               f"{snap['non_spec_tokens']} of {snap['decode_tokens']} "
               f"tokens from the non-speculative path")
+    if mesh_plan is not None:
+        per = ", ".join(
+            f"shard {i}: {s['decode_tokens']} tok "
+            f"({s['wasted_slot_steps']} wasted)"
+            for i, s in enumerate(snap["shards"]))
+        print(f"mesh {mesh_plan} ({mesh_plan.size} devices): {per}; "
+              f"slot-step identity per shard + global: "
+              f"{snap['shard_identities_ok']}")
     print(f"lifecycle: {snap['completed']}/{snap['submitted']} completed "
           f"({snap['completion_rate']:.0%}), "
           f"cancelled {snap['cancelled']}, timed_out {snap['timed_out']}, "

@@ -90,12 +90,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed import serve_mesh
 from repro.models import lm
 from repro.serving import draft as draft_lib
 from repro.serving import sampling
 from repro.serving.scheduler import (ADMITTED, REJECTED_QUEUE_FULL,
                                      AdmissionScheduler, EngineStats,
-                                     SchedulerConfig)
+                                     SchedulerConfig, ShardStats)
 
 # ---------------------------------------------------------------------------
 # Request lifecycle: QUEUED -> STAGED -> RUNNING -> one terminal status
@@ -169,7 +170,7 @@ class ServingEngine:
                  max_retries: int = 1, retry_backoff: int = 8,
                  spec_accept_floor: Optional[float] = None,
                  spec_window: int = 8, spec_cooldown: int = 0,
-                 faults=None):
+                 faults=None, mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -201,14 +202,59 @@ class ServingEngine:
                 f"speculative decoding requires a recurrent-state arch "
                 f"(block_kind='minrnn'); "
                 f"{cfg.name} has block_kind={cfg.block_kind!r}")
+        # mesh-sharded serving (``--mesh dxm``): the slot pool splits
+        # into ``data`` contiguous row groups (shard s owns rows
+        # [s*B/d, (s+1)*B/d)) and ``model`` shards d_hidden for the gate
+        # projections (see distributed/serve_mesh.py).  None keeps the
+        # original single-device path byte for byte.
+        self.mesh_plan = serve_mesh.MeshPlan.parse(mesh)
+        self.mesh = None
+        if self.mesh_plan is not None:
+            plan = self.mesh_plan
+            if max_batch % plan.data != 0:
+                raise ValueError(
+                    f"max_batch ({max_batch}) must divide over the data "
+                    f"axis ({plan.data}): each shard owns "
+                    f"max_batch/data contiguous slot rows")
+            if plan.model > 1:
+                if cfg.block_kind != "minrnn":
+                    raise ValueError(
+                        f"tensor-parallel serving (model axis "
+                        f"{plan.model} > 1) shards d_hidden and requires "
+                        f"block_kind='minrnn'; {cfg.name} has "
+                        f"block_kind={cfg.block_kind!r}")
+                if not serve_mesh._tp_shards_hidden(cfg, plan):
+                    raise ValueError(
+                        f"d_hidden of {cfg.name} does not divide over "
+                        f"the model axis ({plan.model}); pick a model "
+                        f"size that divides d_hidden")
+            self.mesh = plan.build()
+        self.dp = self.mesh_plan.data if self.mesh_plan is not None else 1
+        self._rows_per_shard = max_batch // self.dp
         self.state = lm.init_slot_state(cfg, max_batch, max_len, seed=seed,
                                         draft=self.draft)
+        if self.mesh is not None:
+            # pin the NamedShardings up front so the superstep's shard_map
+            # consumes in-place instead of resharding every call
+            self.state = jax.device_put(
+                self.state, serve_mesh.slot_state_shardings(
+                    cfg, self.state, self.mesh_plan, self.mesh))
+            self.params = jax.device_put(
+                params, serve_mesh.serve_params_shardings(
+                    params, cfg, self.mesh_plan, self.mesh))
+            if self.draft_params is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+                self.draft_params = jax.device_put(
+                    self.draft_params,
+                    NamedSharding(self.mesh, PartitionSpec()))
 
         self.scheduler = AdmissionScheduler(SchedulerConfig(
             max_batch=max_batch, max_queue=max_queue,
             high_watermark=high_watermark, low_watermark=low_watermark,
             aging_rounds=aging_rounds))
-        self.stats = EngineStats(prompt_chunk=self.prompt_chunk)
+        self.stats = EngineStats(
+            prompt_chunk=self.prompt_chunk,
+            shards=[ShardStats() for _ in range(self.dp)])
         # fault tolerance: quarantine retry budget + backoff (rounds),
         # chaos injector (None = fully inert), speculative degradation
         self.max_retries = max(0, int(max_retries))
@@ -387,9 +433,17 @@ class ServingEngine:
         Busy rows are filled in order of estimated rounds-to-free
         (``_row_eta``), keeping staging placement aligned with
         scheduler order.
+
+        Under a data-parallel mesh every slot row belongs to exactly one
+        shard, so admission is also a *placement* decision: requests go
+        to the least-loaded shard first (load = summed ``_row_eta`` over
+        the shard's rows plus the service rounds of its parked staging),
+        with rounds-to-free then row index breaking ties.  A shard whose
+        rows all run long prompts stops attracting new work until the
+        others catch up.  At ``data=1`` the shard load is one constant
+        and this reduces exactly to the pre-mesh ``(eta, row)`` order.
         """
         empty = [i for i in range(self.max_batch) if self.staged[i] is None]
-        empty.sort(key=lambda i: (self._row_eta(i), i))
         now = self.stats.decode_steps
         group = self.scheduler.take(len(empty), now_round=now)
         if not group and self.scheduler.waiting \
@@ -402,8 +456,19 @@ class ServingEngine:
                                         ignore_backoff=True)
         if not group:
             return
+        load = [0] * self.dp
+        for i in range(self.max_batch):
+            load[i // self._rows_per_shard] += self._row_eta(i)
+        for i, parked in enumerate(self.staged):
+            if parked is not None:
+                load[i // self._rows_per_shard] += \
+                    self._service_rounds(parked)
         m = self._smirror
-        for req, slot in zip(group, empty):
+        for req in group:
+            empty.sort(key=lambda i: (load[i // self._rows_per_shard],
+                                      self._row_eta(i), i))
+            slot = empty.pop(0)
+            load[slot // self._rows_per_shard] += self._service_rounds(req)
             req.slot = slot
             req.status = STAGED
             req.admit_seq = self.stats.admitted
@@ -473,9 +538,14 @@ class ServingEngine:
         if fn is None:
             cfg, chunk = self.cfg, self.prompt_chunk
             draft = self.draft if key[1] else None
-            fn = jax.jit(lambda p, dp, s: lm.superstep(
-                p, cfg, s, n, prompt_chunk=chunk, draft=draft,
-                draft_params=dp))
+            if self.mesh is not None:
+                fn = serve_mesh.make_superstep(
+                    cfg, self.mesh_plan, self.mesh, self.state,
+                    self.params, n, prompt_chunk=chunk, draft=draft)
+            else:
+                fn = jax.jit(lambda p, dp, s: lm.superstep(
+                    p, cfg, s, n, prompt_chunk=chunk, draft=draft,
+                    draft_params=dp))
             self._superstep_fns[key] = fn
         return fn
 
@@ -680,19 +750,33 @@ class ServingEngine:
         self.stats.decode_calls += 1
         self.stats.decode_steps += k
         self.stats.slot_steps += k * self.max_batch
-        self.stats.prefill_tokens += int(counters["prefill_steps"])
-        self.stats.prefill_rounds += int(counters["prefill_rounds"])
-        self.stats.wasted_slot_steps += int(counters["wasted_slot_steps"])
-        self.stats.nonfinite_decode_rounds += int(
-            counters["nonfinite_decode_rounds"])
-        self.stats.draft_proposed += int(counters.get("draft_proposed", 0))
-        self.stats.draft_accepted += int(counters.get("draft_accepted", 0))
-        self._adapt_speculation(counters)
+        # under a mesh the counters come back as (data,) per-shard
+        # vectors (single device: scalars -- atleast_1d unifies both);
+        # the global stats take the cross-shard sum, the per-shard
+        # ShardStats take their own component
+        percall = {kk: np.atleast_1d(np.asarray(v))
+                   for kk, v in counters.items() if kk != "nonfinite"}
+        agg = {kk: int(v.sum()) for kk, v in percall.items()}
+        self.stats.prefill_tokens += agg["prefill_steps"]
+        self.stats.prefill_rounds += agg["prefill_rounds"]
+        self.stats.wasted_slot_steps += agg["wasted_slot_steps"]
+        self.stats.nonfinite_decode_rounds += agg["nonfinite_decode_rounds"]
+        self.stats.draft_proposed += agg.get("draft_proposed", 0)
+        self.stats.draft_accepted += agg.get("draft_accepted", 0)
+        for s, sh in enumerate(self.stats.shards):
+            sh.slot_steps += k * self._rows_per_shard
+            sh.prefill_rounds += int(percall["prefill_rounds"][s])
+            sh.wasted_slot_steps += int(percall["wasted_slot_steps"][s])
+            sh.nonfinite_decode_rounds += int(
+                percall["nonfinite_decode_rounds"][s])
+        self._adapt_speculation(agg)
 
         now = time.perf_counter()
         dirty = set(self._dirty_slots)
         drained = 0
+        drained_shard = [0] * self.dp
         for slot in range(self.max_batch):
+            shard = slot // self._rows_per_shard
             for j in range(k):
                 if nf_np[slot, j]:
                     self._quarantine(slot, base_round + j, s_valid_np,
@@ -712,8 +796,10 @@ class ServingEngine:
                         self.stats.record_first_token(
                             now - req.submitted_s,
                             base_round + j + 1 - req.submit_round)
+                        self.stats.shards[shard].first_tokens += 1
                     req.out.append(t)
                     drained += 1
+                    drained_shard[shard] += 1
                     if (req.eos is not None and t == req.eos) or \
                             len(req.out) >= req.max_new:
                         self._finish(req, now, base_round + j)
@@ -726,9 +812,13 @@ class ServingEngine:
         # non_spec_tokens: tokens the non-speculative path contributes --
         # one per emitting slot-round.  The device counts those rounds
         # under speculation; without it every drained token is one.
-        self.stats.non_spec_tokens += int(
-            counters["emit_rounds"]) if "emit_rounds" in counters \
+        spec = "emit_rounds" in percall
+        self.stats.non_spec_tokens += agg["emit_rounds"] if spec \
             else drained
+        for s, sh in enumerate(self.stats.shards):
+            sh.decode_tokens += drained_shard[s]
+            sh.non_spec_tokens += int(percall["emit_rounds"][s]) if spec \
+                else drained_shard[s]
         # re-sync the staging mirror with what the device consumed --
         # except dirty slots (dropped uploads), whose parked requests
         # the device never saw: their mirror rows stay authoritative

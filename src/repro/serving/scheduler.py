@@ -155,6 +155,34 @@ class AdmissionScheduler:
 FifoScheduler = AdmissionScheduler
 
 
+@dataclasses.dataclass
+class ShardStats:
+    """One data shard's slice of the slot-step identity.
+
+    Under a ``--mesh dxm`` serving mesh the slot pool splits into ``d``
+    contiguous row groups (shard ``s`` owns rows ``[s*B/d, (s+1)*B/d)``)
+    and the superstep emits its counters per shard, so the identity
+    ``slot_steps == prefill_rounds + non_spec_tokens - first_tokens +
+    wasted_slot_steps + nonfinite_decode_rounds`` must hold for every
+    shard individually as well as summed (the single-device engine is
+    the ``d=1`` special case with one shard).  ``non_spec_tokens`` equals
+    ``decode_tokens`` without speculation; ``first_tokens`` counts
+    requests whose first output token this shard emitted (each rides its
+    final prefill round -- the overlap term)."""
+    slot_steps: int = 0
+    prefill_rounds: int = 0
+    decode_tokens: int = 0
+    first_tokens: int = 0
+    wasted_slot_steps: int = 0
+    nonfinite_decode_rounds: int = 0
+    non_spec_tokens: int = 0
+
+    def identity_ok(self) -> bool:
+        return self.slot_steps == (
+            self.prefill_rounds + self.non_spec_tokens - self.first_tokens
+            + self.wasted_slot_steps + self.nonfinite_decode_rounds)
+
+
 def _percentile(xs: List[float], q: float) -> float:
     if not xs:
         return 0.0
@@ -250,6 +278,20 @@ class EngineStats:
     ttft_rounds: List[int] = dataclasses.field(default_factory=list)
     itl_s: List[float] = dataclasses.field(default_factory=list)
     itl_rounds: List[float] = dataclasses.field(default_factory=list)
+    # per-data-shard identity slices (one entry on a single-device mesh);
+    # the engine initialises this to its mesh's data-axis size
+    shards: List[ShardStats] = dataclasses.field(default_factory=list)
+
+    def shard_identities_ok(self) -> bool:
+        """Slot-step identity per shard AND for the cross-shard sums."""
+        if not all(s.identity_ok() for s in self.shards):
+            return False
+        tot = ShardStats()
+        for s in self.shards:
+            for f in dataclasses.fields(ShardStats):
+                setattr(tot, f.name,
+                        getattr(tot, f.name) + getattr(s, f.name))
+        return tot.identity_ok()
 
     def observe_queue(self, depth: int) -> None:
         self.queue_peak = max(self.queue_peak, depth)
@@ -315,4 +357,8 @@ class EngineStats:
                            if self.itl_s else 0.0)
         d["itl_rounds_mean"] = (sum(self.itl_rounds) / len(self.itl_rounds)
                                 if self.itl_rounds else 0.0)
+        if self.shards:
+            d["n_shards"] = len(self.shards)
+            d["shards"] = [dataclasses.asdict(s) for s in self.shards]
+            d["shard_identities_ok"] = self.shard_identities_ok()
         return d

@@ -21,18 +21,42 @@ Two things live here:
    bounds the live-executable count -- each module re-jits only its own
    shapes, so the overhead is small next to the interpret-mode tests.
 
-3. The ``slow`` marker registration lives in ``pytest.ini``; nothing to do
+3. Multi-device CPU harness: the mesh-sharded serving tests
+   (tests/test_mesh_serving.py, tests/test_spmd.py) need several devices,
+   and XLA fixes the host-platform device count the moment the backend
+   initialises -- AFTER that, no amount of flag-setting helps.  conftest
+   is imported before any test module, so this is the one reliable place
+   to append ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``.
+   The ``REPRO_FORCE_DEVICES`` env knob controls the count (default 8;
+   set it to ``0``/``1``/empty to opt out, e.g. to reproduce a
+   single-device failure); an XLA_FLAGS that already forces a count is
+   left alone.  Forcing N virtual CPU devices only *partitions* the host
+   platform -- single-device tests still see device 0 and are unaffected.
+
+4. The ``slow`` marker registration lives in ``pytest.ini``; nothing to do
    here beyond keeping imports cheap.
 """
 
 from __future__ import annotations
 
 import gc
+import os
 import random
 import sys
 import types
 
 import pytest
+
+_force = os.environ.get("REPRO_FORCE_DEVICES", "8")
+if _force not in ("", "0", "1") and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    # importing jax does not initialise the backend -- only the first
+    # device/array op does -- so setting the flag here is early enough
+    # even if a plugin already imported jax
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " "
+        + f"--xla_force_host_platform_device_count={int(_force)}").strip()
 
 
 @pytest.fixture(autouse=True, scope="module")
