@@ -5,7 +5,7 @@ PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-serving test-mesh bench-engine bench-train \
 	bench-decode bench-serve bench-spec bench-chaos bench-mesh \
-	example-serve
+	bench-autotune bench-timed example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -43,6 +43,13 @@ bench-chaos:     ## chaos + overload replay: fault-rate sweep + bounded-queue sh
 bench-mesh:      ## DP/TP mesh sweep (forces virtual CPU devices) -> BENCH_serve.json "mesh"
 	PYTHONPATH=src python -m benchmarks.engine_throughput \
 		--mesh-shapes 1x1 2x1 4x1 1x2 2x2
+
+bench-autotune:  ## (block_dh, C, K) sweep per smoke config -> checked-in TUNE_<config>.json plans
+	PYTHONPATH=src python -m benchmarks.autotune --arch mingru-lm
+	PYTHONPATH=src python -m benchmarks.autotune --arch minlstm-lm
+
+bench-timed:     ## block-fused vs cell-fused decode: wall-clock + tier-aware structural -> BENCH_serve.json "block_fused"
+	PYTHONPATH=src python -m benchmarks.engine_throughput --timed
 
 example-serve:   ## continuous-batching demo
 	PYTHONPATH=src python examples/serve_batched.py

@@ -1,0 +1,188 @@
+"""Decode-path autotuner: sweep the serving knobs, persist the winner.
+
+Sweeps the (block_dh, prompt-chunk C, decode-block K) grid for one model
+config and writes the best point as a ``TUNE_<config>.json`` plan (see
+``repro/serving/tuning.py`` for the discovery order the engine uses at
+startup).  Two scoring modes, picked by backend:
+
+  * real accelerator -- wall-clock: each grid point replays the mixed
+    arrival trace on the REAL superstep engine with the candidate knobs
+    and scores measured decode tokens/s.
+  * interpret (CPU/GPU) -- structural: interpret-mode wall-clock is a
+    simulation artifact, so the superstep round simulator scores each
+    point instead, on the tier-aware structural model
+    (weight stream + per-boundary dispatch + boundary activation
+    traffic) extended with a per-tile term: every extra ``block_dh``
+    tile of the whole-block kernel re-reads and re-writes the fp32
+    (B, d_model) residual accumulator per layer.
+
+Both modes score the SAME knobs the engine consumes, so a plan tuned
+structurally on CPU is a valid (if conservative) starting point on TPU
+-- regenerate there for the real ranking.  ``--points N`` truncates the
+grid for CI smoke runs (the 2-point lane); the grid is ordered so the
+truncation still crosses a packing boundary.
+
+    PYTHONPATH=src python -m benchmarks.autotune --arch mingru-lm
+    PYTHONPATH=src python -m benchmarks.autotune --arch minlstm-lm \
+        --points 2 --out-dir /tmp/plans
+    make bench-autotune          # both archs, plans at the repo root
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_utils import header, row
+from benchmarks.engine_throughput import (
+    NOMINAL_HBM_GBPS, NOMINAL_ROUNDTRIP_US, make_trace, replay_real_engine,
+    simulate_superstep, t_step_for_tier)
+from repro.configs import archs
+from repro.models import lm
+from repro.serving import tuning
+
+_LANES = 128
+_MAX_BLOCK_DH = 512             # ops.py VMEM ceiling for the feature tile
+
+
+def tile_candidates(cfg):
+    """Feasible ``block_dh`` tiles for a config: lane multiples up to
+    the smaller of the (padded) hidden width and the VMEM ceiling."""
+    dh = int(cfg.d_model * cfg.minrnn.expansion)
+    dh128 = -(-dh // _LANES) * _LANES
+    cap = min(dh128, _MAX_BLOCK_DH)
+    return [t for t in (128, 256, 384, 512) if t <= cap] or [cap]
+
+
+def block_t_step(cfg, batch: int, block_dh: int) -> float:
+    """Structural seconds per decode round for the block-fused tier at
+    a given feature tile: the tier t_step plus the multi-tile
+    accumulator revisits (one fp32 (B, d_model) read+write per extra
+    tile per layer)."""
+    dh = int(cfg.d_model * cfg.minrnn.expansion)
+    n_tiles = -(-(-(-dh // _LANES) * _LANES) // block_dh)
+    extra = cfg.n_layers * (n_tiles - 1) * 2 * batch * cfg.d_model * 4
+    return (t_step_for_tier(cfg, "block-fused", batch)
+            + extra / (NOMINAL_HBM_GBPS * 1e9))
+
+
+def score_structural(cfg, trace, batch: int, bdh: int, c: int,
+                     k: int) -> float:
+    """Superstep-simulated decode tokens/s on the tier-aware model."""
+    t_step = block_t_step(cfg, batch, bdh)
+    rt = NOMINAL_ROUNDTRIP_US * 1e-6
+    tok, t = simulate_superstep(trace, batch, k, t_step, rt,
+                                prompt_chunk=c)
+    return tok / t
+
+
+def score_wallclock(cfg, params, trace, batch: int, bdh: int, c: int,
+                    k: int) -> float:
+    """Measured decode tokens/s of a real replay with the candidate
+    knobs (real-accelerator mode only)."""
+    snap, _ = replay_real_engine(
+        cfg.replace(block_dh=bdh, fuse_block="on"), params, trace,
+        batch, k, prompt_chunk=c, tune=None)
+    return snap["decode_tokens_per_second"]
+
+
+def sweep(arch: str, batch: int, n_requests: int, block_dhs=None,
+          chunks=(1, 4, 16), ks=(4, 8, 16, 32), points: int = 0,
+          out_dir=None, write: bool = True):
+    cfg = archs.smoke(arch)
+    mode = "wallclock" if jax.default_backend() == "tpu" else "structural"
+    tiles = list(block_dhs) if block_dhs else tile_candidates(cfg)
+    chunks = sorted({max(1, int(c)) for c in chunks})
+    ks = sorted({max(1, int(k)) for k in ks})
+    # order: tile-major then (C, K) interleaved so a truncated CI run
+    # still compares packed vs unpacked rather than K-neighbours
+    grid = [(bdh, c, k) for bdh in tiles
+            for k in ks for c in sorted(chunks, reverse=True)]
+    total = len(grid)
+    if points:
+        grid = grid[:max(1, int(points))]
+    trace = make_trace(n_requests, batch)
+    params = (lm.init_params(jax.random.PRNGKey(0), cfg)
+              if mode == "wallclock" else None)
+    header(f"autotune {arch} ({tuning.fingerprint(cfg)}): "
+           f"{len(grid)}/{total} grid points, batch={batch}, mode={mode}, "
+           f"backend={jax.default_backend()}")
+
+    scored = []
+    t0 = time.perf_counter()
+    for bdh, c, k in grid:
+        if mode == "wallclock":
+            tps = score_wallclock(cfg, params, trace, batch, bdh, c, k)
+        else:
+            tps = score_structural(cfg, trace, batch, bdh, c, k)
+        scored.append({"block_dh": bdh, "prompt_chunk": c,
+                       "decode_block": k, "decode_tokens_per_s": tps})
+        row(f"tune_{arch}_bdh{bdh}_c{c}_k{k}", 0.0, f"{tps:.0f} tok/s "
+            f"{mode}")
+    best = max(scored, key=lambda r: r["decode_tokens_per_s"])
+
+    plan = {
+        "config": tuning.config_stamp(cfg),
+        "arch": arch,
+        "fuse_block": "auto",
+        "block_dh": best["block_dh"],
+        "prompt_chunk": best["prompt_chunk"],
+        "decode_block": best["decode_block"],
+        "score_decode_tokens_per_s": best["decode_tokens_per_s"],
+        "mode": mode,
+        "backend": jax.default_backend(),
+        "batch": batch,
+        "n_requests": n_requests,
+        "points_scored": len(grid),
+        "grid_total": total,
+        "sweep_s": time.perf_counter() - t0,
+        "sweep": scored,
+    }
+    row(f"tune_{arch}_best", 0.0,
+        f"bdh={best['block_dh']} C={best['prompt_chunk']} "
+        f"K={best['decode_block']};{best['decode_tokens_per_s']:.0f} "
+        f"tok/s {mode}")
+    if write:
+        out_dir = Path(out_dir) if out_dir else tuning._REPO_ROOT
+        out_dir.mkdir(parents=True, exist_ok=True)
+        path = out_dir / tuning.tune_filename(cfg)
+        tuning.save_plan(path, plan)
+        print(f"# wrote {path}")
+    return plan
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mingru-lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-requests", type=int, default=48)
+    ap.add_argument("--block-dhs", type=int, nargs="*", default=None,
+                    help="feature tiles to sweep (default: derived from "
+                         "the config's hidden width, <= 512)")
+    ap.add_argument("--chunks", type=int, nargs="*", default=[1, 4, 16],
+                    help="prompt-packing chunk sizes C")
+    ap.add_argument("--ks", type=int, nargs="*", default=[4, 8, 16, 32],
+                    help="decode block sizes K")
+    ap.add_argument("--points", type=int, default=0,
+                    help="truncate the sweep grid to the first N points "
+                         "(CI smoke; 0 = full grid)")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for TUNE_<config>.json (default: "
+                         "repo root, the checked-in location)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="sweep and report, write nothing")
+    args = ap.parse_args(argv)
+    if args.n_requests < 1:
+        raise SystemExit("--n-requests must be >= 1")
+    sweep(args.arch, args.batch, args.n_requests,
+          block_dhs=args.block_dhs, chunks=args.chunks, ks=args.ks,
+          points=args.points, out_dir=args.out_dir, write=not args.dry_run)
+
+
+if __name__ == "__main__":
+    main()

@@ -260,6 +260,60 @@ def structural_decode_tokens_per_s(cfg, batch: int, k: int) -> float:
     return batch * k / t_call
 
 
+# Tier-aware extension (the --timed lane): the whole-block decode kernel
+# collapses the per-layer kernel chain (norm / conv step / cell / down /
+# MLP) into ONE pallas_call, so telling the tiers apart needs costs the
+# weight-stream model deliberately ignores -- each fusion boundary pays
+# a kernel-launch latency plus an HBM round-trip of the (B, d_model)
+# activation it hands to the next kernel.  As with the other NOMINALs,
+# the tracked quantity is the RATIO between kernel tiers at fixed
+# config, which is insensitive to the absolute numbers.
+NOMINAL_DISPATCH_US = 2.0       # per kernel launch / XLA fusion boundary
+
+
+def decode_fusion_boundaries(cfg, tier: str) -> int:
+    """Kernel-launch / fusion boundaries per decode step under a kernel
+    tier, plus one for the embed/head seam.
+
+    ``"block-fused"`` -- one whole-block megakernel per layer.
+    ``"cell-fused"`` (the PR 6 baseline, ``fuse_block="off"``) -- the
+    cell is one Pallas call but the norm, causal-conv step, down
+    projection and the two-dot MLP remain separate fusions (7 per layer
+    with conv + MLP).  ``"unfused"`` -- the cell splinters into its gate
+    projections and update arithmetic as well."""
+    mr = cfg.minrnn
+    if tier == "block-fused":
+        per_layer = 1
+    else:
+        # norm + cell + down (+ conv step) (+ MLP norm, in-dot+gelu,
+        # out-dot)
+        per_layer = 3 + (1 if mr.use_conv else 0) + (3 if mr.use_mlp else 0)
+        if tier == "unfused":
+            per_layer += 2 if mr.cell == "mingru" else 3
+    return cfg.n_layers * per_layer + 1
+
+
+def decode_activation_bytes_per_step(cfg, tier: str, batch: int) -> float:
+    """Boundary-crossing activation traffic per decode step: each fusion
+    boundary writes then re-reads one (B, d_model)-scale fp32 tensor."""
+    return float(decode_fusion_boundaries(cfg, tier)
+                 * 2 * batch * cfg.d_model * 4)
+
+
+def t_step_for_tier(cfg, tier: str, batch: int) -> float:
+    """Structural seconds per device decode round under a kernel tier:
+    weight stream + boundary activation traffic + per-boundary dispatch.
+    With ``tier="cell-fused"`` and the dispatch/activation terms this
+    strictly extends the plain ``decode_weight_bytes_per_step`` model
+    the earlier PR rows used; ratios between tiers are the point."""
+    bw = NOMINAL_HBM_GBPS * 1e9
+    bytes_total = (decode_weight_bytes_per_step(cfg)
+                   + decode_activation_bytes_per_step(cfg, tier, batch))
+    return (bytes_total / bw
+            + decode_fusion_boundaries(cfg, tier) * NOMINAL_DISPATCH_US
+            * 1e-6)
+
+
 def bench_decode(arch: str, batch: int, n_requests: int, max_new: int,
                  blocks, out_path: str = "BENCH_decode.json"):
     """Decode-dominated workload (short prompts, long completions) under
@@ -453,17 +507,20 @@ def _trace_prompt(i: int, n: int):
 
 def replay_real_engine(cfg, params, trace, batch: int, k: int,
                        max_len: int = 160, prompt_chunk: int = 1,
-                       speculative=None, draft_len: int = 4, mesh=None):
+                       speculative=None, draft_len: int = 4, mesh=None,
+                       **engine_kw):
     """Run the actual superstep engine over the arrival trace (arrival
     clock = engine device rounds) and return (stats snapshot, greedy
     streams by trace index).  Greedy streams are spot-checked
     bit-identical to ``generate_one`` -- except under tensor parallelism
     (``mesh`` with model > 1), where the contract is argmax-equivalence
-    (the mesh bench records full-stream equality separately)."""
+    (the mesh bench records full-stream equality separately).  Extra
+    keywords (``fuse_block``, ``tune``, ...) pass through to the
+    engine."""
     engine = ServingEngine(cfg, params, max_batch=batch, max_len=max_len,
                            decode_block=k, prompt_chunk=prompt_chunk,
                            speculative=speculative, draft_len=draft_len,
-                           mesh=mesh)
+                           mesh=mesh, **engine_kw)
     rids = []
     replay_trace(engine, trace, lambda i, r: rids.append(engine.submit(
         _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
@@ -483,7 +540,10 @@ def replay_real_engine(cfg, params, trace, batch: int, k: int,
                     f"{j} at prompt_chunk={prompt_chunk} "
                     f"speculative={speculative!r} mesh={mesh!r}")
     outs = [engine.finished[rid].out for rid in rids]
-    return engine.stats.snapshot(), outs
+    snap = engine.stats.snapshot()
+    snap["_kernel_tier"] = engine.kernel_tier     # dropped by key filters
+    snap["_tune_plan"] = engine.tune_plan
+    return snap, outs
 
 
 def structural_decode_tps_from_counters(snap, t_step: float,
@@ -687,6 +747,132 @@ def bench_mixed(arch: str, batch: int, n_requests: int, k: int,
             f"{best_spec_key};accept {best_spec['accept_rate']:.2f}")
     dump_json(out_path, payload)
     return payload
+
+
+# ---------------------------------------------------------------------------
+# --timed: block-fused vs cell-fused decode, wall-clock + tier-aware model
+# ---------------------------------------------------------------------------
+
+def bench_timed(arch: str, batch: int, n_requests: int, k: int,
+                prompt_chunk: int = 16,
+                out_path: str = "BENCH_serve.json", tune="auto"):
+    """The whole-block megakernel acceptance lane: replay the mixed
+    arrival trace twice on the REAL engine -- ``fuse_block="off"`` (the
+    PR 8 cell-fused engine, byte-for-byte the configuration behind the
+    existing ``prompt_chunks`` best row: same trace, same C, same K) and
+    ``fuse_block="auto"`` (the block-fused tier) -- assert the greedy
+    streams BIT-IDENTICAL between tiers, and record for each tier both
+    the measured wall-clock decode tokens/s and the tier-aware
+    structural tokens/s (weight stream + per-boundary dispatch +
+    boundary activation traffic) on the smoke and full configs.  The
+    headline ``speedup_structural_full_config`` is block-fused over
+    cell-fused on the full config, i.e. over the PR 8 single-device best
+    re-derived under the extended model (the extension is what lets the
+    model see fusion at all -- the plain weight-stream model is
+    tier-blind by construction).  Wall-clock on CPU is interpret-mode
+    Pallas: recorded honestly alongside, but the structural column is
+    the TPU story.  Merges a ``block_fused`` section into
+    BENCH_serve.json."""
+    cfg = archs.smoke(arch)
+    full = archs.get(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(n_requests, batch)
+    rt = NOMINAL_ROUNDTRIP_US * 1e-6
+    header(f"timed block-fused decode {arch}: {n_requests} reqs, "
+           f"batch={batch}, K={k}, C={prompt_chunk}, tune={tune!r}, "
+           f"backend={jax.default_backend()}")
+
+    tiers = {}
+    outs_by_tier = {}
+    plan_used = None
+    for fuse in ("off", "auto"):
+        snap, outs = replay_real_engine(cfg, params, trace, batch, k,
+                                        prompt_chunk=prompt_chunk,
+                                        fuse_block=fuse, tune=tune)
+        tier = snap["_kernel_tier"]
+        if fuse == "auto" and snap["_tune_plan"] is not None:
+            plan_used = snap["_tune_plan"]
+        outs_by_tier[fuse] = outs
+        t_smoke = t_step_for_tier(cfg, tier, batch)
+        t_full = t_step_for_tier(full, tier, batch)
+        tiers[tier] = {
+            "fuse_block": fuse,
+            "kernel_tier": tier,
+            "fusion_boundaries_per_step":
+                decode_fusion_boundaries(cfg, tier),
+            "fusion_boundaries_per_step_full_config":
+                decode_fusion_boundaries(full, tier),
+            "t_step_us": t_smoke * 1e6,
+            "t_step_us_full_config": t_full * 1e6,
+            "wallclock_decode_tokens_per_s":
+                snap["decode_tokens_per_second"],
+            "wallclock_decode_time_s": snap["decode_time_s"],
+            "structural_decode_tokens_per_s":
+                structural_decode_tps_from_counters(snap, t_smoke, rt),
+            "structural_decode_tokens_per_s_full_config":
+                structural_decode_tps_from_counters(snap, t_full, rt),
+            "real_engine": {key: snap[key] for key in _REAL_ENGINE_KEYS},
+        }
+        r = tiers[tier]
+        row(f"serve_timed_{tier}_k{k}_c{prompt_chunk}",
+            snap["decode_time_s"] * 1e6 / max(snap["decode_calls"], 1),
+            f"{r['wallclock_decode_tokens_per_s']:.1f} tok/s wall;"
+            f"{r['structural_decode_tokens_per_s_full_config']:.0f} "
+            f"full-config structural;"
+            f"{r['fusion_boundaries_per_step_full_config']} boundaries")
+
+    # the acceptance bit: fusing the whole block may change HOW a round
+    # runs, never WHAT gets generated
+    if outs_by_tier["auto"] != outs_by_tier["off"]:
+        raise SystemExit(
+            "greedy stream mismatch between block-fused and cell-fused "
+            "decode -- the megakernel broke the parity contract")
+    if "block-fused" not in tiers:
+        raise SystemExit(
+            f"fuse_block='auto' did not engage the block kernel "
+            f"(tiers seen: {sorted(tiers)}) -- dispatch regression")
+
+    blk = tiers["block-fused"]
+    cell = tiers["cell-fused"]
+    section = {
+        "arch": arch,
+        "batch": batch,
+        "n_requests": n_requests,
+        "decode_block": k,
+        "prompt_chunk": prompt_chunk,
+        "nominal_dispatch_us": NOMINAL_DISPATCH_US,
+        "greedy_streams_identical": True,
+        "tune": tune if isinstance(tune, str) or tune is None else "dict",
+        "tune_plan": plan_used,
+        "tiers": tiers,
+        # baseline provenance: the cell-fused replay IS the PR 8 engine
+        # (fuse_block="off") on the PR 8 best configuration, re-scored
+        # under the tier-aware model
+        "speedup_wallclock":
+            blk["wallclock_decode_tokens_per_s"]
+            / max(cell["wallclock_decode_tokens_per_s"], 1e-9),
+        "speedup_structural":
+            blk["structural_decode_tokens_per_s"]
+            / cell["structural_decode_tokens_per_s"],
+        "speedup_structural_full_config":
+            blk["structural_decode_tokens_per_s_full_config"]
+            / cell["structural_decode_tokens_per_s_full_config"],
+    }
+    row(f"serve_timed_speedup_k{k}", 0.0,
+        f"{section['speedup_structural_full_config']:.2f}x full-config "
+        f"structural;{section['speedup_wallclock']:.2f}x wallclock "
+        f"(interpret on CPU)")
+
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged["block_fused"] = section
+    dump_json(out_path, merged)
+    return section
 
 
 # ---------------------------------------------------------------------------
@@ -1055,6 +1241,18 @@ def main(argv=None):
     ap.add_argument("--draft-lens", type=int, nargs="*", default=None,
                     help="--speculative: draft lengths S to sweep "
                          "(default 2 4 8, tiny 4)")
+    ap.add_argument("--timed", action="store_true",
+                    help="block-fused megakernel acceptance lane: replay "
+                         "the mixed trace with fuse_block off vs auto, "
+                         "assert identical greedy streams, record "
+                         "wall-clock AND tier-aware structural decode "
+                         "tok/s (dispatch + activation boundary costs); "
+                         "merges a 'block_fused' section into "
+                         "BENCH_serve.json")
+    ap.add_argument("--tune-file", default="auto",
+                    help="autotune plan for --timed: 'auto' (default; "
+                         "TUNE_<config>.json discovery order), 'none', "
+                         "or an explicit path (shape-checked)")
     ap.add_argument("--faults", action="store_true",
                     help="chaos + overload scenario: replay the mixed "
                          "trace under a seeded fault-rate sweep (NaN "
@@ -1078,6 +1276,19 @@ def main(argv=None):
                     help="CI smoke: tiny workload -> BENCH_*.tiny.json "
                          "(never clobbers the tracked trajectory)")
     args = ap.parse_args(argv)
+    if args.timed:
+        n_req = args.n_requests or (24 if args.tiny else 96)
+        k = max(args.decode_blocks) if args.decode_blocks else 8
+        c = max(args.prompt_chunks) if args.prompt_chunks else (
+            4 if args.tiny else 16)
+        if args.tiny:
+            args.batches = [min(4, max(args.batches))]
+        out = args.out or ("BENCH_serve.tiny.json" if args.tiny
+                           else "BENCH_serve.json")
+        tune = None if args.tune_file == "none" else args.tune_file
+        bench_timed(args.arch, max(args.batches), n_req, k,
+                    prompt_chunk=c, out_path=out, tune=tune)
+        return
     if args.faults:
         n_req = args.n_requests or (24 if args.tiny else 96)
         k = max(args.decode_blocks) if args.decode_blocks else 8

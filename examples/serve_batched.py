@@ -94,12 +94,25 @@ def run_trace(engine, n_requests, seed=0):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--decode-block", type=int, default=4,
-                    help="device rounds per host round-trip (K)")
-    ap.add_argument("--prompt-chunk", type=int, default=1,
+    ap.add_argument("--decode-block", type=int, default=None,
+                    help="device rounds per host round-trip (K); default "
+                         "4, or the --tune-file plan's K when one loads")
+    ap.add_argument("--prompt-chunk", type=int, default=None,
                     help="prompt tokens a prefilling slot consumes per "
                          "device round (C): packed prefill streams the "
-                         "weights once per C prompt tokens (1 = unpacked)")
+                         "weights once per C prompt tokens (default 1 = "
+                         "unpacked, or the --tune-file plan's C)")
+    ap.add_argument("--fuse-block", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="whole-block decode megakernel "
+                         "(kernels/block_step): one pallas_call per "
+                         "layer per step; 'off' keeps the cell-only "
+                         "kernel tier")
+    ap.add_argument("--tune-file", default=None, metavar="PATH|auto",
+                    help="autotune plan: a TUNE_<config>.json path "
+                         "(shape-checked), or 'auto' for the discovery "
+                         "order ($REPRO_TUNE_DIR, cwd, repo root); fills "
+                         "block_dh and the K/C defaults")
     ap.add_argument("--trace", type=int, default=0, metavar="N",
                     help="replay a synthetic N-request arrival trace "
                          "instead of the fixed prompt list")
@@ -120,6 +133,8 @@ def main(argv=None):
                          "shards); forces virtual CPU devices before jax "
                          "initialises")
     args = ap.parse_args(argv)
+    if args.tune_file is None and args.decode_block is None:
+        args.decode_block = 4           # the untuned demo default
 
     mesh_plan = serve_mesh.MeshPlan.parse(args.mesh)
     if mesh_plan is not None:
@@ -136,7 +151,9 @@ def main(argv=None):
                            speculative=args.speculative,
                            draft_len=args.draft_len,
                            faults=faults, max_retries=2,
-                           mesh=mesh_plan)
+                           mesh=mesh_plan,
+                           fuse_block=args.fuse_block,
+                           tune=args.tune_file)
 
     if args.trace:
         outs, dt = run_trace(engine, args.trace)
@@ -145,12 +162,18 @@ def main(argv=None):
     n = sum(len(o) for o in outs.values())
     print(f"{len(outs)} requests, {n} tokens, {n / dt:.1f} tok/s")
     snap = engine.stats.snapshot()
+    plan = engine.tune_plan
+    print(f"kernel tier: {engine.kernel_tier} "
+          f"(fuse_block={args.fuse_block}, "
+          f"block_dh={engine.cfg.block_dh or 'default'}"
+          + (f", plan {plan.get('source', '<dict>')}" if plan else "")
+          + ")")
     print(f"prefill tokens (in-loop): {snap['prefill_tokens']} "
           f"over {snap['prefill_rounds']} rounds "
-          f"(C={args.prompt_chunk}), "
+          f"(C={engine.prompt_chunk}), "
           f"decode rounds: {snap['decode_steps']} in "
           f"{snap['decode_calls']} host round-trips "
-          f"(K={args.decode_block}, "
+          f"(K={engine.decode_block}, "
           f"{snap['host_roundtrips_per_decode_token']:.2f} "
           f"round-trips/token), "
           f"wasted slot steps: {snap['wasted_slot_steps']} "

@@ -122,6 +122,15 @@ class ModelConfig:
     # interpret-mode parity elsewhere.  Set "associative" to force the
     # pure-jnp reference path.
     scan_strategy: str = "auto"
+    # minRNN decode block fusion (kernels/block_step): "auto"/"on" run the
+    # whole residual block (norm -> conv step -> cell -> down -> MLP) in
+    # one pallas_call per layer per decode round when ``scan_strategy``
+    # resolves to "fused" (falling back to the cell kernel under
+    # tensor-parallel serving or non-rmsnorm blocks); "off" keeps the
+    # cell-only fusion.  ``block_dh`` is the kernel's feature tile (0 =
+    # kernel default; autotune plans set it via TUNE_<config>.json).
+    fuse_block: str = "auto"       # auto | on | off
+    block_dh: int = 0
     remat: str = "none"            # none | full | dots
     scan_layers: bool = True       # lax.scan over stacked layer params
     pure_dp: int = 0               # 1: replicate weights, all axes are DP

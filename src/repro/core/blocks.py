@@ -19,9 +19,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import min_gru, min_lstm, nn
+from repro.core import scan as scan_lib
 from repro.distributed import context as mesh_ctx
 
 Array = jax.Array
+
+
+def fuse_block_tier(cfg: "MinRNNBlockConfig", params=None,
+                    scan_strategy: Optional[str] = None) -> str:
+    """Which decode kernel tier this block will actually run.
+
+    Returns ``"block-fused"`` (whole block in one pallas_call,
+    kernels/block_step), ``"cell-fused"`` (cell-only kernel,
+    kernels/decode_step) or ``"unfused"`` (pure-jnp cell step).  The
+    block tier requires: ``fuse_block`` not "off", an rmsnorm block (the
+    kernel pins the rmsnorm arithmetic), and -- when ``params`` are
+    given inside a ``serving_tp`` shard_map -- unsliced row-parallel
+    kernels: a TP-sharded layer's down/mlp_out products need a psum
+    over the model axis, which must stay outside the kernel, so sharded
+    layers fall back to the cell tier.  The serving engine surfaces
+    this in its stats line."""
+    strategy = scan_strategy if scan_strategy is not None \
+        else cfg.scan_strategy
+    if scan_lib.resolve_strategy(strategy) != "fused":
+        return "unfused"
+    if cfg.fuse_block == "off" or cfg.norm != "rmsnorm":
+        return "cell-fused"
+    if params is not None and mesh_ctx.serving_tp_axis() is not None:
+        if params["down"]["kernel"].shape[0] != cfg.d_hidden:
+            return "cell-fused"
+        if cfg.use_mlp and \
+                params["mlp_out"]["kernel"].shape[0] != cfg.d_mlp:
+            return "cell-fused"
+    return "block-fused"
 
 
 def _row_parallel_apply(p, x: Array, compute_dtype, full_in_dim: int
@@ -71,6 +101,15 @@ class MinRNNBlockConfig:
     # core.scan.STRATEGIES; "auto" = fused Pallas kernels (real on TPU,
     # interpret parity elsewhere).  Callers of ``apply`` may override.
     scan_strategy: str = "auto"
+    # whole-block decode fusion (kernels/block_step): "auto"/"on" run
+    # norm -> conv -> cell -> down -> MLP as ONE pallas_call per step /
+    # chunk when the scan strategy resolves to "fused"; "off" keeps the
+    # cell-only kernel.  Falls back to the cell tier for non-rmsnorm
+    # blocks and for tensor-parallel-sliced layers (the TP psum must
+    # stay outside the kernel).  ``block_dh`` = Dh feature tile on real
+    # backends (0 = kernel default; autotune plans set it).
+    fuse_block: str = "auto"        # auto | on | off
+    block_dh: int = 0
 
     @property
     def d_hidden(self) -> int:
@@ -201,6 +240,12 @@ def step(params, cfg: MinRNNBlockConfig, x_t: Array, state, *,
     """
     if scan_strategy is None:
         scan_strategy = cfg.scan_strategy
+    if fuse_block_tier(cfg, params, scan_strategy) == "block-fused":
+        from repro.kernels.block_step import ops as block_ops
+        return block_ops.fused_block_step(
+            params, x_t, state, cell=cfg.cell, mode=cfg.mode,
+            use_conv=cfg.use_conv, use_mlp=cfg.use_mlp,
+            compute_dtype=compute_dtype, block_dh=cfg.block_dh)
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x_t)
     new_state = dict(state)
@@ -271,6 +316,13 @@ def step_chunk(params, cfg: MinRNNBlockConfig, x: Array, state, valid, *,
     first rejected draft is a single O(d_hidden) gather per slot."""
     if scan_strategy is None:
         scan_strategy = cfg.scan_strategy
+    if fuse_block_tier(cfg, params, scan_strategy) == "block-fused":
+        from repro.kernels.block_step import ops as block_ops
+        return block_ops.fused_block_chunk(
+            params, x, state, valid, cell=cfg.cell, mode=cfg.mode,
+            use_conv=cfg.use_conv, use_mlp=cfg.use_mlp,
+            compute_dtype=compute_dtype, block_dh=cfg.block_dh,
+            return_positions=return_positions)
     cell = _CELLS[cfg.cell]
     y = nn.norm_apply(cfg.norm, params["norm_rnn"], x)
     new_state = dict(state)

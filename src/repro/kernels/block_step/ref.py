@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for the fused whole-block decode kernel.
+
+Same math as kernel.py with no Pallas machinery: pre-norm RMSNorm (fp32
+internal), causal-conv step, fp32 cell update (minGRU / minLSTM with
+stable f/(f+i)), compute-dtype down / MLP dots.  This is deliberately
+the op sequence of ``core.blocks.step`` / ``step_chunk`` on the
+pure-jnp cell path, so the parity chain is
+
+    kernel.py  ==  ref.py  ==  blocks.step(scan_strategy="sequential")
+
+and the parity tests diff all three.  Params are the block's own param
+dict (``blocks.init`` layout: norm_rnn / rnn / conv / down / norm_mlp /
+mlp_in / mlp_out).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import min_lstm, nn
+
+
+def _cell_step(cell: str, mode: str, rnn, y, h_prev, compute_dtype):
+    """fp32 cell update matching the decode_step kernels: compute-dtype
+    projections upcast to fp32, output cast back to the input dtype."""
+    if compute_dtype is not None:
+        y = y.astype(compute_dtype)
+    out_dtype = y.dtype
+    y32 = y.astype(jnp.float32)
+
+    def proj(name):
+        w = rnn[name]["kernel"].astype(jnp.float32)
+        p = y32 @ w
+        if "bias" in rnn[name]:
+            p = p + rnn[name]["bias"].astype(jnp.float32)
+        return p
+
+    h32 = h_prev.astype(jnp.float32)
+    if cell == "mingru":
+        z = jax.nn.sigmoid(proj("wz"))
+        v = proj("wh")
+        h_tilde = nn.g(v) if mode == "log" else v
+        h = (1.0 - z) * h32 + z * h_tilde
+    else:
+        f, i = min_lstm.normalized_gates(proj("wf"), proj("wi"))
+        v = proj("wh")
+        h_tilde = nn.g(v) if mode == "log" else v
+        h = f * h32 + i * h_tilde
+    return h.astype(out_dtype)
+
+
+def block_step_ref(params, x_t, state, *, cell: str = "mingru",
+                   mode: str = "log", use_conv: bool = True,
+                   use_mlp: bool = True, compute_dtype=None):
+    """One residual block decode step.  x_t: (B, d_model), state:
+    {"h": (B, d_hidden)[, "conv": (B, K-1, d_model)]} -> (y, new_state)."""
+    y = nn.rmsnorm_apply(params["norm_rnn"], x_t)
+    new_state = dict(state)
+    if use_conv:
+        y, new_state["conv"] = nn.causal_conv_step(params["conv"], y,
+                                                   state["conv"])
+    h = _cell_step(cell, mode, params["rnn"], y, state["h"], compute_dtype)
+    new_state["h"] = h
+    x_t = x_t + nn.dense_apply(params["down"], h, compute_dtype)
+    if use_mlp:
+        y = nn.rmsnorm_apply(params["norm_mlp"], x_t)
+        y = nn.gelu(nn.dense_apply(params["mlp_in"], y, compute_dtype))
+        x_t = x_t + nn.dense_apply(params["mlp_out"], y, compute_dtype)
+    return x_t, new_state
+
+
+def block_chunk_ref(params, x, state, valid, *, cell: str = "mingru",
+                    mode: str = "log", use_conv: bool = True,
+                    use_mlp: bool = True, compute_dtype=None):
+    """Varlen chunk oracle: ``valid[b]`` masked sequential block steps.
+    x: (B, C, d_model), valid: (B,) int32 in [1, C] -> (ys (B, C,
+    d_model), new_state, per-position states {"h": (B, C, d_hidden)[,
+    "conv": (B, C, K-1, d_model)]}).  Frozen rows re-emit their final
+    state; matching ``blocks.step_chunk``, the residual / down / MLP at
+    a frozen position read the FROZEN h (garbage positions the caller
+    masks are nonetheless deterministic, so the parity tests can diff
+    every element)."""
+    chunk = x.shape[1]
+
+    def body(st, inp):
+        x_t, t = inp
+        keep = t < valid
+        y = nn.rmsnorm_apply(params["norm_rnn"], x_t)
+        st_new = dict(st)
+        if use_conv:
+            y, win_new = nn.causal_conv_step(params["conv"], y,
+                                             st["conv"])
+            st_new["conv"] = jnp.where(keep[:, None, None], win_new,
+                                       st["conv"])
+        h_new = _cell_step(cell, mode, params["rnn"], y, st["h"],
+                           compute_dtype)
+        st_new["h"] = jnp.where(keep[:, None], h_new,
+                                st["h"]).astype(st["h"].dtype)
+        x_t = x_t + nn.dense_apply(params["down"], st_new["h"],
+                                   compute_dtype)
+        if use_mlp:
+            y = nn.rmsnorm_apply(params["norm_mlp"], x_t)
+            y = nn.gelu(nn.dense_apply(params["mlp_in"], y,
+                                       compute_dtype))
+            x_t = x_t + nn.dense_apply(params["mlp_out"], y,
+                                       compute_dtype)
+        return st_new, (x_t, st_new)
+
+    final, (ys, pos) = jax.lax.scan(
+        body, dict(state), (jnp.moveaxis(x, 1, 0), jnp.arange(chunk)))
+    ys = jnp.moveaxis(ys, 0, 1)
+    pos = {k: jnp.moveaxis(v, 0, 1) for k, v in pos.items()}
+    return ys, final, pos

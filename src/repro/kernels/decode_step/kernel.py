@@ -114,13 +114,10 @@ def _mingru_chunk_kernel(x_ref, wz_ref, bz_ref, wh_ref, bh_ref, h_ref,
     gate ops, same per-token cast to the output dtype), so a packed chunk
     is bit-identical to ``chunk`` sequential step-kernel calls -- while
     streaming the gate weights from HBM once instead of ``chunk`` times.
-    Bit-exactness holds per feature tile: everywhere on real TPU (both
-    kernels execute the grid tile-sequentially) and, under interpret
-    mode, whenever Dh fits one ``block_dh`` tile -- a multi-tile grid
-    under interpret mode lets XLA merge the step kernel's unrolled
-    per-tile dots into one fused dot a loop body cannot reproduce
-    (~1 ulp).  Every smoke config the CPU tests/benches run is
-    single-tile.
+    Bit-exactness holds per feature tile on every backend: real TPU runs
+    both kernels' grids tile-sequentially, and under interpret mode
+    ops.py forces a single-tile grid (``_tile``), so step and chunk
+    always execute the identical dot -- multi-tile configs included.
     Rows freeze once ``t >= valid[b]``: the update is masked and the
     frozen h is re-written, so ``o[valid[b]-1:]`` all hold the row's
     final state (the caller reads position ``valid[b]-1``)."""

@@ -44,6 +44,21 @@ def _pad_batch(x, h_prev):
     return x, h_prev, b
 
 
+def _tile(dh: int, block_dh: int, interpret: bool) -> int:
+    """Force a SINGLE-tile grid under interpret mode: there the grid is
+    a traced loop, so a multi-tile step kernel unrolls into straight-line
+    per-tile dots that XLA merges into one fused dot -- an accumulation
+    order the chunk kernels' ``fori_loop`` body cannot reproduce (the
+    historical "~1 ulp on multi-tile interpret grids" caveat).  One tile
+    makes step and chunk execute the identical dot on every config, so
+    the step==chunk bit-exactness contract holds unconditionally.  Real
+    TPU backends keep the requested ``block_dh`` streaming tile (both
+    kernels run the grid tile-sequentially there, already exact)."""
+    if interpret:
+        return -(-dh // _LANES) * _LANES
+    return block_dh
+
+
 def fused_mingru_step(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
                       wh: jax.Array, bh: Optional[jax.Array],
                       h_prev: jax.Array, *, mode: str = "log",
@@ -52,6 +67,7 @@ def fused_mingru_step(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
     """minGRU cell step (projections + gates + state update), one Pallas
     call.  x: (..., Dx), h_prev: (..., Dh) -> h_t: (..., Dh)."""
     dh = wz.shape[1]
+    block_dh = _tile(dh, block_dh, interpret)
     if bz is None:
         bz = jnp.zeros((dh,), x.dtype)
     if bh is None:
@@ -82,6 +98,7 @@ def fused_minlstm_step(x: jax.Array, wf: jax.Array, bf: Optional[jax.Array],
     """minLSTM cell step (three projections + stable f/(f+i) normalisation
     + state update), one Pallas call.  Shapes as fused_mingru_step."""
     dh = wf.shape[1]
+    block_dh = _tile(dh, block_dh, interpret)
     if bf is None:
         bf = jnp.zeros((dh,), x.dtype)
     if bi is None:
@@ -132,6 +149,7 @@ def fused_mingru_chunk(x: jax.Array, wz: jax.Array, bz: Optional[jax.Array],
     state.  Bit-identical to ``valid[b]`` sequential ``fused_mingru_step``
     calls (the packed superstep's C=1 parity contract rides on this)."""
     dh = wz.shape[1]
+    block_dh = _tile(dh, block_dh, interpret)
     if bz is None:
         bz = jnp.zeros((dh,), x.dtype)
     if bh is None:
@@ -163,6 +181,7 @@ def fused_minlstm_chunk(x: jax.Array, wf: jax.Array, bf: Optional[jax.Array],
     """Packed varlen minLSTM chunk; contract as :func:`fused_mingru_chunk`
     (bit-identical to sequential ``fused_minlstm_step`` calls)."""
     dh = wf.shape[1]
+    block_dh = _tile(dh, block_dh, interpret)
     if bf is None:
         bf = jnp.zeros((dh,), x.dtype)
     if bi is None:

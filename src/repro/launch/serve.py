@@ -12,7 +12,10 @@ turns on speculative decoding (n-gram self-drafting, verified in one
 chunk pass per round, streams bit-identical).  ``--max-queue``,
 ``--deadline-rounds``, ``--priority`` and ``--max-retries`` expose the
 fault-tolerance layer (bounded admission, EDF deadlines, NaN-quarantine
-retry -- see README "Failure model").  Prints completions (tagged with
+retry -- see README "Failure model").  ``--fuse-block`` picks the decode
+kernel tier (whole-block megakernel vs cell kernels) and ``--tune-file``
+loads an autotuned (block_dh, C, K) plan -- see README "Autotuning".
+Prints the kernel tier + plan source, then completions (tagged with
 their terminal status when not COMPLETED) + the engine stats snapshot
 (prefill/decode token counters, wasted slot steps, per-request TTFT and
 inter-token latency, tokens/s, host round-trips per decoded token, draft
@@ -56,15 +59,32 @@ def main(argv=None):
                     help="keep only the k highest logits (0 = off)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = off)")
-    ap.add_argument("--decode-block", type=int, default=1,
+    ap.add_argument("--decode-block", type=int, default=None,
                     help="device rounds per host round-trip (K): one "
                          "superstep runs K token-select/step/sample/"
-                         "re-admit rounds on device per engine.step()")
-    ap.add_argument("--prompt-chunk", type=int, default=1,
+                         "re-admit rounds on device per engine.step() "
+                         "(default: the --tune-file plan's K, else 1)")
+    ap.add_argument("--prompt-chunk", type=int, default=None,
                     help="prompt tokens a prefilling slot consumes per "
                          "device round (C): packed prefill amortises one "
                          "weight stream over C prompt tokens (minGRU/"
-                         "minLSTM archs only; 1 = unpacked)")
+                         "minLSTM archs only; default: the --tune-file "
+                         "plan's C, else 1 = unpacked)")
+    ap.add_argument("--fuse-block", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="whole-block decode megakernel tier "
+                         "(kernels/block_step): one pallas_call per "
+                         "layer per decode round; 'off' keeps the "
+                         "cell-only kernel tier, 'auto' falls back per "
+                         "layer when a TP slice or non-rmsnorm block "
+                         "rules the fused path out")
+    ap.add_argument("--tune-file", default=None, metavar="PATH|auto|none",
+                    help="autotune plan (benchmarks/autotune.py): an "
+                         "explicit TUNE_<config>.json path (shape-"
+                         "checked, mismatch raises), 'auto' for the "
+                         "discovery order ($REPRO_TUNE_DIR, cwd, repo "
+                         "root), or 'none'; fills block_dh and the K/C "
+                         "defaults -- explicit flags win")
     ap.add_argument("--speculative", default=None, choices=["ngram"],
                     help="speculative decoding draft source: decoding "
                          "rows propose up to --draft-len tokens per "
@@ -102,6 +122,8 @@ def main(argv=None):
                          "count=N in the environment")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.tune_file == "none":
+        args.tune_file = None
 
     # device count is fixed at backend init: force it before ANY jax
     # device use (init_params below is the first), or fail actionably
@@ -127,7 +149,9 @@ def main(argv=None):
                            draft_len=args.draft_len,
                            max_queue=args.max_queue,
                            max_retries=args.max_retries,
-                           mesh=mesh_plan)
+                           mesh=mesh_plan,
+                           fuse_block=args.fuse_block,
+                           tune=args.tune_file)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
@@ -148,7 +172,13 @@ def main(argv=None):
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()
-    print(f"superstep K={args.decode_block} C={args.prompt_chunk}: "
+    plan = engine.tune_plan
+    print(f"kernel tier: {engine.kernel_tier} "
+          f"(fuse_block={args.fuse_block}, "
+          f"block_dh={engine.cfg.block_dh or 'default'}"
+          + (f", plan {plan.get('source', '<dict>')}" if plan else
+             ", no tune plan") + ")")
+    print(f"superstep K={engine.decode_block} C={engine.prompt_chunk}: "
           f"{snap['decode_calls']} host round-trips for "
           f"{snap['decode_tokens']} decoded tokens "
           f"({snap['host_roundtrips_per_decode_token']:.3f} "

@@ -99,7 +99,8 @@ def _minrnn_block_cfg(cfg):
         d_model=cfg.d_model, cell=mr.cell, expansion=mr.expansion,
         use_conv=mr.use_conv, conv_kernel=mr.conv_kernel,
         use_mlp=mr.use_mlp, mlp_factor=cfg.d_ff / cfg.d_model,
-        mode=mr.mode, norm=cfg.norm, scan_strategy=cfg.scan_strategy)
+        mode=mr.mode, norm=cfg.norm, scan_strategy=cfg.scan_strategy,
+        fuse_block=cfg.fuse_block, block_dh=cfg.block_dh)
 
 
 def _mixer_init(key, cfg, dtype):

@@ -90,10 +90,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import blocks as minrnn_blocks
 from repro.distributed import serve_mesh
 from repro.models import lm
 from repro.serving import draft as draft_lib
 from repro.serving import sampling
+from repro.serving import tuning
 from repro.serving.scheduler import (ADMITTED, REJECTED_QUEUE_FULL,
                                      AdmissionScheduler, EngineStats,
                                      SchedulerConfig, ShardStats)
@@ -162,7 +164,8 @@ _STAGE_FIELDS = ("s_valid", "s_prompt", "s_prompt_len", "s_rid",
 class ServingEngine:
     def __init__(self, cfg, params, *, max_batch: int = 8,
                  max_len: int = 2048, seed: int = 0,
-                 decode_block: int = 1, prompt_chunk: int = 1,
+                 decode_block: Optional[int] = None,
+                 prompt_chunk: Optional[int] = None,
                  speculative=None, draft_len: int = 4,
                  draft_params=None,
                  max_queue: int = 0, high_watermark: float = 1.0,
@@ -170,7 +173,25 @@ class ServingEngine:
                  max_retries: int = 1, retry_backoff: int = 8,
                  spec_accept_floor: Optional[float] = None,
                  spec_window: int = 8, spec_cooldown: int = 0,
-                 faults=None, mesh=None):
+                 faults=None, mesh=None,
+                 fuse_block: Optional[str] = None, tune=None):
+        # autotuned tile plan (serving/tuning.py): ``tune`` is None (no
+        # plan -- historical behavior byte for byte), "auto" (TUNE_*.json
+        # discovery order), a path, or a plan dict.  The plan supplies
+        # kernel tiling (block_dh) and scheduling defaults (decode_block
+        # / prompt_chunk) -- explicit constructor arguments always win.
+        # ``fuse_block`` ("auto"|"on"|"off") overrides the config knob.
+        self.tune_plan = tuning.resolve_plan(cfg, tune)
+        if self.tune_plan is not None:
+            cfg = tuning.apply_plan(cfg, self.tune_plan)
+            if decode_block is None:
+                decode_block = self.tune_plan.get("decode_block")
+            if prompt_chunk is None:
+                prompt_chunk = self.tune_plan.get("prompt_chunk")
+        if fuse_block is not None and fuse_block != cfg.fuse_block:
+            cfg = cfg.replace(fuse_block=fuse_block)
+        decode_block = 1 if decode_block is None else decode_block
+        prompt_chunk = 1 if prompt_chunk is None else prompt_chunk
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -293,6 +314,22 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # Submission + admission control
     # ------------------------------------------------------------------
+    @property
+    def kernel_tier(self) -> str:
+        """Which decode kernel tier serves this engine: "block-fused"
+        (whole block per pallas_call, kernels/block_step), "cell-fused"
+        (cell-only kernel) or "unfused".  Tensor-parallel serving shards
+        the row-parallel projections, whose psum must stay outside the
+        kernel, so TP meshes report the cell tier.  Surfaced on the
+        launch/example stats lines."""
+        if self.cfg.block_kind != "minrnn":
+            return "unfused"
+        tier = minrnn_blocks.fuse_block_tier(lm._minrnn_block_cfg(self.cfg))
+        if tier == "block-fused" and self.mesh_plan is not None \
+                and self.mesh_plan.model > 1:
+            return "cell-fused"
+        return tier
+
     def _service_rounds(self, req: Request) -> int:
         """Rounds a request occupies a row end to end: packed prefill
         plus decode, minus the first-token/last-prefill overlap."""

@@ -1,0 +1,108 @@
+"""Autotuned tile-plan discovery for the serving engine.
+
+``benchmarks/autotune.py`` sweeps the decode-path knobs per model config
+-- the block kernel's ``block_dh`` feature tile, the packed-prefill
+chunk C and the superstep decode block K -- and persists the winner as
+a ``TUNE_<config>.json`` plan.  This module is the consumer side: the
+engine resolves a plan at startup and folds it into its config
+(``block_dh``) and scheduling knobs (``prompt_chunk`` / ``decode_block``
+defaults; explicit constructor arguments always win).
+
+Discovery order for ``resolve_plan(cfg, "auto")``:
+
+  1. ``$REPRO_TUNE_DIR/TUNE_<fingerprint>.json``
+  2. ``./TUNE_<fingerprint>.json`` (current working directory)
+  3. ``<repo root>/TUNE_<fingerprint>.json`` (the checked-in plans)
+
+where the fingerprint is ``<cfg.name>_L<n_layers>_d<d_model>`` -- plans
+are shape-specific, and a discovered plan whose recorded config does not
+match the engine's is ignored (an explicitly given path raises instead:
+silently serving with a foreign tile plan is the harder bug to find).
+Regenerate with ``make bench-autotune`` (see README "Autotuning").
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Optional, Union
+
+# src/repro/serving/tuning.py -> repo root
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+_MATCH_KEYS = ("name", "n_layers", "d_model", "d_ff")
+
+
+def fingerprint(cfg) -> str:
+    return f"{cfg.name}_L{cfg.n_layers}_d{cfg.d_model}"
+
+
+def tune_filename(cfg) -> str:
+    return f"TUNE_{fingerprint(cfg)}.json"
+
+
+def config_stamp(cfg) -> dict:
+    """The shape fields a plan is valid for."""
+    stamp = {k: getattr(cfg, k) for k in _MATCH_KEYS}
+    stamp["compute_dtype"] = cfg.compute_dtype
+    return stamp
+
+
+def plan_matches(plan: dict, cfg) -> bool:
+    rec = plan.get("config", {})
+    return all(rec.get(k) == getattr(cfg, k) for k in _MATCH_KEYS)
+
+
+def load_plan(path: Union[str, Path]) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_plan(path: Union[str, Path], plan: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(plan, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def search_paths(cfg):
+    name = tune_filename(cfg)
+    tune_dir = os.environ.get("REPRO_TUNE_DIR")
+    if tune_dir:
+        yield Path(tune_dir) / name
+    yield Path.cwd() / name
+    yield _REPO_ROOT / name
+
+
+def resolve_plan(cfg, tune) -> Optional[dict]:
+    """``tune``: None -> no plan; "auto" -> discovery order above; a
+    path -> that file (raising on shape mismatch); a dict -> as-is."""
+    if tune is None:
+        return None
+    if isinstance(tune, dict):
+        return tune
+    if tune == "auto":
+        for p in search_paths(cfg):
+            if p.is_file():
+                plan = load_plan(p)
+                if plan_matches(plan, cfg):
+                    plan.setdefault("source", str(p))
+                    return plan
+        return None
+    plan = load_plan(tune)
+    if not plan_matches(plan, cfg):
+        raise ValueError(
+            f"tune plan {tune} was generated for "
+            f"{plan.get('config')}, not for {config_stamp(cfg)}")
+    plan.setdefault("source", str(tune))
+    return plan
+
+
+def apply_plan(cfg, plan: dict):
+    """Fold the plan's kernel-level knobs into the model config."""
+    kw = {}
+    if plan.get("block_dh"):
+        kw["block_dh"] = int(plan["block_dh"])
+    if plan.get("fuse_block"):
+        kw["fuse_block"] = plan["fuse_block"]
+    return cfg.replace(**kw) if kw else cfg

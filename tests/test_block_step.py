@@ -1,0 +1,247 @@
+"""Whole-block decode megakernel: ops-vs-oracle parity, multi-tile
+interpret equality, and the kernel-tier dispatch matrix.
+
+The elementwise parity contracts (block-fused step/chunk vs the forced
+jnp path, chunk vs looped step) live in test_decode.py / test_packing.py
+-- here the kernel is pinned against its standalone ``ref`` oracle, the
+decode_step single-tile-under-interpret rule is held on a multi-tile
+config, and the ``fuse_block`` x ``scan_strategy`` x TP dispatch
+precedence is spied end-to-end."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blocks
+from repro.distributed import context as mesh_ctx
+from repro.kernels.block_step import ops as block_ops
+from repro.kernels.block_step import ref as block_ref
+from repro.kernels.decode_step import ops as step_ops
+
+
+def _block(cell="mingru", use_conv=True, use_mlp=True, d_model=16,
+           seed=0, **kw):
+    cfg = blocks.MinRNNBlockConfig(d_model=d_model, cell=cell,
+                                   expansion=1.5, use_conv=use_conv,
+                                   use_mlp=use_mlp, **kw)
+    params = blocks.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# ops wrapper vs the standalone jnp oracle (interpret-mode parity)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+@pytest.mark.parametrize("use_conv,use_mlp",
+                         [(True, True), (True, False), (False, True),
+                          (False, False)])
+def test_block_step_ops_match_ref(cell, use_conv, use_mlp):
+    cfg, params = _block(cell, use_conv, use_mlp)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, cfg.d_model))
+    state = blocks.init_state(cfg, (3,))
+    y, s = block_ops.fused_block_step(
+        params, x, state, cell=cell, mode=cfg.mode, use_conv=use_conv,
+        use_mlp=use_mlp)
+    y_ref, s_ref = block_ref.block_step_ref(
+        params, x, state, cell=cell, mode=cfg.mode, use_conv=use_conv,
+        use_mlp=use_mlp)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s["h"]), np.asarray(s_ref["h"]),
+                               rtol=1e-6, atol=1e-6)
+    if use_conv:
+        np.testing.assert_allclose(np.asarray(s["conv"]),
+                                   np.asarray(s_ref["conv"]),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+def test_block_chunk_ops_match_ref(cell):
+    cfg, params = _block(cell)
+    c = 5
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, c, cfg.d_model))
+    state = blocks.init_state(cfg, (3,))
+    valid = jnp.asarray([3, 5, 1], jnp.int32)
+    ys, s, pos = block_ops.fused_block_chunk(
+        params, x, state, valid, cell=cell, mode=cfg.mode, use_conv=True,
+        use_mlp=True, return_positions=True)
+    ys_ref, s_ref, pos_ref = block_ref.block_chunk_ref(
+        params, x, state, valid, cell=cell, mode=cfg.mode, use_conv=True,
+        use_mlp=True)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(ys_ref),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s["h"]), np.asarray(s_ref["h"]),
+                               rtol=1e-6, atol=1e-6)
+    # per-position state snapshots ARE the speculative rollback table
+    np.testing.assert_allclose(np.asarray(pos["h"]),
+                               np.asarray(pos_ref["h"]),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(pos["conv"]),
+                               np.asarray(pos_ref["conv"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_block_step_bf16_compute_dtype_finite_and_close():
+    cfg, params = _block("minlstm")
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, cfg.d_model))
+    state = blocks.init_state(cfg, (4,))
+    y, s = block_ops.fused_block_step(
+        params, x, state, cell="minlstm", mode=cfg.mode, use_conv=True,
+        use_mlp=True, compute_dtype=jnp.bfloat16)
+    y_ref, s_ref = block_ref.block_step_ref(
+        params, x, state, cell="minlstm", mode=cfg.mode, use_conv=True,
+        use_mlp=True, compute_dtype=jnp.bfloat16)
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(s["h"], np.float32),
+                               np.asarray(s_ref["h"], np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode_step multi-tile configs: single-tile-under-interpret equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_dh", [128, 256])
+def test_decode_chunk_bitexact_on_multitile_config(block_dh):
+    """dh=320 with block_dh=128 historically drifted ~1 ulp between the
+    step and chunk kernels under interpret (XLA merges the unrolled
+    per-tile dots of the step grid into one fused dot).  ops._tile now
+    forces a single tile under interpret, so equality is EXACT on every
+    requested tiling -- including multi-tile ones."""
+    dx, dh, b, c = 24, 320, 3, 4
+    key = jax.random.PRNGKey(4)
+    wz = jax.random.normal(key, (dx, dh)) * 0.3
+    wh = jax.random.normal(jax.random.PRNGKey(5), (dx, dh)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, c, dx))
+    h0 = jax.random.normal(jax.random.PRNGKey(7), (b, dh))
+    valid = jnp.asarray([2, 4, 1], jnp.int32)
+    hs = step_ops.fused_mingru_chunk(x, wz, None, wh, None, h0, valid,
+                                     block_dh=block_dh)
+    h = h0
+    for t in range(c):
+        h_new = step_ops.fused_mingru_step(x[:, t], wz, None, wh, None, h,
+                                           block_dh=block_dh)
+        h = jnp.where((t < valid)[:, None], h_new, h)
+        np.testing.assert_array_equal(
+            np.asarray(hs[:, t]), np.asarray(h),
+            err_msg=f"t={t} block_dh={block_dh}")
+
+
+def test_tile_helper_contract():
+    """Interpret forces one lane-rounded tile; real backends keep the
+    caller's streaming tile."""
+    assert step_ops._tile(320, 128, interpret=True) == 384
+    assert step_ops._tile(128, 128, interpret=True) == 128
+    assert step_ops._tile(320, 128, interpret=False) == 128
+
+
+# ---------------------------------------------------------------------------
+# dispatch precedence: scan_strategy x fuse_block x arch x TP
+# ---------------------------------------------------------------------------
+
+def _spies(monkeypatch):
+    calls = {"block_step": 0, "block_chunk": 0, "cell_step": 0,
+             "cell_chunk": 0}
+
+    def wrap(mod, name, key):
+        real = getattr(mod, name)
+
+        def spy(*a, **kw):
+            calls[key] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(mod, name, spy)
+
+    wrap(block_ops, "fused_block_step", "block_step")
+    wrap(block_ops, "fused_block_chunk", "block_chunk")
+    for name in ("fused_mingru_step", "fused_minlstm_step"):
+        wrap(step_ops, name, "cell_step")
+    for name in ("fused_mingru_chunk", "fused_minlstm_chunk"):
+        wrap(step_ops, name, "cell_chunk")
+    return calls
+
+
+@pytest.mark.parametrize("cell", ["mingru", "minlstm"])
+@pytest.mark.parametrize("strategy,fuse,want_tier", [
+    ("auto", "auto", "block-fused"),
+    ("auto", "on", "block-fused"),
+    ("auto", "off", "cell-fused"),
+    ("fused", "auto", "block-fused"),
+    ("fused", "off", "cell-fused"),
+    ("sequential", "auto", "unfused"),
+    ("sequential", "off", "unfused"),
+])
+def test_step_dispatch_matrix(monkeypatch, cell, strategy, fuse,
+                              want_tier):
+    cfg, params = _block(cell, scan_strategy=strategy, fuse_block=fuse)
+    assert blocks.fuse_block_tier(cfg, params) == want_tier
+    calls = _spies(monkeypatch)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, cfg.d_model))
+    state = blocks.init_state(cfg, (2,))
+    blocks.step(params, cfg, x, state)
+    assert (calls["block_step"] > 0) == (want_tier == "block-fused")
+    assert (calls["cell_step"] > 0) == (want_tier == "cell-fused")
+    xs = jax.random.normal(jax.random.PRNGKey(9), (2, 3, cfg.d_model))
+    blocks.step_chunk(params, cfg, xs, state,
+                      jnp.asarray([3, 2], jnp.int32))
+    assert (calls["block_chunk"] > 0) == (want_tier == "block-fused")
+    assert (calls["cell_chunk"] > 0) == (want_tier == "cell-fused")
+
+
+def test_step_scan_strategy_argument_overrides_config(monkeypatch):
+    """An explicit ``scan_strategy=`` to step() wins over the config,
+    exactly as for the cell-level dispatch."""
+    cfg, params = _block("mingru", scan_strategy="auto", fuse_block="auto")
+    calls = _spies(monkeypatch)
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, cfg.d_model))
+    state = blocks.init_state(cfg, (2,))
+    blocks.step(params, cfg, x, state, scan_strategy="sequential")
+    assert calls["block_step"] == 0 and calls["cell_step"] == 0
+
+
+def test_non_rmsnorm_falls_back_to_cell_tier(monkeypatch):
+    cfg, params = _block("mingru", norm="layernorm")
+    assert blocks.fuse_block_tier(cfg, params) == "cell-fused"
+    calls = _spies(monkeypatch)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, cfg.d_model))
+    state = blocks.init_state(cfg, (2,))
+    blocks.step(params, cfg, x, state)
+    assert calls["block_step"] == 0 and calls["cell_step"] > 0
+
+
+def test_tp_sliced_layer_falls_back_to_cell_tier():
+    """Inside a serving_tp trace a row-parallel-sliced layer (down /
+    mlp_out kernels see a d_hidden/m column block) must keep the psum
+    outside the kernel -- cell tier.  Unsliced params (replicated layer
+    riding the same trace) stay block-fused."""
+    cfg, params = _block("mingru")
+    assert blocks.fuse_block_tier(cfg, params) == "block-fused"
+    half = cfg.d_hidden // 2
+    sliced = dict(params)
+    sliced["down"] = {"kernel": params["down"]["kernel"][:half]}
+    with mesh_ctx.serving_tp("model"):
+        assert blocks.fuse_block_tier(cfg, sliced) == "cell-fused"
+        assert blocks.fuse_block_tier(cfg, params) == "block-fused"
+        # an mlp_out slice alone must also demote
+        sliced_mlp = dict(params)
+        sliced_mlp["mlp_out"] = {
+            "kernel": params["mlp_out"]["kernel"][:cfg.d_mlp // 2],
+            "bias": params["mlp_out"]["bias"]}
+        assert blocks.fuse_block_tier(cfg, sliced_mlp) == "cell-fused"
+    # outside the TP trace sliced shapes are not consulted
+    assert blocks.fuse_block_tier(cfg, params) == "block-fused"
+
+
+def test_fuse_block_tier_unfused_when_strategy_not_fused():
+    cfg, _ = _block("mingru")
+    assert blocks.fuse_block_tier(cfg, scan_strategy="associative") \
+        == "unfused"
+    assert blocks.fuse_block_tier(cfg, scan_strategy="fused") \
+        == "block-fused"
