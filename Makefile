@@ -4,8 +4,8 @@
 PYTEST = PYTHONPATH=src python -m pytest
 
 .PHONY: test test-fast test-serving test-mesh bench-engine bench-train \
-	bench-decode bench-serve bench-spec bench-chaos bench-mesh \
-	bench-autotune bench-timed example-serve
+	bench-decode bench-serve bench-spec bench-chaos bench-crash \
+	bench-mesh bench-autotune bench-timed example-serve
 
 test:            ## full tier-1 suite (what CI runs)
 	$(PYTEST) -q
@@ -39,6 +39,9 @@ bench-spec:      ## bench-serve + speculative (draft-length x chunk) sweep -> BE
 
 bench-chaos:     ## chaos + overload replay: fault-rate sweep + bounded-queue shedding -> BENCH_serve.json "robustness"
 	PYTHONPATH=src python -m benchmarks.engine_throughput --faults
+
+bench-crash:     ## kill/restore bit-exactness + DP-shard failover -> BENCH_serve.json "robustness"
+	PYTHONPATH=src python -m benchmarks.engine_throughput --crash
 
 bench-mesh:      ## DP/TP mesh sweep (forces virtual CPU devices) -> BENCH_serve.json "mesh"
 	PYTHONPATH=src python -m benchmarks.engine_throughput \

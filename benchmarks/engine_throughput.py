@@ -30,6 +30,18 @@ Three scenarios:
     replay), plus a 2x-arrival overload replay against a bounded queue
     (the engine must shed/reject instead of growing without bound).
     Merges a ``robustness`` section into BENCH_serve.json.
+  * ``--crash`` -- the crash-recovery acceptance lane: the mixed trace
+    served by a journaling engine (``recover_dir`` + snapshot cadence),
+    killed at each ``--kill-rounds`` round, restored on a "fresh
+    process" via ``ServingEngine.restore`` (newest snapshot +
+    journal-tail replay) and driven to completion -- 100% of requests
+    must finish with greedy streams bit-identical to an uninterrupted
+    reference, recording recovery time and replayed rounds per kill.
+    With >= 2 devices a 2x1-mesh leg crashes a data shard mid-trace
+    (``shard_crash``) and asserts the failover drain completes every
+    request with per-shard slot-step identity intact and streams equal
+    to a no-crash mesh run.  Merges ``recovery`` + ``shard_failover``
+    rows into the ``robustness`` section of BENCH_serve.json.
   * ``--speculative`` (implies ``--mixed``) -- the same trace replayed
     under n-gram speculative decoding over the (prompt-chunk,
     draft-length) grid: accept rate, inter-token latency in rounds, and
@@ -57,6 +69,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import shutil
+import sys
+import tempfile
 import time
 from typing import Dict, List, Optional
 
@@ -66,6 +81,9 @@ from typing import Dict, List, Optional
 from repro.distributed import devcount
 
 devcount.force_host_devices_from_argv()
+if "--crash" in sys.argv:
+    # the crash lane's shard-failover leg serves on a 2x1 mesh
+    devcount.force_host_devices(2)
 
 import jax
 import jax.numpy as jnp
@@ -1012,9 +1030,181 @@ def bench_robustness(arch: str, batch: int, n_requests: int, k: int,
                 merged = json.load(f)
         except ValueError:
             merged = {}
+    # the crash lane co-owns this section: keep its rows when re-running
+    prior = merged.get("robustness") or {}
+    for keep in ("recovery", "shard_failover"):
+        if keep in prior:
+            robustness[keep] = prior[keep]
     merged["robustness"] = robustness
     dump_json(out_path, merged)
     return robustness
+
+
+# ---------------------------------------------------------------------------
+# --crash: kill/restore replay + DP-shard failover (the recovery lane)
+# ---------------------------------------------------------------------------
+
+def _merge_robustness(out_path: str, key: str, section) -> None:
+    """Merge one sub-section into BENCH_serve.json's ``robustness``
+    block without clobbering the chaos/overload rows."""
+    merged = {}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                merged = json.load(f)
+        except ValueError:
+            merged = {}
+    merged.setdefault("robustness", {})[key] = section
+    dump_json(out_path, merged)
+
+
+def bench_crash(arch: str, batch: int, n_requests: int, k: int,
+                kill_rounds=None, snapshot_every: int = 8,
+                out_path: str = "BENCH_serve.json"):
+    """Crash-recovery acceptance run (see module docstring ``--crash``).
+
+    For each kill round: serve the mixed trace on a journaling engine,
+    abandon it mid-trace (the process "crashes" -- the journal is
+    already durable, the engine object is simply dropped), restore via
+    ``ServingEngine.restore`` and drive the remaining trace.  Every
+    request must reach COMPLETED and every greedy stream must be
+    bit-identical to the uninterrupted reference -- recovery is only
+    recovery if nobody downstream can tell it happened.  Then, with
+    >= 2 devices, the DP-shard failover leg kills shard 1 of a 2x1 mesh
+    mid-trace and asserts the drain onto shard 0 completes everything
+    with per-shard identity intact.
+    """
+    cfg = archs.smoke(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    trace = make_trace(n_requests, batch)
+    header(f"crash recovery {arch}: {n_requests} reqs, batch={batch}, "
+           f"K={k}, snapshot every {snapshot_every} rounds, "
+           f"backend={jax.default_backend()}")
+
+    def driver(engine):
+        return lambda i, r: engine.submit(
+            _trace_prompt(i, r["prompt_len"]), max_new=r["max_new"],
+            temperature=0.0)
+
+    # uninterrupted reference (no journal): the oracle every restored
+    # run must match stream for stream
+    ref = ServingEngine(cfg, params, max_batch=batch, max_len=160,
+                        decode_block=k)
+    replay_trace(ref, trace, driver(ref))
+    assert ref.stats.completed == len(trace)
+    ref_outs = [ref.finished[i].out for i in range(len(trace))]
+    total_rounds = ref.stats.decode_steps
+
+    if not kill_rounds:
+        kill_rounds = sorted({max(1, total_rounds // 4),
+                              max(2, total_rounds // 2),
+                              max(3, (3 * total_rounds) // 4)})
+    kills = []
+    for kill in kill_rounds:
+        d = tempfile.mkdtemp(prefix="bench_crash_")
+        try:
+            eng = ServingEngine(cfg, params, max_batch=batch, max_len=160,
+                                decode_block=k, recover_dir=d,
+                                snapshot_every=snapshot_every)
+            submitted = replay_trace(
+                eng, trace, driver(eng),
+                stop=lambda e: e.stats.decode_steps >= kill)
+            del eng     # the crash: no shutdown, no flush beyond the WAL
+            rec = ServingEngine.restore(d, cfg, params)
+            report = rec.recovery_report
+            assert len(rec.requests) == submitted
+            replay_trace(rec, trace, driver(rec),
+                         start=len(rec.requests))
+            outs = [rec.finished[i].out for i in range(len(trace))]
+            if rec.stats.completed != len(trace):
+                raise SystemExit(
+                    f"kill@{kill}: restored run completed "
+                    f"{rec.stats.completed}/{len(trace)} requests")
+            if outs != ref_outs:
+                raise SystemExit(
+                    f"kill@{kill}: restored greedy streams diverge from "
+                    f"the uninterrupted reference")
+            if rec.stats.decode_steps != total_rounds:
+                raise SystemExit(
+                    f"kill@{kill}: restored run took "
+                    f"{rec.stats.decode_steps} rounds, reference took "
+                    f"{total_rounds} -- the round clocks diverged")
+            kills.append({
+                "kill_round": int(kill),
+                "submitted_at_kill": int(submitted),
+                "snapshot_round": report["snapshot_round"],
+                "replayed_records": report["replayed_records"],
+                "replayed_rounds": report["replayed_rounds"],
+                "recovery_s": report["recovery_s"],
+                "outputs_equal": True,
+                "completed": int(rec.stats.completed),
+            })
+            row(f"serve_crash_kill{kill}", report["recovery_s"] * 1e6,
+                f"snapshot @{report['snapshot_round']};"
+                f"replayed {report['replayed_rounds']} rounds"
+                f" ({report['replayed_records']} records);"
+                f"outputs equal")
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    section = {
+        "arch": arch, "batch": batch, "n_requests": n_requests,
+        "decode_block": k, "snapshot_every": snapshot_every,
+        "total_rounds": int(total_rounds), "kills": kills,
+    }
+    _merge_robustness(out_path, "recovery", section)
+
+    # ---- DP-shard failover on a 2x1 mesh ------------------------------
+    if len(jax.devices()) < 2 or batch % 2 != 0:
+        print(f"# shard-failover leg skipped: needs >= 2 devices and an "
+              f"even batch (have {len(jax.devices())} device(s), "
+              f"batch={batch})")
+        return section
+    mesh_ref = ServingEngine(cfg, params, max_batch=batch, max_len=160,
+                             decode_block=k, mesh="2x1")
+    replay_trace(mesh_ref, trace, driver(mesh_ref))
+    mesh_outs = [mesh_ref.finished[i].out for i in range(len(trace))]
+    crash_round = max(1, mesh_ref.stats.decode_steps // 3)
+
+    inj = FaultInjector(shard_crash_at=((crash_round, 1),))
+    eng = ServingEngine(cfg, params, max_batch=batch, max_len=160,
+                        decode_block=k, mesh="2x1", faults=inj)
+    replay_trace(eng, trace, driver(eng))
+    s = eng.stats
+    if s.completed != len(trace):
+        raise SystemExit(
+            f"shard failover completed {s.completed}/{len(trace)}")
+    outs = [eng.finished[i].out for i in range(len(trace))]
+    if outs != mesh_outs:
+        raise SystemExit("failover streams diverge from the no-crash "
+                         "mesh run -- greedy output must be placement-"
+                         "independent")
+    if not s.shard_identities_ok():
+        raise SystemExit("per-shard slot-step identity broken by the "
+                         "shard crash")
+    if s.submitted != (s.completed + s.cancelled + s.timed_out + s.failed
+                       + s.shed + s.rejected):
+        raise SystemExit("terminal accounting violated under failover")
+    failover = {
+        "mesh": "2x1", "crash_round": int(crash_round), "shard": 1,
+        "shard_crashes": s.shard_crashes,
+        "failover_requeued": s.failover_requeued,
+        "completed": s.completed,
+        "decode_steps": s.decode_steps,
+        "no_crash_decode_steps": mesh_ref.stats.decode_steps,
+        "dead_shard_wasted_slot_steps": s.shards[1].wasted_slot_steps,
+        "outputs_equal": True, "shard_identity_ok": True,
+        "faults_injected": inj.counts(),
+    }
+    row(f"serve_failover_r{crash_round}",
+        s.decode_time_s * 1e6 / max(s.decode_calls, 1),
+        f"shard 1 died @{crash_round};"
+        f"requeued {s.failover_requeued};"
+        f"rounds {s.decode_steps} vs {mesh_ref.stats.decode_steps} "
+        f"no-crash;outputs equal")
+    _merge_robustness(out_path, "shard_failover", failover)
+    section["shard_failover"] = failover
+    return section
 
 
 # ---------------------------------------------------------------------------
@@ -1263,6 +1453,22 @@ def main(argv=None):
     ap.add_argument("--fault-rates", type=float, nargs="*", default=None,
                     help="--faults: per-opportunity fault rates to sweep "
                          "(default 0.0 0.002 0.01, tiny 0.0 0.01)")
+    ap.add_argument("--crash", action="store_true",
+                    help="crash-recovery lane: kill a journaling engine "
+                         "at each --kill-rounds round, restore from "
+                         "snapshot + journal replay, assert 100%% "
+                         "completion with streams bit-identical to an "
+                         "uninterrupted run; plus a 2x1-mesh DP-shard "
+                         "failover leg.  Merges 'recovery' + "
+                         "'shard_failover' into BENCH_serve.json's "
+                         "robustness section")
+    ap.add_argument("--kill-rounds", type=int, nargs="*", default=None,
+                    help="--crash: device rounds to kill at (default: "
+                         "1/4, 1/2 and 3/4 of the reference run)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="--crash: snapshot cadence in device rounds "
+                         "(default 3*K, so kills land mid-cadence and "
+                         "the restore replays a real journal tail)")
     ap.add_argument("--mesh-shapes", nargs="*", default=None,
                     metavar="DxM",
                     help="mesh-sharded serving sweep (e.g. 1x1 2x1 4x1 "
@@ -1300,6 +1506,18 @@ def main(argv=None):
                            else "BENCH_serve.json")
         bench_robustness(args.arch, max(args.batches), n_req, k,
                          fault_rates=rates, out_path=out)
+        return
+    if args.crash:
+        n_req = args.n_requests or (24 if args.tiny else 96)
+        k = max(args.decode_blocks) if args.decode_blocks else 8
+        if args.tiny:
+            args.batches = [min(4, max(args.batches))]
+        out = args.out or ("BENCH_serve.tiny.json" if args.tiny
+                           else "BENCH_serve.json")
+        bench_crash(args.arch, max(args.batches), n_req, k,
+                    kill_rounds=args.kill_rounds,
+                    snapshot_every=args.snapshot_every or 3 * k,
+                    out_path=out)
         return
     if args.mixed or args.speculative or args.mesh_shapes:
         n_req = args.n_requests or (32 if args.tiny else 96)

@@ -31,6 +31,17 @@ LOCAL ``h`` block; a genuine overflow confined to one shard's block
 would desynchronise slot liveness across model shards.  Injected faults
 (``serving/faults.py``) poison whole rows so every shard agrees; on a
 fault-free trace the guard is the identity.
+
+DP-shard failover (``serving/recovery.py`` + the ``shard_crash`` chaos
+point): a "crashed" data shard stays IN the mesh -- the device topology
+is fixed at backend init -- but the engine marks its contiguous row
+group (:func:`shard_rows`) permanently dead (``alive=False``, never
+staged), so the shard's device keeps lock-stepping empty rows (counted
+as its own ``wasted_slot_steps``, keeping the per-shard slot-step
+identity exact) while its drained requests re-run on the survivors.
+This models losing a shard's *state*, the recoverable failure a
+fixed-state RNN makes cheap; losing the device itself needs a restart
+onto a smaller mesh via the engine snapshot/journal path.
 """
 
 from __future__ import annotations
@@ -100,6 +111,13 @@ class MeshPlan:
 
     def __str__(self) -> str:
         return f"{self.data}x{self.model}"
+
+
+def shard_rows(shard: int, rows_per_shard: int) -> range:
+    """Contiguous slot rows owned by data shard ``shard`` (ownership is
+    ``slot // rows_per_shard`` everywhere: staging placement, per-shard
+    counters and the failover drain all agree on this map)."""
+    return range(shard * rows_per_shard, (shard + 1) * rows_per_shard)
 
 
 def ensure_host_devices(n: int) -> None:

@@ -15,6 +15,9 @@ fault-tolerance layer (bounded admission, EDF deadlines, NaN-quarantine
 retry -- see README "Failure model").  ``--fuse-block`` picks the decode
 kernel tier (whole-block megakernel vs cell kernels) and ``--tune-file``
 loads an autotuned (block_dh, C, K) plan -- see README "Autotuning".
+``--snapshot-dir`` arms crash recovery (write-ahead journal + periodic
+full-state snapshots) and ``--restore DIR`` resumes a crashed run
+bit-identically -- see README "Crash recovery".
 Prints the kernel tier + plan source, then completions (tagged with
 their terminal status when not COMPLETED) + the engine stats snapshot
 (prefill/decode token counters, wasted slot steps, per-request TTFT and
@@ -120,6 +123,22 @@ def main(argv=None):
                          "constructing the engine yourself, or set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N in the environment")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="arm crash recovery: journal every submit/"
+                         "cancel/step to DIR/journal.jsonl and snapshot "
+                         "the full serving state every --snapshot-every "
+                         "rounds (starts a NEW journal epoch; resume a "
+                         "crashed one with --restore DIR instead)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="snapshot cadence in device rounds for "
+                         "--snapshot-dir (default 8)")
+    ap.add_argument("--restore", default=None, metavar="DIR",
+                    help="resume a crashed serving run: rebuild the "
+                         "engine from DIR's newest good snapshot + "
+                         "journal-tail replay (engine shape flags are "
+                         "taken from the journal header, not the CLI), "
+                         "finish its in-flight requests, then serve "
+                         "--prompts on top.  Keeps journaling into DIR")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.tune_file == "none":
@@ -141,17 +160,31 @@ def main(argv=None):
             step, params, _ = restored
             print(f"loaded checkpoint step {step}")
 
-    engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                           max_len=args.max_len, seed=args.seed,
-                           decode_block=args.decode_block,
-                           prompt_chunk=args.prompt_chunk,
-                           speculative=args.speculative,
-                           draft_len=args.draft_len,
-                           max_queue=args.max_queue,
-                           max_retries=args.max_retries,
-                           mesh=mesh_plan,
-                           fuse_block=args.fuse_block,
-                           tune=args.tune_file)
+    if args.restore:
+        engine = ServingEngine.restore(args.restore, cfg, params)
+        rep = engine.recovery_report
+        print(f"restored from {args.restore}: snapshot "
+              f"@{rep['snapshot_round']}, replayed "
+              f"{rep['replayed_records']} journal records "
+              f"({rep['replayed_rounds']} rounds) in "
+              f"{rep['recovery_s']:.2f}s"
+              + (f"; fell past corrupt snapshot(s) "
+                 f"{rep['corrupt_snapshots_skipped']}"
+                 if rep["corrupt_snapshots_skipped"] else ""))
+    else:
+        engine = ServingEngine(cfg, params, max_batch=args.max_batch,
+                               max_len=args.max_len, seed=args.seed,
+                               decode_block=args.decode_block,
+                               prompt_chunk=args.prompt_chunk,
+                               speculative=args.speculative,
+                               draft_len=args.draft_len,
+                               max_queue=args.max_queue,
+                               max_retries=args.max_retries,
+                               mesh=mesh_plan,
+                               fuse_block=args.fuse_block,
+                               tune=args.tune_file,
+                               recover_dir=args.snapshot_dir,
+                               snapshot_every=args.snapshot_every)
     rids = {}
     for p in args.prompts:
         rid = engine.submit(list(p.encode()), max_new=args.max_new,
@@ -168,7 +201,10 @@ def main(argv=None):
     for rid, toks in sorted(outs.items()):
         req = engine.finished[rid]
         tag = "" if req.status == "COMPLETED" else f" [{req.status}]"
-        print(f"--- [{rids[rid]!r}]{tag} -> {decode_bytes(toks)!r}")
+        # a restored engine also finishes requests journaled by the
+        # crashed process, whose prompts arrived via the journal
+        label = rids.get(rid, decode_bytes(req.prompt))
+        print(f"--- [{label!r}]{tag} -> {decode_bytes(toks)!r}")
     print(f"{n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / max(dt, 1e-9):.1f} tok/s, batched)")
     snap = engine.stats.snapshot()

@@ -57,6 +57,16 @@ Per engine ``step()``:
   * Speculative decoding degrades gracefully: a rolling accept-rate
     floor (``spec_accept_floor``) disables drafting when a hostile
     input stream makes verify rounds pure overhead.
+  * With ``recover_dir`` set the engine is crash tolerant: every
+    submit/cancel/step goes to a write-ahead journal and the full
+    serving state snapshots every ``snapshot_every`` rounds, so
+    ``ServingEngine.restore`` on a fresh process resumes with streams
+    bit-identical to an uninterrupted run (serving/recovery.py).
+  * A scheduled ``shard_crash`` fault kills a whole data shard of the
+    slot pool: the engine marks its rows dead, drains the shard's
+    staged + in-flight requests onto the survivors through the requeue
+    path (no retry budget burned) and serves degraded --
+    ``stats.shard_crashes`` / ``stats.failover_requeued`` count it.
 
 With ``speculative`` set (a ``serving.draft`` source -- ``"ngram"``
 self-drafting or a tiny draft model), decoding rows propose up to
@@ -83,6 +93,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import heapq
+import os
 import time
 from typing import Any, Dict, List, Optional
 
@@ -174,7 +185,9 @@ class ServingEngine:
                  spec_accept_floor: Optional[float] = None,
                  spec_window: int = 8, spec_cooldown: int = 0,
                  faults=None, mesh=None,
-                 fuse_block: Optional[str] = None, tune=None):
+                 fuse_block: Optional[str] = None, tune=None,
+                 recover_dir: Optional[str] = None,
+                 snapshot_every: int = 8, snapshot_keep: int = 3):
         # autotuned tile plan (serving/tuning.py): ``tune`` is None (no
         # plan -- historical behavior byte for byte), "auto" (TUNE_*.json
         # discovery order), a path, or a plan dict.  The plan supplies
@@ -196,6 +209,7 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.seed = int(seed)
         # K = device rounds per host round-trip (lm.superstep scan length)
         self.decode_block = max(1, int(decode_block))
         # C = prompt tokens consumed per round by a prefilling row: the
@@ -287,6 +301,11 @@ class ServingEngine:
         self._spec_active = True
         self._spec_hist: List = []      # (proposed, accepted) per call
         self._spec_off_calls = 0
+        # DP-shard failover: data shards whose slot rows a scheduled
+        # shard_crash killed.  Dead rows never stage again (they keep
+        # stepping as wasted_slot_steps so the slot-step identity holds
+        # per shard); their requests drain onto the survivors.
+        self.dead_shards: set = set()
         self._next_rid = 0
         # host mirrors of slot occupancy: the request currently armed in
         # each row, and the request parked in each row's staging buffer
@@ -310,6 +329,27 @@ class ServingEngine:
 
         # one compiled superstep program per (block size, drafting on)
         self._superstep_fns: Dict[Any, Any] = {}
+
+        # crash recovery (serving/recovery.py): with ``recover_dir`` set
+        # the engine journals every submit/cancel/step to a write-ahead
+        # log and snapshots its full serving state every
+        # ``snapshot_every`` device rounds, so ``ServingEngine.restore``
+        # on a fresh process resumes bit-identically.  Constructing with
+        # recover_dir starts a NEW journal epoch (truncating any prior
+        # one) -- resuming goes through ``restore``, never through a
+        # fresh construction.  None keeps the engine journal-free.
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.snapshot_keep = max(1, int(snapshot_keep))
+        self.recover_dir = recover_dir
+        self._last_snapshot_round = 0
+        self.journal = None
+        self.recovery_report: Optional[Dict[str, Any]] = None
+        if recover_dir is not None:
+            from repro.serving import recovery
+            os.makedirs(recover_dir, exist_ok=True)
+            self.journal = recovery.Journal.create(
+                os.path.join(recover_dir, recovery.JOURNAL_NAME),
+                recovery.engine_header(self))
 
     # ------------------------------------------------------------------
     # Submission + admission control
@@ -341,11 +381,19 @@ class ServingEngine:
         free machinery.  Queued + staged work ahead of it is placed
         greedily on the earliest-freeing rows; this is an estimate (EDF
         reordering and speculative multi-emit shift it), used only to
-        shed requests whose deadline even the estimate cannot meet."""
-        etas = [self._row_eta(s) for s in range(self.max_batch)]
-        for slot, parked in enumerate(self.staged):
+        shed requests whose deadline even the estimate cannot meet.
+        Rows on a crashed data shard never free up and are excluded --
+        a dead row's eta of 0 would otherwise absorb the whole queue and
+        the shedder would admit work the survivors cannot serve."""
+        live = [s for s in range(self.max_batch)
+                if s // self._rows_per_shard not in self.dead_shards]
+        if not live:
+            return 1 << 62      # total outage: nothing can ever finish
+        etas = [self._row_eta(s) for s in live]
+        for i, slot in enumerate(live):
+            parked = self.staged[slot]
             if parked is not None:
-                etas[slot] += self._service_rounds(parked)
+                etas[i] += self._service_rounds(parked)
         heapq.heapify(etas)
         for ahead in self.scheduler.waiting:
             heapq.heappush(etas,
@@ -384,9 +432,22 @@ class ServingEngine:
             raise ValueError(f"deadline must be a positive device-round "
                              f"budget, got {deadline!r}")
         rid = self._next_rid
+        if self.journal is not None:
+            # write-ahead: the record is durable BEFORE the engine
+            # mutates, and can promise the rid because rid assignment is
+            # deterministic
+            self.journal.record_submit({
+                "rid": rid, "round": self.stats.decode_steps,
+                "prompt": [int(t) for t in prompt],
+                "max_new": int(max_new),
+                "temperature": float(temperature), "top_k": int(top_k),
+                "top_p": float(top_p),
+                "eos": None if eos is None else int(eos),
+                "priority": int(priority),
+                "deadline": None if deadline is None else int(deadline)})
         self._next_rid += 1
-        req = Request(rid, list(prompt), max_new, temperature, top_k,
-                      top_p, eos, priority=priority)
+        req = Request(rid, [int(t) for t in prompt], max_new, temperature,
+                      top_k, top_p, eos, priority=priority)
         req.submitted_s = time.perf_counter()
         req.submit_round = self.stats.decode_steps
         if deadline is not None:
@@ -411,6 +472,11 @@ class ServingEngine:
         already drained (partial output).  Returns True if the request
         transitioned to CANCELLED, False if it is unknown or already
         terminal."""
+        if self.journal is not None:
+            # journaled even when a no-op: replay re-executes the same
+            # call and reaches the same verdict deterministically
+            self.journal.record_cancel({"rid": int(rid),
+                                        "round": self.stats.decode_steps})
         req = self.requests.get(rid)
         if req is None or req.done:
             return False
@@ -480,7 +546,9 @@ class ServingEngine:
         others catch up.  At ``data=1`` the shard load is one constant
         and this reduces exactly to the pre-mesh ``(eta, row)`` order.
         """
-        empty = [i for i in range(self.max_batch) if self.staged[i] is None]
+        empty = [i for i in range(self.max_batch)
+                 if self.staged[i] is None
+                 and i // self._rows_per_shard not in self.dead_shards]
         now = self.stats.decode_steps
         group = self.scheduler.take(len(empty), now_round=now)
         if not group and self.scheduler.waiting \
@@ -673,6 +741,70 @@ class ServingEngine:
             self.state = dict(self.state)
             self.state["cache"] = cache
 
+    def _requeue(self, req: Request, round_: int, *, count_retry: bool,
+                 backoff: bool) -> bool:
+        """Re-enqueue a request whose slot died under it, or retire it
+        if it cannot be retried.  The shared tail of quarantine (health-
+        guard kill: ``count_retry=True`` -- the row poisoning might be
+        the request's input, so it burns retry budget and backs off
+        exponentially) and DP-shard failover (``count_retry=False`` --
+        an infrastructure death is never the request's fault: no budget
+        burned, re-eligible immediately).  Returns True if the request
+        went back to QUEUED, False if it retired terminally."""
+        if req.deadline is not None and round_ >= req.deadline:
+            self._retire(req, TIMED_OUT)
+            return False
+        if count_retry and req.retries >= self.max_retries:
+            self._retire(req, FAILED)
+            return False
+        verdict = self.scheduler.submit(req, now_round=round_)
+        req.verdict = verdict
+        if verdict != ADMITTED:
+            self._retire(req, FAILED)   # no queue room for the retry
+            return False
+        if count_retry:
+            req.retries += 1
+            self.stats.retried += 1
+        req.out = []        # the retry restarts the stream from scratch
+        req.status = QUEUED
+        req.not_before = round_ + (
+            self.retry_backoff * (2 ** (req.retries - 1))
+            if backoff else 0)
+        self.stats.observe_queue(len(self.scheduler))
+        return True
+
+    def _crash_shard(self, shard: int, round_: int):
+        """DP-shard failover (the ``shard_crash`` injection point fired):
+        mark ``shard``'s slot rows permanently dead and drain its parked
+        + in-flight requests back through the requeue path onto the
+        surviving shards.  The dead rows stay in the dense batch --
+        stepping as ``wasted_slot_steps``, so the per-shard slot-step
+        identity keeps holding -- but never stage again.  A drained
+        request restarts its stream from the prompt on a survivor
+        (greedy output is placement-independent, so the re-served stream
+        is identical to its no-crash stream); failover does not burn the
+        request's retry budget."""
+        self.dead_shards.add(shard)
+        self.stats.shard_crashes += 1
+        rows = serve_mesh.shard_rows(shard, self._rows_per_shard)
+        self.state = dict(self.state)
+        self.state["alive"] = self.state["alive"].at[
+            jnp.asarray(list(rows))].set(False)
+        for slot in rows:
+            parked = self.staged[slot]
+            if parked is not None:
+                self._unstage(slot)
+                if self._requeue(parked, round_, count_retry=False,
+                                 backoff=False):
+                    self.stats.failover_requeued += 1
+            req = self.current[slot]
+            if req is not None and not req.done:
+                self.current[slot] = None
+                req.slot = None
+                if self._requeue(req, round_, count_retry=False,
+                                 backoff=False):
+                    self.stats.failover_requeued += 1
+
     def _quarantine(self, slot: int, round_: int, s_valid_np, dirty):
         """The superstep's health guard killed this row at ``round_``:
         attribute the kill to the occupying request and re-enqueue it
@@ -693,24 +825,7 @@ class ServingEngine:
                 return
         self.current[slot] = None
         req.slot = None
-        if req.deadline is not None and round_ >= req.deadline:
-            self._retire(req, TIMED_OUT)
-            return
-        if req.retries >= self.max_retries:
-            self._retire(req, FAILED)
-            return
-        verdict = self.scheduler.submit(req, now_round=round_)
-        req.verdict = verdict
-        if verdict != ADMITTED:
-            self._retire(req, FAILED)   # no queue room for the retry
-            return
-        req.retries += 1
-        req.out = []        # the retry restarts the stream from scratch
-        req.status = QUEUED
-        req.not_before = round_ + self.retry_backoff * (
-            2 ** (req.retries - 1))
-        self.stats.retried += 1
-        self.stats.observe_queue(len(self.scheduler))
+        self._requeue(req, round_, count_retry=True, backoff=True)
 
     def _adapt_speculation(self, counters):
         """Rolling accept-rate floor: when a window of verify rounds
@@ -757,8 +872,20 @@ class ServingEngine:
         k = max(1, int(n_tokens)) if n_tokens is not None \
             else self.decode_block
         self._sweep_deadlines()
+        if self.faults is not None:
+            for s in self.faults.shard_crash(self.stats.decode_steps, k,
+                                             self.dp):
+                if s not in self.dead_shards:
+                    self._crash_shard(s, self.stats.decode_steps)
         self._stage()
         if not any(self.current) and not any(self.staged):
+            if self.journal is not None:
+                # every step() call is journaled, no-ops included: the
+                # replay must re-execute the exact call sequence
+                self.journal.record_step({
+                    "round": self.stats.decode_steps, "k": k,
+                    "noop": True})
+                self._maybe_snapshot()
             return len(self.scheduler)
         self._upload_staging()
         if self.faults is not None:
@@ -812,6 +939,7 @@ class ServingEngine:
         dirty = set(self._dirty_slots)
         drained = 0
         drained_shard = [0] * self.dp
+        emits: List[List[int]] = []     # (rid, token) in drain order
         for slot in range(self.max_batch):
             shard = slot // self._rows_per_shard
             for j in range(k):
@@ -835,6 +963,7 @@ class ServingEngine:
                             base_round + j + 1 - req.submit_round)
                         self.stats.shards[shard].first_tokens += 1
                     req.out.append(t)
+                    emits.append([rid, t])
                     drained += 1
                     drained_shard[shard] += 1
                     if (req.eos is not None and t == req.eos) or \
@@ -863,9 +992,55 @@ class ServingEngine:
         for slot in dirty:
             if self.staged[slot] is not None:
                 self._smirror["s_valid"][slot] = True
+        if self.journal is not None:
+            # the step record lands AFTER the superstep drains: crashing
+            # mid-step replays the whole step (the journal never saw it)
+            self.journal.record_step({"round": base_round, "k": k,
+                                      "emits": emits,
+                                      "digest": self._journal_digest()})
+            self._maybe_snapshot()
         return (sum(r is not None for r in self.current)
                 + sum(r is not None for r in self.staged)
                 + len(self.scheduler))
+
+    def _journal_digest(self) -> Dict[str, int]:
+        """Round-clock stats fingerprint written with every step record;
+        a replayed step must reproduce it exactly (wall-clock latency
+        fields are deliberately absent -- they span processes)."""
+        st = self.stats
+        return {"round": st.decode_steps, "completed": st.completed,
+                "cancelled": st.cancelled, "timed_out": st.timed_out,
+                "failed": st.failed, "quarantined": st.quarantined,
+                "decode_tokens": st.decode_tokens,
+                "shard_crashes": st.shard_crashes}
+
+    def _maybe_snapshot(self):
+        """Snapshot the full serving state every ``snapshot_every``
+        device rounds (suppressed while replaying a journal tail --
+        replay re-executes past work, it does not re-persist it)."""
+        if self.recover_dir is None or self.journal.replaying:
+            return
+        if self.stats.decode_steps - self._last_snapshot_round \
+                < self.snapshot_every:
+            return
+        from repro.serving import recovery
+        recovery.save_snapshot(self, self.recover_dir,
+                               keep=self.snapshot_keep)
+        self._last_snapshot_round = self.stats.decode_steps
+
+    @classmethod
+    def restore(cls, recover_dir: str, cfg, params, *, speculative=None,
+                draft_params=None) -> "ServingEngine":
+        """Rebuild an engine from a crash-recovery directory on a fresh
+        process: newest good snapshot + journal-tail replay (see
+        ``serving.recovery.restore_engine``).  The returned engine's
+        streams are bit-identical to an uninterrupted run and it keeps
+        journaling + snapshotting where the dead process stopped;
+        ``engine.recovery_report`` says what recovery did."""
+        from repro.serving import recovery
+        return recovery.restore_engine(recover_dir, cfg, params,
+                                       speculative=speculative,
+                                       draft_params=draft_params)
 
     # ------------------------------------------------------------------
     def occupancy_report(self) -> Dict[str, Any]:
@@ -891,6 +1066,7 @@ class ServingEngine:
             "queued": [r.rid for r in self.scheduler.waiting],
             "in_flight": sum(r is not None for r in self.current),
             "staged": sum(r is not None for r in self.staged),
+            "dead_shards": sorted(self.dead_shards),
             "slots": slots,
         }
 
@@ -919,7 +1095,8 @@ class ServingEngine:
 
 
 def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
-                 submit, max_steps: int = 100_000) -> None:
+                 submit, max_steps: int = 100_000, start: int = 0,
+                 stop=None) -> int:
     """Drive ``engine`` over an arrival trace until every request
     reaches a terminal status.  The arrival clock is the engine's
     device-round counter: request ``i`` is submitted via
@@ -930,8 +1107,18 @@ def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
     shed / failed / timed-out requests under fault injection or
     overload cannot hang the replay.  Shared by the arrival-trace
     bench, the serving example and the scheduler property tests so the
-    replay semantics live in one place."""
-    i, steps = 0, 0
+    replay semantics live in one place.
+
+    Crash-recovery hooks: ``start`` says how many leading trace entries
+    were already submitted (continue a restored engine with
+    ``start=len(engine.requests)`` -- the count includes shed requests,
+    exactly the submit calls already journaled), and ``stop(engine)``
+    is checked after every step -- returning True abandons the drive
+    mid-trace (the ``--crash`` bench's kill switch).  Returns how many
+    trace entries have been submitted.  Because submission is driven by
+    the round clock and terminal counts only, a continued drive makes
+    the same submit-round decisions an uninterrupted one would."""
+    i, steps = start, 0
     while i < len(trace) or len(engine.finished) < i:
         due = i < len(trace) and \
             trace[i]["arrival"] <= engine.stats.decode_steps
@@ -944,11 +1131,14 @@ def replay_trace(engine: ServingEngine, trace: List[Dict[str, Any]],
             idle = False
         engine.step()
         steps += 1
+        if stop is not None and stop(engine):
+            return i
         if steps >= max_steps:
             raise RuntimeError(
                 f"arrival trace did not drain within {max_steps} steps "
                 f"({len(engine.finished)}/{i} submitted requests "
                 f"terminal)")
+    return i
 
 
 @functools.lru_cache(maxsize=32)

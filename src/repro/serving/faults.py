@@ -25,6 +25,12 @@ injection points:
   * ``straggler`` -- after the superstep returns, the engine stalls for
     ``straggler_s`` wall seconds, modelling a slow device round (shows
     up in wall-clock latency stats, never in round-clock counters).
+  * ``shard_crash`` -- before staging, kills a whole data shard of the
+    slot pool at a scheduled device round (``shard_crash_at``): the
+    engine marks the shard's rows permanently dead, drains its staged +
+    in-flight requests back through the requeue path onto the surviving
+    shards and serves degraded on the smaller pool (DP-shard failover;
+    see README "Failure model" / "Crash recovery").
 
 Determinism: each injection point owns an independent
 ``numpy.random.Generator`` seeded from ``seed``, and every call draws a
@@ -46,7 +52,10 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-INJECTION_POINTS = ("corrupt_state", "drop_upload", "straggler")
+INJECTION_POINTS = ("corrupt_state", "drop_upload", "straggler",
+                    "shard_crash")
+
+_RATE_FIELDS = ("nan_rate", "drop_rate", "straggler_rate")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +66,12 @@ class FaultConfig:
     ``drop_rate`` per dirty staging slot per upload, ``straggler_rate``
     per host round-trip.  ``nan_at`` adds explicit (device round, slot)
     corruptions on top of the random draws (the deterministic handle the
-    unit tests use).
+    unit tests use).  ``shard_crash_at`` is an explicit (device round,
+    data shard) kill schedule: the engine drains the dead shard's
+    requests onto the survivors and serves degraded (DP-shard failover
+    -- a crash is a scheduled event, not a rate, so recovery replays are
+    exact).  Rates outside [0, 1] are rejected at construction: a typo'd
+    ``nan_rate=10`` would otherwise silently behave as rate 1.0.
     """
     seed: int = 0
     nan_rate: float = 0.0
@@ -65,6 +79,19 @@ class FaultConfig:
     straggler_rate: float = 0.0
     straggler_s: float = 0.001
     nan_at: Tuple[Tuple[int, int], ...] = ()
+    shard_crash_at: Tuple[Tuple[int, int], ...] = ()
+
+    def __post_init__(self):
+        for name in _RATE_FIELDS:
+            v = getattr(self, name)
+            if not 0.0 <= float(v) <= 1.0:
+                raise ValueError(
+                    f"{name} is a probability and must be in [0, 1], "
+                    f"got {v!r}")
+        if self.straggler_s < 0.0:
+            raise ValueError(
+                f"straggler_s must be >= 0 seconds, got "
+                f"{self.straggler_s!r}")
 
 
 class FaultInjector:
@@ -77,6 +104,7 @@ class FaultInjector:
         self._rng = {p: np.random.default_rng(cfg.seed * 7919 + i)
                      for i, p in enumerate(INJECTION_POINTS)}
         self.events: List[Tuple[str, int, int]] = []
+        self._crashed_shards: set = set()
 
     # -- named injection points ---------------------------------------
     def corrupt_state(self, base_round: int, k: int,
@@ -114,9 +142,48 @@ class FaultInjector:
             return self.cfg.straggler_s
         return 0.0
 
+    def shard_crash(self, base_round: int, k: int,
+                    n_shards: int) -> List[int]:
+        """Data shards scheduled to die during the superstep covering
+        rounds ``[base_round, base_round + k)`` (each shard fires at
+        most once per injector lifetime -- a dead shard stays dead).
+        Schedule-only by design: a crash is the one fault whose recovery
+        path must replay exactly, so it is pinned to a device round
+        rather than drawn from a rate."""
+        hits = {shard for r, shard in self.cfg.shard_crash_at
+                if base_round <= r < base_round + k
+                and 0 <= shard < n_shards} - self._crashed_shards
+        shards = sorted(hits)
+        self._crashed_shards |= hits
+        self.events.extend(("shard_crash", base_round, s) for s in shards)
+        return shards
+
     # -- reporting ----------------------------------------------------
     def counts(self) -> dict:
+        """Injected-event count per injection point (every point keyed,
+        including zero-count ones, so dashboards diff cleanly)."""
         out = {p: 0 for p in INJECTION_POINTS}
         for kind, _, _ in self.events:
             out[kind] += 1
         return out
+
+    # -- snapshot support (serving/recovery.py) -----------------------
+    def state_dict(self) -> dict:
+        """JSON-able mid-trace state: per-point RNG generator states,
+        the event log and the fired shard-crash set.  Restoring this
+        into a fresh injector (same :class:`FaultConfig`) makes the
+        remaining fault schedule identical to the uninterrupted run --
+        the property journal-tail replay needs."""
+        return {
+            "rng": {p: g.bit_generator.state
+                    for p, g in self._rng.items()},
+            "events": [list(e) for e in self.events],
+            "crashed_shards": sorted(self._crashed_shards),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        for p, s in state.get("rng", {}).items():
+            if p in self._rng:
+                self._rng[p].bit_generator.state = s
+        self.events = [tuple(e) for e in state.get("events", [])]
+        self._crashed_shards = set(state.get("crashed_shards", []))

@@ -149,6 +149,26 @@ class AdmissionScheduler:
             self._order.pop(id(req), None)
         return group
 
+    # -- snapshot support (serving/recovery.py) -----------------------
+    def state_dict(self) -> dict:
+        """JSON-able queue state: waiting requests as ``[rid, seq]``
+        pairs in queue order plus the submission-sequence counter and
+        the saturation latch.  Requests themselves are engine-owned and
+        serialized by the engine snapshot; this captures only what the
+        scheduler adds on top (ordering + hysteresis)."""
+        return {"waiting": [[r.rid, self._order[id(r)]]
+                            for r in self.waiting],
+                "seq": self._seq, "saturated": self._saturated}
+
+    def load_state_dict(self, state: dict, requests) -> None:
+        """Rebuild the queue from :meth:`state_dict` output;
+        ``requests`` maps rid -> the restored Request object."""
+        self.waiting = [requests[rid] for rid, _ in state["waiting"]]
+        self._order = {id(requests[rid]): int(seq)
+                       for rid, seq in state["waiting"]}
+        self._seq = int(state["seq"])
+        self._saturated = bool(state["saturated"])
+
 
 # Degenerate configuration of AdmissionScheduler (unbounded queue, one
 # priority class, no deadlines) == the original strict-FIFO scheduler.
@@ -247,6 +267,15 @@ class EngineStats:
     == completed + cancelled + timed_out + failed + shed + rejected``
     once the engine drains (retries move a request back to the queue,
     they are not terminal).
+
+    DP-shard failover: ``shard_crashes`` counts data shards the
+    ``shard_crash`` chaos point killed and ``failover_requeued`` the
+    staged/in-flight requests drained off dead shards back onto the
+    survivors (a failover requeue restarts the stream like a quarantine
+    retry but burns no retry budget -- the crash is not the request's
+    fault).  A dead shard's rows keep stepping as ``wasted_slot_steps``
+    on its own :class:`ShardStats`, so the per-shard identity holds
+    through a crash.
     """
     prompt_chunk: int = 1
     submitted: int = 0
@@ -273,6 +302,9 @@ class EngineStats:
     quarantined: int = 0
     nonfinite_decode_rounds: int = 0
     spec_disabled: int = 0
+    # DP-shard failover (serving/recovery.py + faults.shard_crash)
+    shard_crashes: int = 0
+    failover_requeued: int = 0
     decode_time_s: float = 0.0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     ttft_rounds: List[int] = dataclasses.field(default_factory=list)

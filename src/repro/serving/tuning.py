@@ -24,9 +24,12 @@ Regenerate with ``make bench-autotune`` (see README "Autotuning").
 from __future__ import annotations
 
 import json
+import logging
 import os
 from pathlib import Path
 from typing import Optional, Union
+
+log = logging.getLogger("repro.tuning")
 
 # src/repro/serving/tuning.py -> repo root
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -88,6 +91,12 @@ def resolve_plan(cfg, tune) -> Optional[dict]:
                 if plan_matches(plan, cfg):
                     plan.setdefault("source", str(p))
                     return plan
+                # a stale/foreign plan on the discovery path is easy to
+                # serve past silently -- name the file and the mismatch
+                log.warning(
+                    "tune plan %s skipped: recorded config %s does not "
+                    "match engine config %s", p, plan.get("config"),
+                    config_stamp(cfg))
         return None
     plan = load_plan(tune)
     if not plan_matches(plan, cfg):

@@ -21,6 +21,7 @@ unverified for compatibility.
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import logging
@@ -37,12 +38,17 @@ class CheckpointCorruptError(RuntimeError):
     """arrays.npz does not match the manifest checksum (or is missing)."""
 
 
-def _sha256(path: str) -> str:
+def sha256_file(path: str) -> str:
+    """Streaming SHA-256 of a file's content (the integrity primitive
+    shared with the serving snapshot codec, ``serving/recovery.py``)."""
     h = hashlib.sha256()
     with open(path, "rb") as f:
         for chunk in iter(lambda: f.read(1 << 20), b""):
             h.update(chunk)
     return h.hexdigest()
+
+
+_sha256 = sha256_file
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +57,9 @@ import numpy as np
 SEP = "|"
 
 
-def _flatten(tree, prefix: str) -> Dict[str, np.ndarray]:
+def flatten_tree(tree, prefix: str) -> Dict[str, np.ndarray]:
+    """Flatten a pytree to host-numpy entries keyed by ``SEP``-joined
+    path strings under ``prefix`` -- restore needs no pickled treedef."""
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = prefix + SEP + SEP.join(
@@ -60,7 +68,7 @@ def _flatten(tree, prefix: str) -> Dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten(flat: Dict[str, np.ndarray], prefix: str):
+def unflatten_tree(flat: Dict[str, np.ndarray], prefix: str):
     """Rebuild a nested dict tree from path keys."""
     root: Dict[str, Any] = {}
     pl = prefix + SEP
@@ -75,26 +83,14 @@ def _unflatten(flat: Dict[str, np.ndarray], prefix: str):
     return root
 
 
-def save(directory: str, step: int, params, opt_state=None,
-         extra: Optional[Dict[str, Any]] = None) -> str:
-    """Atomic checkpoint write.  Returns the final path."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
+_flatten = flatten_tree
+_unflatten = unflatten_tree
 
-    arrays = _flatten(params, "params")
-    manifest = {"step": step, "time": time.time(), "extra": extra or {}}
-    if opt_state is not None:
-        arrays.update(_flatten(opt_state.mu, "mu"))
-        arrays.update(_flatten(opt_state.nu, "nu"))
-        arrays["opt_step"] = np.asarray(jax.device_get(opt_state.step))
-        manifest["has_opt"] = True
-    # dtype map (npz keeps dtypes, but bf16 round-trips via view)
-    dtypes = {}
-    packed = {}
+
+def pack_arrays(arrays: Dict[str, np.ndarray]):
+    """npz-safe packing: bf16 leaves round-trip via a uint16 view.
+    Returns ``(packed, dtypes)`` where ``dtypes`` goes in the manifest."""
+    dtypes, packed = {}, {}
     for k, v in arrays.items():
         if v.dtype == jnp.bfloat16:
             packed[k] = v.view(np.uint16)
@@ -102,15 +98,57 @@ def save(directory: str, step: int, params, opt_state=None,
         else:
             packed[k] = v
             dtypes[k] = str(v.dtype)
-    manifest["dtypes"] = dtypes
-    np.savez(os.path.join(tmp, "arrays.npz"), **packed)
-    manifest["checksum"] = "sha256:" + _sha256(
-        os.path.join(tmp, "arrays.npz"))
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    return packed, dtypes
+
+
+def unpack_arrays(raw, dtypes: Dict[str, str]) -> Dict[str, np.ndarray]:
+    """Inverse of :func:`pack_arrays` over a loaded npz."""
+    out = {}
+    for k in raw.files:
+        v = raw[k]
+        if dtypes.get(k) == "bfloat16":
+            v = v.view(jnp.bfloat16)
+        out[k] = v
+    return out
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str):
+    """Yield a tmp directory that atomically replaces ``final`` when the
+    block completes -- a crash mid-write never corrupts the previous
+    good generation (checkpoints and serving snapshots share this)."""
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    yield tmp
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+
+
+def save(directory: str, step: int, params, opt_state=None,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic checkpoint write.  Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+
+    arrays = flatten_tree(params, "params")
+    manifest = {"step": step, "time": time.time(), "extra": extra or {}}
+    if opt_state is not None:
+        arrays.update(flatten_tree(opt_state.mu, "mu"))
+        arrays.update(flatten_tree(opt_state.nu, "nu"))
+        arrays["opt_step"] = np.asarray(jax.device_get(opt_state.step))
+        manifest["has_opt"] = True
+    # dtype map (npz keeps dtypes, but bf16 round-trips via view)
+    packed, dtypes = pack_arrays(arrays)
+    manifest["dtypes"] = dtypes
+    with atomic_dir(final) as tmp:
+        np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+        manifest["checksum"] = "sha256:" + sha256_file(
+            os.path.join(tmp, "arrays.npz"))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
     return final
 
 
@@ -137,19 +175,13 @@ def _load_arrays(path: str) -> Dict[str, np.ndarray]:
         manifest = json.load(f)
     recorded = manifest.get("checksum")
     if recorded is not None:
-        actual = "sha256:" + _sha256(os.path.join(path, "arrays.npz"))
+        actual = "sha256:" + sha256_file(os.path.join(path, "arrays.npz"))
         if actual != recorded:
             raise CheckpointCorruptError(
                 f"{path}: arrays.npz hash {actual} != manifest "
                 f"{recorded}")
     raw = np.load(os.path.join(path, "arrays.npz"))
-    out = {}
-    for k in raw.files:
-        v = raw[k]
-        if manifest["dtypes"].get(k) == "bfloat16":
-            v = v.view(jnp.bfloat16)
-        out[k] = v
-    return out, manifest
+    return unpack_arrays(raw, manifest["dtypes"]), manifest
 
 
 def restore(path: str, *, shardings=None, opt_shardings=None):

@@ -20,7 +20,8 @@ from repro.models import lm
 from repro.serving.engine import (
     CANCELLED, COMPLETED, FAILED, SHED, TERMINAL_STATUSES, TIMED_OUT,
     EngineStallError, ServingEngine, generate_one)
-from repro.serving.faults import FaultConfig, FaultInjector
+from repro.serving.faults import (
+    INJECTION_POINTS, FaultConfig, FaultInjector)
 from repro.serving.scheduler import (
     ADMITTED, REJECTED_QUEUE_FULL, SHED_UNMEETABLE_DEADLINE)
 
@@ -85,6 +86,53 @@ def test_injector_zero_rates_inject_nothing():
     assert inj.events == []
     with pytest.raises(ValueError):
         FaultInjector(FaultConfig(seed=0), nan_rate=0.5)
+
+
+def test_fault_config_rejects_out_of_range_rates():
+    """A typo'd rate (nan_rate=10) must fail loudly at construction,
+    not silently saturate at probability 1."""
+    for kw in (dict(nan_rate=1.5), dict(drop_rate=-0.1),
+               dict(straggler_rate=2.0), dict(straggler_s=-1.0)):
+        with pytest.raises(ValueError):
+            FaultConfig(**kw)
+    FaultConfig(nan_rate=0.0, drop_rate=1.0)     # the boundaries are legal
+
+
+def test_counts_keys_every_injection_point():
+    counts = FaultInjector(seed=0).counts()
+    assert set(counts) == set(INJECTION_POINTS)
+    assert counts["shard_crash"] == 0
+
+
+def test_shard_crash_schedule_fires_once_per_shard():
+    inj = FaultInjector(shard_crash_at=((5, 1), (5, 9), (11, 0)))
+    assert inj.shard_crash(0, 4, 2) == []      # rounds [0, 4): nothing
+    assert inj.shard_crash(4, 4, 2) == [1]     # round 5 in [4, 8)
+    assert inj.shard_crash(4, 4, 2) == []      # a dead shard stays dead
+    assert inj.shard_crash(8, 4, 2) == [0]     # shard 9 out of range
+    assert inj.counts()["shard_crash"] == 2
+
+
+def test_injector_state_dict_resumes_schedule():
+    """Restoring a snapshotted injector into a fresh one makes the
+    remaining fault schedule identical to the uninterrupted run -- the
+    property journal-tail replay relies on."""
+    kw = dict(seed=9, nan_rate=0.2, drop_rate=0.3, straggler_rate=0.5)
+    a = FaultInjector(**kw)
+    for call in range(5):
+        a.corrupt_state(call * 4, 4, 8)
+        a.drop_upload(call, [0, 1, 2])
+        a.straggler(call)
+    state = a.state_dict()
+    b = FaultInjector(**kw)
+    b.load_state_dict(state)
+    for call in range(5, 10):
+        assert a.corrupt_state(call * 4, 4, 8) == \
+            b.corrupt_state(call * 4, 4, 8)
+        assert a.drop_upload(call, [0, 1, 2]) == \
+            b.drop_upload(call, [0, 1, 2])
+        assert a.straggler(call) == b.straggler(call)
+    assert a.events == b.events
 
 
 def test_explicit_nan_schedule_targets_round_window():
